@@ -1,0 +1,44 @@
+"""Figure 2 reproduction: per-query index blocks accessed (u), sorted
+independently per treatment, CAT2 weighted set — learned policy vs
+production baseline.  Emits an ASCII plot + CSV (no display in the
+container; the paper redacts absolute y values, we print ours)."""
+from __future__ import annotations
+
+import json
+from pathlib import Path
+
+import numpy as np
+
+
+def ascii_curve(base: np.ndarray, pol: np.ndarray, width: int = 72, height: int = 16) -> str:
+    base = np.sort(base)
+    pol = np.sort(pol)
+    hi = max(base.max(), pol.max()) * 1.05
+    grid = [[" "] * width for _ in range(height)]
+    for series, ch in ((base, "b"), (pol, "p")):
+        xs = np.linspace(0, len(series) - 1, width).astype(int)
+        for col, xi in enumerate(xs):
+            row = height - 1 - int(series[xi] / hi * (height - 1))
+            grid[row][col] = "x" if grid[row][col] == ch else ch
+    lines = ["".join(r) for r in grid]
+    lines.append("-" * width)
+    lines.append("queries sorted by u per treatment;  b=baseline  p=policy  x=overlap")
+    return "\n".join(lines)
+
+
+def main(per_query_path: str = "results/table1_perquery.json",
+         out: str = "results/figure2.txt"):
+    data = json.loads(Path(per_query_path).read_text())
+    key = "CAT2_weighted" if "CAT2_weighted" in data else sorted(data)[0]
+    base = np.asarray(data[key]["baseline_u"], float)
+    pol = np.asarray(data[key]["policy_u"], float)
+    txt = ascii_curve(base, pol)
+    txt += (f"\nmean u: baseline={base.mean():.1f} policy={pol.mean():.1f} "
+            f"({(pol.mean()-base.mean())/base.mean()*100:+.1f}%)  [{key}]")
+    Path(out).parent.mkdir(parents=True, exist_ok=True)
+    Path(out).write_text(txt)
+    print(txt)
+
+
+if __name__ == "__main__":
+    main()

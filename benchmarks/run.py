@@ -1,0 +1,81 @@
+"""Benchmark entry point — one section per paper table/figure plus the
+framework's own perf surfaces.  Prints ``name,us_per_call,derived`` CSV
+(plus the Table-1/Figure-2 summaries).
+
+    PYTHONPATH=src python -m benchmarks.run             # fast set
+    PYTHONPATH=src python -m benchmarks.run --full      # + Table 1 retrain
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import time
+from pathlib import Path
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true",
+                    help="retrain policies for Table 1 (slower)")
+    args = ap.parse_args()
+
+    print("== kernel microbenchmarks ==")
+    from benchmarks import kernel_bench
+    kernel_bench.main()
+
+    print("\n== match-plan executor ==")
+    import jax
+    import numpy as np
+
+    from repro.index.corpus import CorpusConfig
+    from repro.data.querylog import QueryLogConfig
+    from repro.system import RetrievalSystem, SystemConfig
+
+    sys_ = RetrievalSystem(SystemConfig(
+        corpus=CorpusConfig(n_docs=4096, vocab_size=1024, seed=1),
+        querylog=QueryLogConfig(n_queries=256, seed=1),
+        block_docs=256, p_bins=256, l1_steps=50,
+    ))
+    qids = np.arange(64)
+    occ, scores, tp = sys_.batch_inputs(qids)
+    from repro.core.match_plan import batched_run_plan
+    plan = sys_.plans["CAT2"]
+    fn = lambda: jax.block_until_ready(
+        batched_run_plan(sys_.env_cfg, sys_.ruleset, plan, occ, scores, tp)[0].u)
+    fn()
+    t0 = time.time()
+    for _ in range(5):
+        fn()
+    us = (time.time() - t0) / 5 * 1e6
+    print(f"plan_executor_64q_4096d,{us:.0f},{us/64:.0f}us_per_query_host")
+
+    # Table 1 / Figure 2
+    if args.full:
+        print("\n== Table 1 (retraining policies) ==")
+        from benchmarks import table1
+        table1.main("small")
+        print("\n== Figure 2 ==")
+        from benchmarks import figure2
+        figure2.main()
+    else:
+        p = Path("results/table1.json")
+        if p.exists():
+            print("\n== Table 1 (cached results/table1.json) ==")
+            for r in json.loads(p.read_text())["rows"]:
+                print(r)
+        else:
+            print("\n(Table 1: run with --full or `python -m benchmarks.table1`)")
+
+    # Roofline summary from the dry-run
+    rp = Path("results/roofline.json")
+    if rp.exists():
+        print("\n== roofline (from dry-run; see EXPERIMENTS.md §Roofline) ==")
+        rows = json.loads(rp.read_text())
+        for r in rows:
+            print(f"{r['arch']},{r['shape']},bound={r['bound']},"
+                  f"compute_s={r['compute_s']:.3e},memory_s={r['memory_s']:.3e},"
+                  f"collective_s={r['collective_s']:.3e}")
+
+
+if __name__ == "__main__":
+    main()

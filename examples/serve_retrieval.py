@@ -1,0 +1,15 @@
+"""Serve batched queries through the full telescope: L0 learned policy
+→ L1 prune → ranked results, with block-accounting per query.
+
+    PYTHONPATH=src python examples/serve_retrieval.py
+"""
+import subprocess
+import sys
+
+# The serving driver is a first-class launcher; this example just runs a
+# small configuration of it.
+subprocess.run([
+    sys.executable, "-m", "repro.launch.serve",
+    "--n-docs", "4096", "--n-queries", "400",
+    "--batch", "32", "--batches", "2", "--iters", "60",
+], check=True, env={"PYTHONPATH": "src", "PATH": "/usr/bin:/bin"})

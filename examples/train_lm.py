@@ -1,0 +1,14 @@
+"""Train a reduced LM (same code path the dry-run lowers at 12B-314B
+scale) for a few hundred steps on CPU, with an injected mid-run failure
+to demonstrate checkpoint/restart.
+
+    PYTHONPATH=src python examples/train_lm.py
+"""
+import subprocess
+import sys
+
+subprocess.run([
+    sys.executable, "-m", "repro.launch.train", "lm",
+    "--arch", "starcoder2-3b", "--steps", "60", "--inject-failure",
+    "--ckpt-dir", "results/ckpt_lm_example",
+], check=True, env={"PYTHONPATH": "src", "PATH": "/usr/bin:/bin"})

@@ -1,0 +1,29 @@
+"""Train the paper's RL match-planning policy end to end and reproduce
+the Table-1-style result (blocks accessed down, NCG ~flat).
+
+    PYTHONPATH=src python examples/train_policy.py
+"""
+import numpy as np
+
+from repro.data.querylog import CAT1, CAT2, QueryLogConfig
+from repro.index.corpus import CorpusConfig
+from repro.ranking.metrics import relative_delta
+from repro.system import RetrievalSystem, SystemConfig
+
+sys_ = RetrievalSystem(SystemConfig(
+    corpus=CorpusConfig(n_docs=4096, vocab_size=2048, seed=0),
+    querylog=QueryLogConfig(n_queries=1000, seed=0),
+    block_docs=256, p_bins=1024, u_budget=1024, l1_steps=300,
+))
+print("L1 ranker ...")
+sys_.fit_l1(n_queries=128, batch=16)
+print("state bins (harvesting baseline (u,v) trajectories) ...")
+sys_.fit_state_bins(n_queries=96, batch=32)
+
+for cat, name in ((CAT2, "CAT2"), (CAT1, "CAT1")):
+    q, hist = sys_.train_policy(cat, iters=150, batch=48, log_every=30)
+    qids = np.where(sys_.log.category == cat)[0][:192]
+    res = sys_.evaluate(q, qids, cat)
+    print(f"[{name}] blocks accessed {relative_delta(res['policy_u'], res['baseline_u']):+.1f}%  "
+          f"NCG@100 {relative_delta(res['policy_ncg'], res['baseline_ncg']):+.1f}%  "
+          f"(paper: CAT2 −22.7%/+0.2%, CAT1 −17.5%/−1.8%)")

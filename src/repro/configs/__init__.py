@@ -1,0 +1,24 @@
+"""Arch registry: importing this package registers all configs."""
+from .base import ArchDef, ShapeSpec, get_arch, list_archs
+
+_LOADED = False
+
+
+def _load_all():
+    global _LOADED
+    if _LOADED:
+        return
+    _LOADED = True
+    from . import (  # noqa: F401
+        mistral_nemo_12b,
+        starcoder2_3b,
+        phi4_mini_3_8b,
+        deepseek_v2_lite_16b,
+        grok1_314b,
+        graphsage_reddit,
+        bert4rec,
+        wide_deep,
+        deepfm,
+        dcn_v2,
+        websearch_rl,
+    )

@@ -1,0 +1,51 @@
+"""Config surface: every assigned architecture is a selectable ArchDef
+(``--arch <id>``) carrying its exact published config, a reduced smoke
+variant, and its own input-shape set (the 40 dry-run cells).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, Optional, Tuple
+
+__all__ = ["ShapeSpec", "ArchDef", "register", "get_arch", "list_archs"]
+
+
+@dataclasses.dataclass(frozen=True)
+class ShapeSpec:
+    name: str
+    kind: str          # train | prefill | decode | serve | retrieval | train_graph ...
+    params: Dict[str, Any]
+    note: str = ""
+
+
+@dataclasses.dataclass
+class ArchDef:
+    arch_id: str
+    family: str                          # lm | gnn | recsys | websearch
+    source: str                          # [citation; verification tier]
+    model_cfg: Callable[[bool], Any]     # reduced -> config object
+    shapes: Dict[str, ShapeSpec]
+    notes: str = ""
+
+    def shape(self, name: str) -> ShapeSpec:
+        return self.shapes[name]
+
+
+_REGISTRY: Dict[str, ArchDef] = {}
+
+
+def register(arch: ArchDef) -> ArchDef:
+    _REGISTRY[arch.arch_id] = arch
+    return arch
+
+
+def get_arch(arch_id: str) -> ArchDef:
+    from . import _load_all
+    _load_all()
+    return _REGISTRY[arch_id]
+
+
+def list_archs():
+    from . import _load_all
+    _load_all()
+    return dict(_REGISTRY)

@@ -1,0 +1,230 @@
+"""The candidate-generation RL environment (paper §3–4).
+
+One environment instance scans ONE index shard for ONE query.  A step
+executes a single match rule until its stopping condition (Δu / Δv
+quota) fires — the granularity at which the paper records state and
+lets the agent act.  Batched over queries with ``vmap``; distributed
+over index shards with ``shard_map`` (each shard runs its own rule
+sequence, mirroring "the same policy is applied on every machine which
+may lead to executing different sequences of match rules").
+
+State per query:
+    block_ptr  next block to scan
+    u          cumulative (term,field)-plane block reads  (paper's u)
+    v          cumulative term matches among inspected docs (paper's v)
+    matched    bitmap of docs already selected (dedup across rules/resets)
+    cand       fixed-K candidate buffer (doc ids, -1 pad), static-rank order
+    cand_cnt   number of valid candidates
+    topn       running top-n L1 scores of selected docs (for Eq. 3)
+    done       terminal flag
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.index.blocks import WORD_BITS
+from .match_rules import RuleSet, block_cost, scan_block
+
+__all__ = ["EnvConfig", "EnvState", "env_reset", "env_step", "execute_rule", "batched_env_step"]
+
+
+@dataclasses.dataclass(frozen=True)
+class EnvConfig:
+    n_blocks: int                 # blocks in this index shard
+    block_docs: int               # docs per block
+    k_rules: int                  # rule library size; actions k=reset, k+1=stop
+    max_candidates: int = 512     # K
+    n_top: int = 5                # paper's n (reward top-n)
+    u_budget: int = 4096          # hard episode budget on u
+    no_progress_penalty: float = 0.01
+
+    @property
+    def words_per_block(self) -> int:
+        return self.block_docs // WORD_BITS
+
+    @property
+    def n_words_total(self) -> int:
+        return self.n_blocks * self.words_per_block
+
+    @property
+    def a_reset(self) -> int:
+        return self.k_rules
+
+    @property
+    def a_stop(self) -> int:
+        return self.k_rules + 1
+
+    @property
+    def n_actions(self) -> int:
+        return self.k_rules + 2
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass
+class EnvState:
+    block_ptr: jnp.ndarray   # () int32
+    u: jnp.ndarray           # () int32
+    v: jnp.ndarray           # () int32
+    matched: jnp.ndarray     # (n_words_total,) uint32
+    cand: jnp.ndarray        # (K,) int32
+    cand_cnt: jnp.ndarray    # () int32
+    topn: jnp.ndarray        # (n_top,) float32, sorted desc, -inf pad
+    done: jnp.ndarray        # () bool
+
+    def tree_flatten(self):
+        return (
+            (self.block_ptr, self.u, self.v, self.matched, self.cand,
+             self.cand_cnt, self.topn, self.done),
+            None,
+        )
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        return cls(*children)
+
+
+def env_reset(cfg: EnvConfig) -> EnvState:
+    return EnvState(
+        block_ptr=jnp.int32(0),
+        u=jnp.int32(0),
+        v=jnp.int32(0),
+        matched=jnp.zeros((cfg.n_words_total,), jnp.uint32),
+        cand=jnp.full((cfg.max_candidates,), -1, jnp.int32),
+        cand_cnt=jnp.int32(0),
+        topn=jnp.full((cfg.n_top,), -jnp.inf, jnp.float32),
+        done=jnp.bool_(False),
+    )
+
+
+def _unpack_words(words: jnp.ndarray) -> jnp.ndarray:
+    """(W,) uint32 -> (W*32,) bool, LSB-first (matches blocks.pack_bits)."""
+    shifts = jnp.arange(WORD_BITS, dtype=jnp.uint32)
+    bits = (words[:, None] >> shifts[None, :]) & jnp.uint32(1)
+    return bits.reshape(-1).astype(bool)
+
+
+def _scan_one_block(
+    cfg: EnvConfig,
+    occ: jnp.ndarray,          # (n_blocks, T, F, W) uint32
+    scores: jnp.ndarray,       # (n_docs_padded,) float32 — precomputed L1 scores
+    term_present: jnp.ndarray, # (T,) bool
+    allowed: jnp.ndarray,      # (T, F) bool
+    required: jnp.ndarray,     # (T,) bool
+    state: EnvState,
+) -> EnvState:
+    W, D = cfg.words_per_block, cfg.block_docs
+    bp = state.block_ptr
+    occ_block = lax.dynamic_index_in_dim(occ, bp, axis=0, keepdims=False)
+
+    match_words, v_inc = scan_block(occ_block, allowed, required, term_present)
+
+    # Dedup against docs already selected by earlier rules / passes.
+    old = lax.dynamic_slice(state.matched, (bp * W,), (W,))
+    new_words = match_words & ~old
+    matched = lax.dynamic_update_slice(state.matched, old | match_words, (bp * W,))
+
+    new_bits = _unpack_words(new_words)                       # (D,) bool
+    doc_ids = bp * D + jnp.arange(D, dtype=jnp.int32)
+
+    # Append new docs to the fixed-K buffer in scan (static-rank) order.
+    pos = state.cand_cnt + jnp.cumsum(new_bits.astype(jnp.int32)) - 1
+    write_pos = jnp.where(new_bits & (pos < cfg.max_candidates), pos, cfg.max_candidates)
+    cand = state.cand.at[write_pos].set(doc_ids, mode="drop")
+    n_new = jnp.sum(new_bits, dtype=jnp.int32)
+    cand_cnt = jnp.minimum(state.cand_cnt + n_new, cfg.max_candidates)
+
+    # Update running top-n L1 scores with the block's new docs.
+    block_scores = lax.dynamic_slice(scores, (bp * D,), (D,))
+    masked = jnp.where(new_bits, block_scores, -jnp.inf)
+    topn, _ = lax.top_k(jnp.concatenate([state.topn, masked]), cfg.n_top)
+
+    u_inc = block_cost(allowed, term_present)
+    return EnvState(
+        block_ptr=bp + 1,
+        u=state.u + u_inc,
+        v=state.v + v_inc,
+        matched=matched,
+        cand=cand,
+        cand_cnt=cand_cnt,
+        topn=topn,
+        done=state.done,
+    )
+
+
+def execute_rule(
+    cfg: EnvConfig,
+    occ: jnp.ndarray,
+    scores: jnp.ndarray,
+    term_present: jnp.ndarray,
+    state: EnvState,
+    allowed: jnp.ndarray,
+    required: jnp.ndarray,
+    du_quota: jnp.ndarray,
+    dv_quota: jnp.ndarray,
+) -> EnvState:
+    """Run one match rule until its stopping condition (paper §3):
+    Δu ≥ du_quota, Δv ≥ dv_quota, end of index, or episode budget."""
+    u0, v0 = state.u, state.v
+
+    def cond(s: EnvState):
+        return (
+            (s.u - u0 < du_quota)
+            & (s.v - v0 < dv_quota)
+            & (s.block_ptr < cfg.n_blocks)
+            & (s.u < cfg.u_budget)
+            & ~s.done
+        )
+
+    def body(s: EnvState):
+        return _scan_one_block(cfg, occ, scores, term_present, allowed, required, s)
+
+    return lax.while_loop(cond, body, state)
+
+
+def env_step(
+    cfg: EnvConfig,
+    ruleset: RuleSet,
+    occ: jnp.ndarray,
+    scores: jnp.ndarray,
+    term_present: jnp.ndarray,
+    state: EnvState,
+    action: jnp.ndarray,       # () int32 in [0, k+1]
+) -> EnvState:
+    """One agent step: a match-rule execution, a_reset, or a_stop."""
+    is_rule = action < cfg.k_rules
+    is_reset = action == cfg.a_reset
+    is_stop = action == cfg.a_stop
+
+    rule_idx = jnp.minimum(action, cfg.k_rules - 1)
+    allowed, required, du_q, dv_q = ruleset.gather(rule_idx)
+    # Zero quotas make the inner loop a no-op for reset/stop actions.
+    du_q = jnp.where(is_rule & ~state.done, du_q, 0)
+    dv_q = jnp.where(is_rule & ~state.done, dv_q, 0)
+
+    nstate = execute_rule(cfg, occ, scores, term_present, state, allowed, required, du_q, dv_q)
+
+    block_ptr = jnp.where(is_reset & ~state.done, 0, nstate.block_ptr)
+    done = state.done | is_stop | (nstate.u >= cfg.u_budget)
+    return EnvState(
+        block_ptr=block_ptr,
+        u=nstate.u,
+        v=nstate.v,
+        matched=nstate.matched,
+        cand=nstate.cand,
+        cand_cnt=nstate.cand_cnt,
+        topn=nstate.topn,
+        done=done,
+    )
+
+
+@partial(jax.jit, static_argnums=(0,))
+def batched_env_step(cfg, ruleset, occ, scores, term_present, state, action):
+    """vmap over the query batch (leading axis of occ/scores/term_present/
+    state/action)."""
+    return jax.vmap(partial(env_step, cfg, ruleset))(occ, scores, term_present, state, action)

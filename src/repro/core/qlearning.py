@@ -1,0 +1,150 @@
+"""Table-based Q-learning for dynamic match planning (paper §4).
+
+Q is a dense (p, k+2) table.  Rollouts are fully on-device: a
+``lax.scan`` over agent steps wrapping the batched environment, with
+ε-greedy behaviour during training and greedy action selection at test
+time.  TD(0) updates are batched: transitions landing in the same
+(state, action) cell are averaged (scatter-mean) before the learning-
+rate step, which keeps the update order-independent and deterministic.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from .environment import EnvConfig, EnvState, env_reset, env_step
+from .match_rules import RuleSet
+from .reward import step_reward
+from .state_bins import StateBins, bin_index
+
+__all__ = ["QConfig", "init_q", "rollout", "td_update", "train_batch", "greedy_rollout"]
+
+
+@dataclasses.dataclass(frozen=True)
+class QConfig:
+    p: int                    # number of state bins
+    n_actions: int            # k_rules + 2
+    alpha: float = 0.25       # TD learning rate
+    gamma: float = 0.98       # discount (paper: 0 < γ ≤ 1)
+    t_max: int = 8            # episode cap (paper: max execution time)
+    optimistic_init: float = 0.05
+
+
+def init_q(qcfg: QConfig) -> jnp.ndarray:
+    """Optimistic-ish init encourages early exploration of all rules."""
+    return jnp.full((qcfg.p, qcfg.n_actions), qcfg.optimistic_init, jnp.float32)
+
+
+def _batch_reset(cfg: EnvConfig, batch: int) -> EnvState:
+    return jax.vmap(lambda _: env_reset(cfg))(jnp.arange(batch))
+
+
+def rollout(
+    cfg: EnvConfig,
+    qcfg: QConfig,
+    ruleset: RuleSet,
+    bins: StateBins,
+    q: jnp.ndarray,            # (p, A)
+    occ: jnp.ndarray,          # (B, n_blocks, T, F, W)
+    scores: jnp.ndarray,       # (B, n_pad)
+    term_present: jnp.ndarray, # (B, T)
+    prod_rewards: jnp.ndarray, # (B, Lp) production per-step r_agent (Eq. 4)
+    epsilon: jnp.ndarray,      # () float32
+    rng: jax.Array,
+) -> Tuple[EnvState, dict]:
+    """ε-greedy episode for a query batch.  Returns final states and the
+    transition set {s, a, r, s2, done, valid} each (T_max, B)."""
+    batch = occ.shape[0]
+    state0 = _batch_reset(cfg, batch)
+    lp = prod_rewards.shape[1]
+
+    def step(carry, t):
+        state, rng = carry
+        rng, k1, k2 = jax.random.split(rng, 3)
+
+        s_bin = bin_index(bins, state.u, state.v)              # (B,)
+        greedy = jnp.argmax(q[s_bin], axis=-1).astype(jnp.int32)
+        explore = jax.random.randint(k1, (batch,), 0, qcfg.n_actions, dtype=jnp.int32)
+        take_explore = jax.random.uniform(k2, (batch,)) < epsilon
+        action = jnp.where(take_explore, explore, greedy)
+
+        new_state = jax.vmap(partial(env_step, cfg, ruleset))(
+            occ, scores, term_present, state, action
+        )
+        r_prod_t = prod_rewards[:, jnp.minimum(t, lp - 1)]
+        r = jax.vmap(partial(step_reward, cfg))(state, new_state, r_prod_t)
+        s2_bin = bin_index(bins, new_state.u, new_state.v)
+
+        trans = {
+            "s": s_bin,
+            "a": action,
+            "r": r,
+            "s2": s2_bin,
+            "done": new_state.done,
+            "valid": ~state.done,
+        }
+        return (new_state, rng), trans
+
+    (final_state, _), transitions = lax.scan(step, (state0, rng), jnp.arange(qcfg.t_max))
+    return final_state, transitions
+
+
+def td_update(qcfg: QConfig, q: jnp.ndarray, transitions: dict) -> jnp.ndarray:
+    """Scatter-mean TD(0) over the flattened (state, action) cells."""
+    s = transitions["s"].reshape(-1)
+    a = transitions["a"].reshape(-1)
+    r = transitions["r"].reshape(-1)
+    s2 = transitions["s2"].reshape(-1)
+    done = transitions["done"].reshape(-1)
+    valid = transitions["valid"].reshape(-1)
+
+    target = r + qcfg.gamma * jnp.where(done, 0.0, jnp.max(q[s2], axis=-1))
+    td = target - q[s, a]
+    td = jnp.where(valid, td, 0.0)
+
+    flat = s * qcfg.n_actions + a
+    n_cells = qcfg.p * qcfg.n_actions
+    sums = jnp.zeros((n_cells,), jnp.float32).at[flat].add(td)
+    counts = jnp.zeros((n_cells,), jnp.float32).at[flat].add(valid.astype(jnp.float32))
+    mean_td = sums / jnp.maximum(counts, 1.0)
+    return q + qcfg.alpha * mean_td.reshape(qcfg.p, qcfg.n_actions)
+
+
+@partial(jax.jit, static_argnums=(0, 1))
+def train_batch(cfg, qcfg, ruleset, bins, q, occ, scores, term_present, prod_rewards, epsilon, rng):
+    final_state, transitions = rollout(
+        cfg, qcfg, ruleset, bins, q, occ, scores, term_present, prod_rewards, epsilon, rng
+    )
+    q_new = td_update(qcfg, q, transitions)
+    metrics = {
+        "mean_u": jnp.mean(final_state.u.astype(jnp.float32)),
+        "mean_v": jnp.mean(final_state.v.astype(jnp.float32)),
+        "mean_cand": jnp.mean(final_state.cand_cnt.astype(jnp.float32)),
+        "mean_reward": jnp.sum(transitions["r"] * transitions["valid"])
+        / jnp.maximum(jnp.sum(transitions["valid"]), 1),
+        "q_abs_mean": jnp.mean(jnp.abs(q_new)),
+    }
+    return q_new, metrics
+
+
+@partial(jax.jit, static_argnums=(0, 1))
+def greedy_rollout(cfg, qcfg, ruleset, bins, q, occ, scores, term_present):
+    """Test-time policy: greedy argmax over Q (paper §4)."""
+    batch = occ.shape[0]
+    state0 = _batch_reset(cfg, batch)
+
+    def step(state, _):
+        s_bin = bin_index(bins, state.u, state.v)
+        action = jnp.argmax(q[s_bin], axis=-1).astype(jnp.int32)
+        new_state = jax.vmap(partial(env_step, cfg, ruleset))(
+            occ, scores, term_present, state, action
+        )
+        return new_state, action
+
+    final_state, actions = lax.scan(step, state0, jnp.arange(qcfg.t_max))
+    return final_state, actions

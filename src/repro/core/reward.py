@@ -1,0 +1,43 @@
+"""Reward functions — Eq. 3 and Eq. 4 of the paper.
+
+    r_agent(s_t, a_t) = ( Σ_{i=1..m} g(d_i) ) / ( m · u_{t+1} ),
+                        m = min(v_{t+1}, n)
+
+``g(d_i)`` are L1-ranker scores of the top-m documents recalled so far
+(the running ``topn`` buffer maintained by the environment).  The final
+training reward subtracts the production plan's reward at the same step
+(Eq. 4); if an action selects no new documents it earns a small
+negative reward instead.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from .environment import EnvConfig, EnvState
+
+__all__ = ["r_agent", "step_reward"]
+
+
+def r_agent(cfg: EnvConfig, state: EnvState) -> jnp.ndarray:
+    """Eq. 3 evaluated at a state (per query, scalar)."""
+    m = jnp.clip(jnp.minimum(state.v, cfg.n_top), 1, cfg.n_top)
+    idx = jnp.arange(cfg.n_top)
+    topm = jnp.where((idx < m) & jnp.isfinite(state.topn), state.topn, 0.0)
+    u = jnp.maximum(state.u, 1).astype(jnp.float32)
+    return jnp.sum(topm) / (m.astype(jnp.float32) * u)
+
+
+def step_reward(
+    cfg: EnvConfig,
+    prev: EnvState,
+    new: EnvState,
+    r_production_t: jnp.ndarray,
+) -> jnp.ndarray:
+    """Eq. 4 with the no-progress penalty.  ``r_production_t`` is the
+    production plan's r_agent at the aligned step for the same query
+    (precomputed from its trajectory; DESIGN.md §4)."""
+    no_new = new.cand_cnt == prev.cand_cnt
+    ra = r_agent(cfg, new)
+    r = jnp.where(no_new, -cfg.no_progress_penalty, ra - r_production_t)
+    # Terminal no-op steps (already done) earn exactly zero.
+    return jnp.where(prev.done, 0.0, r)

@@ -1,0 +1,77 @@
+"""Equal-mass discretization of the (u, v) state space (paper §4).
+
+"We run the baseline match plans ... and collect a large set of
+{u_t, v_t} pairs ... We assign these points to p bins, such that each
+bin has roughly the same number of points."
+
+Two-level quantile scheme: √p equal-mass strata over u, then √p
+equal-mass v-quantiles *within each stratum* — every bin holds ≈ N/p of
+the harvested points even when u and v are strongly correlated (they
+are: both grow monotonically along a scan).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+__all__ = ["StateBins", "fit_bins", "bin_index"]
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass
+class StateBins:
+    u_edges: jnp.ndarray   # (pu - 1,) interior edges over u
+    v_edges: jnp.ndarray   # (pu, pv - 1) per-stratum interior edges over v
+
+    @property
+    def pu(self) -> int:
+        return self.v_edges.shape[0]
+
+    @property
+    def pv(self) -> int:
+        return self.v_edges.shape[1] + 1
+
+    @property
+    def p(self) -> int:
+        return self.pu * self.pv
+
+    def tree_flatten(self):
+        return ((self.u_edges, self.v_edges), None)
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        return cls(*children)
+
+
+def fit_bins(u: np.ndarray, v: np.ndarray, p: int = 1024) -> StateBins:
+    """Fit from harvested baseline (u, v) pairs (host-side)."""
+    u = np.asarray(u, dtype=np.float32).ravel()
+    v = np.asarray(v, dtype=np.float32).ravel()
+    pu = max(1, int(np.sqrt(p)))
+    pv = max(1, p // pu)
+
+    qs_u = np.quantile(u, np.linspace(0, 1, pu + 1)[1:-1])
+    u_edges = np.asarray(qs_u, dtype=np.float32)
+
+    strata = np.searchsorted(u_edges, u, side="right")
+    v_edges = np.zeros((pu, pv - 1), dtype=np.float32)
+    for s in range(pu):
+        vs = v[strata == s]
+        if len(vs) < pv:
+            vs = v  # sparse stratum: fall back to the global distribution
+        v_edges[s] = np.quantile(vs, np.linspace(0, 1, pv + 1)[1:-1])
+
+    return StateBins(u_edges=jnp.asarray(u_edges), v_edges=jnp.asarray(v_edges))
+
+
+def bin_index(bins: StateBins, u: jnp.ndarray, v: jnp.ndarray) -> jnp.ndarray:
+    """Device-side state index in [0, p).  Accepts scalars or batches."""
+    uf = u.astype(jnp.float32)
+    vf = v.astype(jnp.float32)
+    s = jnp.searchsorted(bins.u_edges, uf, side="right")            # stratum
+    edges = jnp.take(bins.v_edges, s, axis=0)                       # (..., pv-1)
+    vb = jnp.sum(edges <= vf[..., None], axis=-1)
+    return (s * bins.pv + vb).astype(jnp.int32)

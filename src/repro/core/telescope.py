@@ -1,0 +1,50 @@
+"""Telescoping cascade (paper Fig. 1): L0 match → L1 rank/prune → L2.
+
+L0 produces an unordered candidate set (static plan or learned policy);
+L1 scores candidates with the MLP ranker (or a plugged-in recsys arch)
+and prunes to the top-K'; L2 re-scores with a heavier model.  On a
+multi-shard index the per-shard candidate buffers are merged by static
+rank before L1 — the paper's "results are aggregated across all the
+machines, followed by more rank-and-prune stages".
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Callable, Tuple
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["l1_prune", "merge_shard_candidates"]
+
+
+@partial(jax.jit, static_argnames=("keep",))
+def l1_prune(
+    scores_all: jnp.ndarray,  # (B, n_docs_padded) precomputed L1 scores
+    cand: jnp.ndarray,        # (B, K) int32 doc ids, -1 pad
+    keep: int = 100,
+) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Rank candidates by L1 score, prune to ``keep``. Returns
+    (doc_ids (B, keep), scores (B, keep)) sorted descending."""
+    safe = jnp.clip(cand, 0, None)
+    s = jnp.take_along_axis(scores_all, safe, axis=1)
+    s = jnp.where(cand >= 0, s, -jnp.inf)
+    top_s, top_i = jax.lax.top_k(s, keep)
+    top_ids = jnp.take_along_axis(cand, top_i, axis=1)
+    top_ids = jnp.where(jnp.isfinite(top_s), top_ids, -1)
+    return top_ids, top_s
+
+
+@partial(jax.jit, static_argnames=("keep",))
+def merge_shard_candidates(
+    shard_cand: jnp.ndarray,   # (S, B, K) per-shard candidate buffers (global doc ids)
+    keep: int = 512,
+) -> jnp.ndarray:
+    """Merge per-shard buffers by global static rank (= ascending doc id,
+    because documents are laid out in static-rank order)."""
+    s, b, k = shard_cand.shape
+    flat = shard_cand.transpose(1, 0, 2).reshape(b, s * k)
+    key = jnp.where(flat >= 0, flat, jnp.iinfo(jnp.int32).max)
+    order = jnp.argsort(key, axis=1)
+    merged = jnp.take_along_axis(flat, order[:, :keep], axis=1)
+    return merged

@@ -1,0 +1,12 @@
+from .sharding_rules import (
+    data_axes, lm_param_specs, zero1_state_specs, kv_cache_specs,
+    gnn_param_specs, recsys_param_specs, spec_tree,
+)
+from .checkpoint import CheckpointManager, save, restore, latest_step
+from .fault_tolerance import FaultToleranceConfig, FailureInjector, run_resilient_loop
+from .collectives import (
+    compress_with_feedback, decompress_accumulate, compressed_psum_grads,
+    zeros_like_residual,
+)
+from .elastic import plan_mesh, plan_mesh_shape, validate_specs, reshard_tree
+from .embedding_ops import sharded_lookup, sharded_bag_sum

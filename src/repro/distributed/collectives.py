@@ -1,0 +1,53 @@
+"""Distributed-optimization tricks: gradient compression + DP helpers.
+
+`compressed_psum_grads`: bf16 all-reduce with fp32 error feedback — the
+residual between the fp32 gradient and its bf16 cast is carried to the
+next step, so compression noise doesn't accumulate (1-bit-Adam-style
+error feedback, at bf16).  Halves DP gradient bytes on the wire; the
+effect is visible in the roofline collective term and convergence
+parity is tested in tests/test_distributed.py.
+"""
+from __future__ import annotations
+
+from typing import Any, Tuple
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["compress_with_feedback", "decompress_accumulate", "compressed_psum_grads"]
+
+PyTree = Any
+
+
+def compress_with_feedback(grads: PyTree, residual: PyTree) -> Tuple[PyTree, PyTree]:
+    """fp32 grads + carried residual -> (bf16 payload, new residual)."""
+    def comp(g, r):
+        g32 = g.astype(jnp.float32) + r
+        payload = g32.astype(jnp.bfloat16)
+        new_r = g32 - payload.astype(jnp.float32)
+        return payload, new_r
+
+    flat_g, treedef = jax.tree_util.tree_flatten(grads)
+    flat_r = treedef.flatten_up_to(residual)
+    out = [comp(g, r) for g, r in zip(flat_g, flat_r)]
+    payload = jax.tree_util.tree_unflatten(treedef, [o[0] for o in out])
+    new_res = jax.tree_util.tree_unflatten(treedef, [o[1] for o in out])
+    return payload, new_res
+
+
+def decompress_accumulate(payload: PyTree) -> PyTree:
+    return jax.tree_util.tree_map(lambda p: p.astype(jnp.float32), payload)
+
+
+def compressed_psum_grads(grads: PyTree, residual: PyTree, axis_name: str):
+    """For shard_map DP loops: compress -> psum(bf16) -> decompress.
+    Returns (mean grads fp32, new residual)."""
+    payload, new_res = compress_with_feedback(grads, residual)
+    summed = jax.tree_util.tree_map(
+        lambda p: jax.lax.pmean(p, axis_name), payload)
+    return decompress_accumulate(summed), new_res
+
+
+def zeros_like_residual(grads: PyTree) -> PyTree:
+    return jax.tree_util.tree_map(
+        lambda g: jnp.zeros(g.shape, jnp.float32), grads)

@@ -1,0 +1,177 @@
+"""Parameter / input PartitionSpec rules per architecture family.
+
+Megatron-style TP over `model` (attention heads, FFN hidden, vocab,
+experts, embedding rows), DP over `pod`×`data`, ZeRO-1-style optimizer
+state sharding over `data` (cross-pod ZeRO would ride the slow DCN —
+states replicate across pods; DESIGN.md §7), KV-cache sequence sharding
+over `model` for decode.
+
+Rules pattern-match on parameter-tree paths, so they work for any
+config of a family without per-arch tables.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Tuple
+
+import jax
+import numpy as np
+from jax.sharding import PartitionSpec as P
+
+__all__ = ["data_axes", "lm_param_specs", "zero1_state_specs", "kv_cache_specs",
+           "gnn_param_specs", "recsys_param_specs", "spec_tree"]
+
+
+def data_axes(mesh) -> Tuple[str, ...]:
+    return tuple(a for a in ("pod", "data") if a in mesh.shape)
+
+
+def _lm_rule(path: str, shape=None, model_size=None, fsdp=False, zero3=False) -> P:
+    """Path-pattern → spec for stacked transformer params (leading L dim)."""
+    # MoE experts: (L, E, d, f). EP over model when E divides the axis;
+    # otherwise TP over d_ff (grok-1: 8 experts on a 16-way axis).
+    # With fsdp=True the d_model axis additionally shards over `data`
+    # (gathered per layer inside the scan — ZeRO-3 for the expert bulk).
+    if "experts" in path:
+        e = shape[1] if shape is not None else None
+        d_axis = "data" if fsdp else None
+        if model_size and e is not None and e % model_size != 0:
+            if path.endswith("w_down"):
+                return P(None, None, "model", d_axis)
+            return P(None, None, d_axis, "model")
+        if path.endswith("w_down"):
+            return P(None, "model", None, d_axis)
+        return P(None, "model", d_axis, None)
+    if "router" in path:
+        return P()
+    if zero3 and path.endswith(("wq", "wk", "wv", "wo", "w_gate", "w_up",
+                                 "w_down")):
+        # ZeRO-3 dense: (L, a, b) fully sharded; gathered per layer
+        return P(None, "data", "model")
+    if zero3 and path.endswith(("b_up", "b_down")):
+        return P(None, "model")
+    if path.endswith(("wq", "wk", "wv", "w_uk", "w_uv")):
+        return P(None, None, "model")          # (L, d, heads*dh) — heads sharded
+    if path.endswith("w_dkv"):
+        return P(None, None, None)             # (L, d, r+dr) — small, replicated
+    if path.endswith("wo"):
+        return P(None, "model", None)          # (L, heads*dh, d)
+    if path.endswith(("w_gate", "w_up")):
+        return P(None, None, "model")          # (L, d, dff)
+    if path.endswith("w_down"):
+        return P(None, "model", None)          # (L, dff, d)
+    if path.endswith("b_up"):
+        return P(None, "model")
+    if path.endswith("embed"):
+        if zero3:
+            return P()                         # replicated: batch owns `model`
+        return P("model", None)                # (V, d) vocab-sharded
+    if path.endswith("lm_head"):
+        if zero3:
+            return P()
+        return P(None, "model")                # (d, V)
+    return P()                                 # norms, biases
+
+
+def _paths(tree) -> Dict[str, Any]:
+    flat, _ = jax.tree_util.tree_flatten_with_path(tree)
+    out = {}
+    for kp, leaf in flat:
+        path = "/".join(
+            str(getattr(k, "key", getattr(k, "idx", k))) for k in kp
+        )
+        out[path] = leaf
+    return out
+
+
+def spec_tree(params, rule) -> Any:
+    """Apply a (path, leaf)→spec rule over a pytree, preserving structure."""
+    flat, treedef = jax.tree_util.tree_flatten_with_path(params)
+    specs = []
+    for kp, leaf in flat:
+        path = "/".join(str(getattr(k, "key", getattr(k, "idx", k))) for k in kp)
+        try:
+            specs.append(rule(path, leaf))
+        except TypeError:
+            specs.append(rule(path))
+    return jax.tree_util.tree_unflatten(treedef, specs)
+
+
+def lm_param_specs(params, model_size: int | None = None, fsdp: bool = False,
+                   zero3: bool = False) -> Any:
+    return spec_tree(
+        params,
+        lambda path, leaf: _lm_rule(path, getattr(leaf, "shape", None), model_size,
+                                    fsdp, zero3),
+    )
+
+
+def zero1_state_specs(params, param_specs, mesh, axis: str = "data") -> Any:
+    """Optimizer-moment specs: param spec + `axis` added on the largest
+    still-unsharded dim that divides evenly (ZeRO-1)."""
+    n = mesh.shape[axis]
+
+    def add_axis(spec: P, shape) -> P:
+        entries = list(spec) + [None] * (len(shape) - len(spec))
+        used = set()
+        for e in entries:
+            for a in (e if isinstance(e, tuple) else (e,)):
+                used.add(a)
+        if axis in used:
+            return spec                  # FSDP leaves already consume `data`
+        best, best_size = None, 0
+        for i, (s, e) in enumerate(zip(shape, entries)):
+            if e is None and s % n == 0 and s // n > 0 and s > best_size:
+                best, best_size = i, s
+        if best is None:
+            return spec
+        entries[best] = axis
+        return P(*entries)
+
+    flat_p, treedef = jax.tree_util.tree_flatten(params)
+    flat_s = treedef.flatten_up_to(param_specs)
+    return jax.tree_util.tree_unflatten(
+        treedef, [add_axis(s, p.shape) for p, s in zip(flat_p, flat_s)]
+    )
+
+
+def kv_cache_specs(cache, mesh) -> Any:
+    """Decode KV cache: batch over data axes when divisible, sequence over
+    `model` (LSE-merged attention; works for 32k×128 and 500k×1 alike)."""
+    dp = data_axes(mesh)
+    dp_size = int(np.prod([mesh.shape[a] for a in dp]))
+
+    def rule(leaf):
+        # layouts: (L, B, S, kv, dh) or (L, B, S, r)
+        b = leaf.shape[1]
+        batch_axes = dp if b % dp_size == 0 and b >= dp_size else ()
+        rest = [None] * (leaf.ndim - 3)
+        return P(None, batch_axes if batch_axes else None, "model", *rest)
+
+    return jax.tree_util.tree_map(rule, cache)
+
+
+def gnn_param_specs(params, model_size: int | None = None) -> Any:
+    def rule(path: str, leaf=None) -> P:
+        shape = getattr(leaf, "shape", None)
+        if path.endswith(("w_self", "w_neigh")):
+            # hidden sharded — but the classifier layer's tiny class dim
+            # (e.g. 7/41/47) stays replicated
+            if shape is not None and model_size and shape[1] % model_size == 0:
+                return P(None, "model")
+            return P()
+        return P()
+    return spec_tree(params, rule)
+
+
+def recsys_param_specs(params, model_size: int | None = None) -> Any:
+    def rule(path: str, leaf=None) -> P:
+        shape = getattr(leaf, "shape", None)
+        if path.endswith(("embed", "item_embed", "wide", "first_order")):
+            # big tables row-shard; tiny ones (pos_embed) replicate
+            if (shape is not None and len(shape) == 2
+                    and (model_size is None or shape[0] % model_size == 0)
+                    and shape[0] >= 4096):
+                return P("model", None)
+            return P()
+        return P()                              # dense towers replicated (small)
+    return spec_tree(params, rule)

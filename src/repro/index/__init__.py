@@ -1,0 +1,9 @@
+from .blocks import WORD_BITS, pack_bits, unpack_bits, popcount, words_per_block
+from .corpus import FIELDS, N_FIELDS, CorpusConfig, Corpus, generate_corpus
+from .builder import (
+    MAX_QUERY_TERMS,
+    InvertedIndex,
+    build_index,
+    query_occupancy,
+    batch_query_occupancy,
+)

@@ -1,0 +1,118 @@
+"""Inverted index builder + query-time occupancy tensor construction.
+
+Build side (host, numpy): one CSR-style posting structure per field,
+postings implicitly sorted by static rank because doc ids are assigned
+in static-rank order.
+
+Query side: for a (padded) set of query terms, gather the posting lists
+and scatter them into the bitpacked occupancy tensor
+``occ[block, term, field, word]`` consumed by the JAX match-plan
+executor and the ``block_scan`` Pallas kernel.  This mirrors what the
+production system does when it streams posting blocks from disk; the
+occupancy tensor *is* the byte stream whose consumption the RL agent
+learns to minimize.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import List, Sequence
+
+import numpy as np
+
+from .blocks import WORD_BITS, pack_bits, words_per_block
+from .corpus import Corpus, N_FIELDS
+
+__all__ = ["InvertedIndex", "build_index", "query_occupancy", "batch_query_occupancy", "MAX_QUERY_TERMS"]
+
+MAX_QUERY_TERMS = 4  # queries are padded to this many terms
+
+
+@dataclasses.dataclass
+class InvertedIndex:
+    """CSR postings per field + doc metadata."""
+
+    n_docs: int
+    vocab_size: int
+    block_docs: int
+    # per field: indptr (vocab+1,) int64 and doc ids (nnz,) int32
+    indptr: List[np.ndarray]
+    doc_ids: List[np.ndarray]
+    static_rank: np.ndarray           # (n_docs,) float32
+    doc_len: np.ndarray               # (n_docs, n_fields) int32 unique-term counts
+    df: np.ndarray                    # (vocab, n_fields) int32 document frequencies
+
+    @property
+    def n_blocks(self) -> int:
+        return self.padded_docs // self.block_docs
+
+    @property
+    def padded_docs(self) -> int:
+        bd = self.block_docs
+        return ((self.n_docs + bd - 1) // bd) * bd
+
+    def postings(self, term: int, field: int) -> np.ndarray:
+        lo, hi = self.indptr[field][term], self.indptr[field][term + 1]
+        return self.doc_ids[field][lo:hi]
+
+
+def build_index(corpus: Corpus, block_docs: int = 512) -> InvertedIndex:
+    vocab = corpus.config.vocab_size
+    n_docs = corpus.n_docs
+
+    indptrs, doc_id_arrays = [], []
+    df = np.zeros((vocab, N_FIELDS), dtype=np.int32)
+    doc_len = np.zeros((n_docs, N_FIELDS), dtype=np.int32)
+
+    for f in range(N_FIELDS):
+        counts = np.zeros(vocab, dtype=np.int64)
+        for d in range(n_docs):
+            terms = corpus.field_terms[f][d]
+            counts[terms] += 1
+            doc_len[d, f] = len(terms)
+        df[:, f] = counts
+        indptr = np.zeros(vocab + 1, dtype=np.int64)
+        np.cumsum(counts, out=indptr[1:])
+        ids = np.zeros(indptr[-1], dtype=np.int32)
+        cursor = indptr[:-1].copy()
+        for d in range(n_docs):
+            terms = corpus.field_terms[f][d]
+            ids[cursor[terms]] = d
+            cursor[terms] += 1
+        indptrs.append(indptr)
+        doc_id_arrays.append(ids)
+
+    return InvertedIndex(
+        n_docs=n_docs,
+        vocab_size=vocab,
+        block_docs=block_docs,
+        indptr=indptrs,
+        doc_ids=doc_id_arrays,
+        static_rank=corpus.static_rank,
+        doc_len=doc_len,
+        df=df,
+    )
+
+
+def query_occupancy(index: InvertedIndex, terms: Sequence[int]) -> np.ndarray:
+    """Build ``occ[block, term, field, word]`` uint32 for one query.
+
+    ``terms`` may be shorter than MAX_QUERY_TERMS; missing slots are
+    all-zero planes (the match engine masks them out via the query's
+    term-count).
+    """
+    n_pad = index.padded_docs
+    occ_bits = np.zeros((MAX_QUERY_TERMS, N_FIELDS, n_pad), dtype=bool)
+    for t, term in enumerate(terms[:MAX_QUERY_TERMS]):
+        for f in range(N_FIELDS):
+            ids = index.postings(int(term), f)
+            occ_bits[t, f, ids] = True
+    packed = pack_bits(occ_bits)                      # (T, F, n_pad/32)
+    W = words_per_block(index.block_docs)
+    n_blocks = index.n_blocks
+    packed = packed.reshape(MAX_QUERY_TERMS, N_FIELDS, n_blocks, W)
+    return np.ascontiguousarray(packed.transpose(2, 0, 1, 3))  # (block, T, F, W)
+
+
+def batch_query_occupancy(index: InvertedIndex, term_lists: Sequence[Sequence[int]]) -> np.ndarray:
+    """Stack per-query occupancy tensors: (Q, block, T, F, W) uint32."""
+    return np.stack([query_occupancy(index, ts) for ts in term_lists])

@@ -1,0 +1,117 @@
+"""Plane-pruned block_scan: stream ONLY the match rule's active
+(term, field) posting planes HBM→VMEM.
+
+The baseline kernel (and the XLA executor path) DMAs the full
+(T·F, W) occupancy tile per block and masks in VMEM — for a shallow
+rule like mr_B (2 active planes of 16) that wastes 8× HBM bandwidth,
+and the paper's whole point is that shallow rules are CHEAP.  Here the
+active-plane list is a scalar-prefetch operand driving the occupancy
+BlockSpec index_map, so the DMA engine fetches exactly
+``n_active × W`` words per block: bytes streamed = u (the paper's cost
+accumulator), not T·F·W.
+
+Grid: (n_blocks, n_active).  The per-term OR is accumulated in VMEM
+scratch across the plane steps of one block; conjunction + popcounts
+happen on the last plane.  n_active is static (the rule is known at
+trace time); planes are (term, field) pairs flattened to t*F+f.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.kernels.common import INTERPRET, cdiv
+
+__all__ = ["block_scan_pruned_pallas"]
+
+
+def _kernel(meta_ref, occ_ref, match_ref, counts_ref, tf_scr,
+            *, t: int, n_active: int):
+    pi = pl.program_id(1)
+
+    @pl.when(pi == 0)
+    def _init():
+        tf_scr[...] = jnp.zeros_like(tf_scr)
+
+    # meta row 0: plane ids (t*F+f); row 1: term id per active plane;
+    # row 2: required-mask per term (length-t prefix).
+    term = meta_ref[1, pi]
+    plane = occ_ref[0]                                  # (1, W) active plane
+    # OR this plane into its term's running bitmap.
+    row = tf_scr[term]
+    tf_scr[term] = row | plane[0]
+
+    @pl.when(pi == n_active - 1)
+    def _finalize():
+        tf = tf_scr[...]                                # (t, W)
+        full = jnp.uint32(0xFFFFFFFF)
+        req = meta_ref[2, :t]                           # (t,) 0/1
+        conj = tf | (full * (jnp.uint32(1) - req))[:, None]
+        match = jax.lax.reduce_and(conj, axes=(0,))
+        any_req = (jnp.sum(req) > 0).astype(jnp.uint32)
+        match = match * any_req
+        match_ref[0] = match
+        v_inc = jnp.sum(jax.lax.population_count(tf).astype(jnp.int32))
+        n_match = jnp.sum(jax.lax.population_count(match).astype(jnp.int32))
+        counts_ref[0, 0] = v_inc
+        counts_ref[0, 1] = n_match
+
+
+def block_scan_pruned_pallas(
+    occ: jnp.ndarray,            # (n_blocks, T, F, W) uint32
+    allowed: np.ndarray,         # (T, F) bool — STATIC (host) rule mask
+    required: np.ndarray,        # (T,) bool — static
+    term_present: np.ndarray,    # (T,) bool — static
+    *,
+    interpret: bool | None = None,
+):
+    """Returns (match (nb, W) u32, v_inc (nb,) i32, n_match (nb,) i32).
+    The rule is static: only its active planes are ever read from HBM."""
+    interpret = INTERPRET if interpret is None else interpret
+    nb, t, f, w = occ.shape
+    amask = np.asarray(allowed) & np.asarray(term_present)[:, None]
+    planes = np.argwhere(amask.reshape(-1)).ravel()       # active plane ids
+    n_active = max(len(planes), 1)
+    if len(planes) == 0:
+        planes = np.array([0])
+
+    meta = np.zeros((3, max(t * f, t)), np.int32)
+    meta[0, :n_active] = planes
+    meta[1, :n_active] = planes // f                      # term of each plane
+    meta[2, :t] = (np.asarray(required) & np.asarray(term_present)).astype(np.int32)
+
+    occ2 = occ.reshape(nb, t * f, w)
+
+    kernel = functools.partial(_kernel, t=t, n_active=n_active)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(nb, n_active),
+        in_specs=[
+            # stream exactly the active plane for this grid step
+            pl.BlockSpec((1, 1, w), lambda b, p, m: (b, m[0, p], 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, w), lambda b, p, m: (b, 0)),
+            pl.BlockSpec((1, 8), lambda b, p, m: (b, 0)),
+        ],
+        scratch_shapes=[pltpu.VMEM((t, w), jnp.uint32)],
+    )
+    match, counts = pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=[
+            jax.ShapeDtypeStruct((nb, w), jnp.uint32),
+            jax.ShapeDtypeStruct((nb, 8), jnp.int32),
+        ],
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("arbitrary", "arbitrary"),
+        ),
+        interpret=interpret,
+        name="block_scan_pruned",
+    )(jnp.asarray(meta), occ2)
+    return match, counts[:, 0], counts[:, 1]

@@ -1,0 +1,29 @@
+"""Jitted public entry points for block_scan."""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+
+from .block_scan import block_scan_pallas
+from .ref import block_scan_ref
+
+__all__ = ["block_scan", "block_scan_batched", "block_scan_reference"]
+
+
+@partial(jax.jit, static_argnames=("block_bb", "interpret"))
+def block_scan(occ, allowed, required, term_present, block_bb: int = 8, interpret=None):
+    return block_scan_pallas(
+        occ, allowed, required, term_present, block_bb=block_bb, interpret=interpret
+    )
+
+
+@partial(jax.jit, static_argnames=("block_bb", "interpret"))
+def block_scan_batched(occ, allowed, required, term_present, block_bb: int = 8, interpret=None):
+    """vmap over a query batch: occ (Q, nb, T, F, W), masks (Q, ...)."""
+    return jax.vmap(
+        lambda o, a, r, t: block_scan_pallas(o, a, r, t, block_bb=block_bb, interpret=interpret)
+    )(occ, allowed, required, term_present)
+
+
+block_scan_reference = jax.jit(block_scan_ref)

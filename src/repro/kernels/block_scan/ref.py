@@ -1,0 +1,17 @@
+"""Pure-jnp oracle for the block_scan kernel: vmap of the single-block
+evaluation the match engine itself uses (core.match_rules.scan_block)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.match_rules import scan_block
+
+__all__ = ["block_scan_ref"]
+
+
+def block_scan_ref(occ, allowed, required, term_present):
+    """occ: (n_blocks, T, F, W) uint32 → (match (nb, W), v_inc (nb,), n_match (nb,))."""
+    match, v_inc = jax.vmap(lambda o: scan_block(o, allowed, required, term_present))(occ)
+    n_match = jnp.sum(jax.lax.population_count(match).astype(jnp.int32), axis=1)
+    return match, v_inc, n_match

@@ -1,0 +1,30 @@
+"""Shared kernel utilities.
+
+Kernels TARGET TPU (BlockSpec/VMEM tiling, MXU-aligned shapes) and are
+VALIDATED on CPU via ``interpret=True`` — the kernel body executes in
+Python with the same block/grid semantics.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["INTERPRET", "pad_axis_to", "cdiv", "NEG_INF"]
+
+INTERPRET = jax.default_backend() != "tpu"
+NEG_INF = float("-inf")
+
+
+def cdiv(a: int, b: int) -> int:
+    return (a + b - 1) // b
+
+
+def pad_axis_to(x: jnp.ndarray, axis: int, multiple: int, value=0):
+    """Pad ``axis`` of x up to the next multiple. Returns (padded, orig_len)."""
+    n = x.shape[axis]
+    target = cdiv(n, multiple) * multiple
+    if target == n:
+        return x, n
+    pads = [(0, 0)] * x.ndim
+    pads[axis] = (0, target - n)
+    return jnp.pad(x, pads, constant_values=value), n

@@ -1,0 +1,34 @@
+"""Jitted entry points for decode attention."""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.common import cdiv
+from .decode_attention import decode_attention_pallas
+from .ref import decode_attention_ref, merge_partials_ref
+
+__all__ = ["decode_attention", "decode_attention_reference", "merge_partials"]
+
+
+@partial(jax.jit, static_argnames=("block_k", "return_partial", "interpret"))
+def decode_attention(q, k, v, block_k: int = 512, return_partial: bool = False,
+                     interpret=None):
+    """Pads the KV length to a block multiple and runs the kernel."""
+    s = k.shape[2]
+    bk = min(block_k, max(128, 1 << (s - 1).bit_length()))
+    s_p = cdiv(s, bk) * bk
+    kp = jnp.pad(k, ((0, 0), (0, 0), (0, s_p - s), (0, 0)))
+    vp = jnp.pad(v, ((0, 0), (0, 0), (0, s_p - s), (0, 0)))
+    return decode_attention_pallas(
+        q, kp, vp, block_k=bk, kv_len=s, return_partial=return_partial,
+        interpret=interpret,
+    )
+
+
+decode_attention_reference = jax.jit(
+    decode_attention_ref, static_argnames=("return_partial",)
+)
+merge_partials = jax.jit(merge_partials_ref)

@@ -1,0 +1,44 @@
+"""Pure-jnp oracle for decode attention, including the partial
+(m, l, acc) form used for sequence-sharded LSE merging."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+__all__ = ["decode_attention_ref", "merge_partials_ref"]
+
+
+def decode_attention_ref(q, k, v, *, scale=None, kv_len=None, return_partial=False):
+    """q: (B, Hq, D); k, v: (B, Hkv, S, D)."""
+    b, hq, d = q.shape
+    _, hkv, s, _ = k.shape
+    group = hq // hkv
+    scale = (d ** -0.5) if scale is None else scale
+    kv_len = s if kv_len is None else kv_len
+
+    kx = jnp.repeat(k, group, axis=1).astype(jnp.float32)
+    vx = jnp.repeat(v, group, axis=1).astype(jnp.float32)
+    sc = jnp.einsum("bhd,bhkd->bhk", q.astype(jnp.float32), kx) * scale
+    mask = jnp.arange(s) < kv_len
+    sc = jnp.where(mask[None, None], sc, -jnp.inf)
+
+    m = jnp.max(sc, axis=-1, keepdims=True)
+    m_safe = jnp.where(jnp.isfinite(m), m, 0.0)
+    p = jnp.where(jnp.isfinite(sc), jnp.exp(sc - m_safe), 0.0)
+    l = p.sum(-1, keepdims=True)
+    acc = jnp.einsum("bhk,bhkd->bhd", p, vx)
+    if return_partial:
+        return acc.astype(q.dtype), m, l
+    out = acc / jnp.maximum(l, 1e-30)
+    return out.astype(q.dtype), m, l
+
+
+def merge_partials_ref(accs, ms, ls):
+    """Merge per-shard partials: lists of (B, H, D), (B, H, 1), (B, H, 1)."""
+    m_all = jnp.max(jnp.stack(ms), axis=0)
+    m_safe = jnp.where(jnp.isfinite(m_all), m_all, 0.0)
+    l_tot = sum(l * jnp.where(jnp.isfinite(m), jnp.exp(m - m_safe), 0.0) for m, l in zip(ms, ls))
+    acc_tot = sum(
+        a.astype(jnp.float32) * jnp.where(jnp.isfinite(m), jnp.exp(m - m_safe), 0.0)
+        for a, m in zip(accs, ms)
+    )
+    return (acc_tot / jnp.maximum(l_tot, 1e-30)).astype(accs[0].dtype)

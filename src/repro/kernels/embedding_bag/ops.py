@@ -1,0 +1,25 @@
+"""EmbeddingBag entry points.
+
+``embedding_bag`` — pure-JAX path used inside the recsys models (XLA
+fuses gather+reduce well, and it shards cleanly with shard_map row
+sharding; see distributed/sharding_rules.py).
+``embedding_bag_kernel`` — the Pallas TPU hot path, validated against
+the same oracle.
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+
+from .embedding_bag import embedding_bag_pallas
+from .ref import embedding_bag_ref
+
+__all__ = ["embedding_bag", "embedding_bag_kernel"]
+
+embedding_bag = jax.jit(embedding_bag_ref, static_argnames=("mode",))
+
+
+@partial(jax.jit, static_argnames=("mode", "interpret"))
+def embedding_bag_kernel(table, indices, weights=None, mode: str = "sum", interpret=None):
+    return embedding_bag_pallas(table, indices, weights, mode=mode, interpret=interpret)

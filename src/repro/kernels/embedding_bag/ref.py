@@ -1,0 +1,20 @@
+"""Pure-jnp EmbeddingBag oracle (take + masked reduce)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+__all__ = ["embedding_bag_ref"]
+
+
+def embedding_bag_ref(table, indices, weights=None, *, mode: str = "sum"):
+    valid = indices >= 0
+    safe = jnp.where(valid, indices, 0)
+    rows = jnp.take(table, safe, axis=0).astype(jnp.float32)      # (B, L, E)
+    if weights is None:
+        w = valid.astype(jnp.float32)
+    else:
+        w = jnp.where(valid, weights, 0.0).astype(jnp.float32)
+    out = jnp.sum(rows * w[..., None], axis=1)
+    if mode == "mean":
+        out = out / jnp.maximum(valid.sum(1, keepdims=True), 1)
+    return out.astype(table.dtype)

@@ -1,0 +1,40 @@
+"""Jitted entry points for flash attention, with sequence padding."""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.common import cdiv
+from .flash_attention import flash_attention_pallas
+from .ref import attention_ref
+
+__all__ = ["flash_attention", "flash_attention_reference"]
+
+
+@partial(jax.jit, static_argnames=("causal", "block_q", "block_k", "interpret"))
+def flash_attention(q, k, v, causal: bool = True, block_q: int = 128,
+                    block_k: int = 128, interpret=None):
+    """Pads Sq/Skv to block multiples, runs the kernel, slices back.
+    Padding keys are masked out by the causal structure for causal=True;
+    for bidirectional attention we mask via an explicit -inf key pad."""
+    b, hq, sq, d = q.shape
+    skv = k.shape[2]
+    bq = min(block_q, max(8, 1 << (sq - 1).bit_length()))
+    bk = min(block_k, max(8, 1 << (skv - 1).bit_length()))
+    sq_p = cdiv(sq, bq) * bq
+    skv_p = cdiv(skv, bk) * bk
+
+    qp = jnp.pad(q, ((0, 0), (0, 0), (0, sq_p - sq), (0, 0)))
+    kp = jnp.pad(k, ((0, 0), (0, 0), (0, skv_p - skv), (0, 0)))
+    vp = jnp.pad(v, ((0, 0), (0, 0), (0, skv_p - skv), (0, 0)))
+
+    out = flash_attention_pallas(
+        qp, kp, vp, causal=causal, block_q=bq, block_k=bk, kv_len=skv, q_len=sq,
+        interpret=interpret,
+    )
+    return out[:, :, :sq, :]
+
+
+flash_attention_reference = jax.jit(attention_ref, static_argnames=("causal",))

@@ -1,0 +1,177 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (arch × input-shape) cell on
+the production meshes and record memory / cost / collective statistics.
+
+    PYTHONPATH=src python -m repro.launch.dryrun --all                # 16×16
+    PYTHONPATH=src python -m repro.launch.dryrun --all --multi-pod    # 2×16×16
+    PYTHONPATH=src python -m repro.launch.dryrun --arch grok-1-314b --shape train_4k
+
+The 512 fake host devices exist ONLY here (the env var above is set
+before any jax import, including the repro imports below).  Smoke tests
+and benches see 1 device.
+
+Per cell the JSON records:
+  - lower/compile wall time
+  - compiled.memory_analysis(): per-device argument/output/temp bytes
+  - compiled.cost_analysis(): PER-DEVICE post-SPMD flops + bytes accessed
+    (calibrated: a 1-device matmul reports global FLOPs exactly; a
+    256-device sharded matmul reports the per-shard program — see
+    EXPERIMENTS.md §Dry-run)
+  - per-type collective bytes parsed from the partitioned HLO
+    (result-shape bytes per op, per device)
+"""
+import argparse
+import gc
+import json
+import re
+import time
+import traceback
+from pathlib import Path
+
+import jax
+
+DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "bf16": 2, "f16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s64": 8, "s32": 4, "s16": 2, "s8": 1, "u64": 8, "u32": 4, "u16": 2,
+    "u8": 1, "pred": 1, "c64": 8, "c128": 16,
+}
+
+COLLECTIVES = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+               "collective-permute")
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+
+
+def _type_bytes(type_str: str) -> int:
+    total = 0
+    for dtype, dims in _SHAPE_RE.findall(type_str):
+        if dtype not in DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * DTYPE_BYTES[dtype]
+    return total
+
+
+def collective_bytes(hlo_text: str) -> dict:
+    """Per-device bytes by collective type (result-shape bytes; the
+    post-SPMD module is already the per-device program)."""
+    out = {c: 0 for c in COLLECTIVES}
+    counts = {c: 0 for c in COLLECTIVES}
+    pat = re.compile(
+        r"=\s+((?:\([^)]*\))|(?:\w+\[[^\]]*\](?:\{[^}]*\})?))\s+"
+        r"(all-reduce|all-gather|reduce-scatter|all-to-all|collective-permute)"
+        r"(?:-start|-done)?\("
+    )
+    for m in pat.finditer(hlo_text):
+        ty, op = m.group(1), m.group(2)
+        out[op] += _type_bytes(ty)
+        counts[op] += 1
+    return {"bytes": out, "counts": counts}
+
+
+def run_cell(arch_id: str, shape_name: str, mesh, mesh_name: str,
+             reduced: bool = False) -> dict:
+    from repro.launch.steps import build_cell
+
+    rec = {"arch": arch_id, "shape": shape_name, "mesh": mesh_name,
+           "devices": int(len(mesh.devices.flatten()))}
+    try:
+        cell = build_cell(arch_id, shape_name, mesh=mesh, reduced=reduced)
+        t0 = time.time()
+        jitted = jax.jit(
+            cell.fn,
+            in_shardings=cell.in_shardings,
+            out_shardings=cell.out_shardings,
+            donate_argnums=cell.donate_argnums,
+        )
+        with mesh:
+            lowered = jitted.lower(*cell.args)
+        rec["t_lower_s"] = round(time.time() - t0, 2)
+
+        t0 = time.time()
+        compiled = lowered.compile()
+        rec["t_compile_s"] = round(time.time() - t0, 2)
+
+        ma = compiled.memory_analysis()
+        rec["memory"] = {
+            "argument_bytes": int(ma.argument_size_in_bytes),
+            "output_bytes": int(ma.output_size_in_bytes),
+            "temp_bytes": int(ma.temp_size_in_bytes),
+            "alias_bytes": int(ma.alias_size_in_bytes),
+            "peak_bytes_est": int(ma.argument_size_in_bytes
+                                  + ma.output_size_in_bytes
+                                  + ma.temp_size_in_bytes
+                                  - ma.alias_size_in_bytes),
+        }
+        ca = compiled.cost_analysis() or {}
+        rec["cost"] = {
+            "flops_per_device": float(ca.get("flops", 0.0)),
+            "bytes_accessed_per_device": float(ca.get("bytes accessed", 0.0)),
+            "transcendentals": float(ca.get("transcendentals", 0.0)),
+        }
+        txt = compiled.as_text()
+        rec["collectives"] = collective_bytes(txt)
+        rec["hlo_chars"] = len(txt)
+        rec["ok"] = True
+        del compiled, lowered, jitted, cell, txt
+        gc.collect()
+    except Exception as e:  # noqa: BLE001 — record and continue
+        rec["ok"] = False
+        rec["error"] = f"{type(e).__name__}: {e}"
+        rec["traceback"] = traceback.format_exc()[-4000:]
+    return rec
+
+
+def all_cells():
+    from repro.configs import list_archs
+    return [(a.arch_id, s) for a in list_archs().values() for s in a.shapes]
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch")
+    ap.add_argument("--shape")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--both-meshes", action="store_true")
+    ap.add_argument("--reduced", action="store_true")
+    ap.add_argument("--out", default="results/dryrun")
+    args = ap.parse_args()
+
+    from repro.launch.mesh import make_production_mesh
+
+    meshes = []
+    if args.both_meshes:
+        meshes = [(make_production_mesh(multi_pod=False), "pod16x16"),
+                  (make_production_mesh(multi_pod=True), "multipod2x16x16")]
+    else:
+        mp = bool(args.multi_pod)
+        meshes = [(make_production_mesh(multi_pod=mp),
+                   "multipod2x16x16" if mp else "pod16x16")]
+
+    cells = all_cells() if args.all else [(args.arch, args.shape)]
+    outdir = Path(args.out)
+
+    for mesh, mesh_name in meshes:
+        for arch_id, shape_name in cells:
+            path = outdir / mesh_name / f"{arch_id}__{shape_name}.json"
+            path.parent.mkdir(parents=True, exist_ok=True)
+            t0 = time.time()
+            rec = run_cell(arch_id, shape_name, mesh, mesh_name, args.reduced)
+            path.write_text(json.dumps(rec, indent=1))
+            status = "OK " if rec.get("ok") else "FAIL"
+            print(f"[{status}] {mesh_name:16s} {arch_id:24s} {shape_name:16s} "
+                  f"{time.time() - t0:6.1f}s "
+                  + (f"peak={rec['memory']['peak_bytes_est']/2**30:.2f}GiB "
+                     f"flops/dev={rec['cost']['flops_per_device']:.3g}"
+                     if rec.get("ok") else rec.get("error", "")[:120]),
+                  flush=True)
+
+
+if __name__ == "__main__":
+    main()

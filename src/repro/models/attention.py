@@ -1,0 +1,245 @@
+"""Attention modules: GQA (dense LMs) and MLA (DeepSeek-V2-Lite).
+
+Two execution paths per module:
+- XLA path (default): chunked causal attention (lax.scan over query
+  chunks) so the materialized score tile stays O(chunk × S) — this is
+  what the multi-pod dry-run lowers, and what GSPMD partitions (heads
+  over `model`, batch over `data`(×`pod`), KV sequence over `model` for
+  long-context decode with the LSE merge happening inside the softmax
+  reduction XLA emits).
+- Pallas path (TPU): kernels/flash_attention + kernels/decode_attention.
+
+Decode keeps a (layers-stacked) KV cache pytree and supports GQA and
+MLA's compressed-KV cache with the absorbed-matmul formulation.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from .layers import apply_rope, dense_init, rope_angles
+
+__all__ = ["AttnConfig", "gqa_init", "gqa_forward", "gqa_decode", "MLAConfig",
+           "mla_init", "mla_forward", "mla_decode", "chunked_causal_attention"]
+
+
+# --------------------------------------------------------------------- GQA
+@dataclasses.dataclass(frozen=True)
+class AttnConfig:
+    d_model: int
+    n_heads: int
+    n_kv: int
+    d_head: int
+    rope_theta: float = 10000.0
+    q_chunk: int = 512           # XLA-path query chunk
+    use_flash: bool = False      # Pallas kernel path
+
+
+def gqa_init(rng, cfg: AttnConfig, dtype=jnp.float32) -> Dict:
+    k1, k2, k3, k4 = jax.random.split(rng, 4)
+    d, h, kv, dh = cfg.d_model, cfg.n_heads, cfg.n_kv, cfg.d_head
+    return {
+        "wq": dense_init(k1, (d, h * dh), dtype=dtype),
+        "wk": dense_init(k2, (d, kv * dh), dtype=dtype),
+        "wv": dense_init(k3, (d, kv * dh), dtype=dtype),
+        "wo": dense_init(k4, (h * dh, d), scale=(h * dh) ** -0.5, dtype=dtype),
+    }
+
+
+def chunked_causal_attention(q, k, v, q_chunk: int, causal_offset: int = 0):
+    """q: (B, S, H, D); k, v: (B, Skv, Hkv, D). Scan over q chunks keeps the
+    score tile at (B, H, q_chunk, Skv) — the XLA analogue of flash tiling."""
+    b, s, h, d = q.shape
+    skv, hkv = k.shape[1], k.shape[2]
+    dv = v.shape[-1]
+    group = h // hkv
+    scale = d ** -0.5
+    nchunks = max(s // q_chunk, 1)
+    assert s % nchunks == 0
+    qc = q.reshape(b, nchunks, s // nchunks, h, d)
+
+    kg = k.astype(jnp.float32)
+    vg = v.astype(jnp.float32)
+
+    def chunk(ci):
+        qi = qc[:, ci].astype(jnp.float32)                       # (B, cq, H, D)
+        qi4 = qi.reshape(b, -1, hkv, group, d)
+        sc = jnp.einsum("bqkgd,bskd->bkgqs", qi4, kg) * scale    # (B,hkv,g,cq,S)
+        q_pos = ci * (s // nchunks) + jnp.arange(s // nchunks) + causal_offset
+        mask = q_pos[:, None] >= jnp.arange(skv)[None, :]
+        sc = jnp.where(mask[None, None, None], sc, -jnp.inf)
+        p = jax.nn.softmax(sc, axis=-1)
+        o = jnp.einsum("bkgqs,bskd->bqkgd", p, vg)
+        return o.reshape(b, -1, h, dv)
+
+    out = lax.map(chunk, jnp.arange(nchunks))                    # (nc, B, cq, H, Dv)
+    return jnp.moveaxis(out, 0, 1).reshape(b, s, h, dv)
+
+
+def gqa_forward(params: Dict, x: jnp.ndarray, cfg: AttnConfig,
+                positions: Optional[jnp.ndarray] = None,
+                return_cache: bool = False):
+    """Training / prefill. x: (B, S, d_model)."""
+    b, s, d = x.shape
+    h, kv, dh = cfg.n_heads, cfg.n_kv, cfg.d_head
+    q = (x @ params["wq"]).reshape(b, s, h, dh)
+    k = (x @ params["wk"]).reshape(b, s, kv, dh)
+    v = (x @ params["wv"]).reshape(b, s, kv, dh)
+
+    pos = jnp.arange(s)[None] if positions is None else positions
+    cos, sin = rope_angles(pos, dh, cfg.rope_theta)
+    q = apply_rope(q, cos, sin)
+    k = apply_rope(k, cos, sin)
+
+    if cfg.use_flash:
+        from repro.kernels.flash_attention.ops import flash_attention
+        o = flash_attention(
+            q.transpose(0, 2, 1, 3), k.transpose(0, 2, 1, 3), v.transpose(0, 2, 1, 3),
+            causal=True,
+        ).transpose(0, 2, 1, 3)
+    else:
+        o = chunked_causal_attention(q, k, v, cfg.q_chunk)
+
+    out = o.astype(x.dtype).reshape(b, s, h * dh) @ params["wo"]
+    if return_cache:
+        return out, {"k": k, "v": v}
+    return out
+
+
+def gqa_decode(params: Dict, x_tok: jnp.ndarray, cache: Dict, pos: jnp.ndarray,
+               cfg: AttnConfig) -> Tuple[jnp.ndarray, Dict]:
+    """One-token decode. x_tok: (B, d_model); cache k/v: (B, S, Hkv, D);
+    pos: (B,) current position (number of tokens already cached)."""
+    b, d = x_tok.shape
+    h, kv, dh = cfg.n_heads, cfg.n_kv, cfg.d_head
+    s_max = cache["k"].shape[1]
+
+    q = (x_tok @ params["wq"]).reshape(b, 1, h, dh)
+    k_new = (x_tok @ params["wk"]).reshape(b, 1, kv, dh)
+    v_new = (x_tok @ params["wv"]).reshape(b, 1, kv, dh)
+
+    cos, sin = rope_angles(pos[:, None], dh, cfg.rope_theta)
+    q = apply_rope(q, cos, sin)[:, 0]                            # (B, h, dh)
+    k_new = apply_rope(k_new, cos, sin)
+
+    # In-place cache update at position `pos`: boolean select (NOT
+    # one-hot arithmetic — the f32 multiply upcasts and forces SPMD
+    # "involuntary full rematerialization" resharding copies of the
+    # whole cache; EXPERIMENTS.md §Perf).
+    at_pos = (jnp.arange(s_max)[None, :] == pos[:, None])          # (B, S) bool
+    k_cache = jnp.where(at_pos[..., None, None], k_new, cache["k"])
+    v_cache = jnp.where(at_pos[..., None, None], v_new, cache["v"])
+
+    group = h // kv
+    q4 = q.reshape(b, kv, group, dh).astype(jnp.float32)
+    kf = k_cache.astype(jnp.float32)
+    vf = v_cache.astype(jnp.float32)
+    sc = jnp.einsum("bkgd,bskd->bkgs", q4, kf) * (dh ** -0.5)
+    valid = jnp.arange(s_max)[None] <= pos[:, None]               # (B, S)
+    sc = jnp.where(valid[:, None, None], sc, -jnp.inf)
+    p = jax.nn.softmax(sc, axis=-1)
+    o = jnp.einsum("bkgs,bskd->bkgd", p, vf).reshape(b, h * dh)
+
+    out = o.astype(x_tok.dtype) @ params["wo"]
+    return out, {"k": k_cache, "v": v_cache}
+
+
+# --------------------------------------------------------------------- MLA
+@dataclasses.dataclass(frozen=True)
+class MLAConfig:
+    d_model: int
+    n_heads: int
+    kv_lora_rank: int = 512
+    d_nope: int = 128
+    d_rope: int = 64
+    d_v: int = 128
+    rope_theta: float = 10000.0
+    q_chunk: int = 512
+
+
+def mla_init(rng, cfg: MLAConfig, dtype=jnp.float32) -> Dict:
+    ks = jax.random.split(rng, 5)
+    d, h = cfg.d_model, cfg.n_heads
+    return {
+        "wq": dense_init(ks[0], (d, h * (cfg.d_nope + cfg.d_rope)), dtype=dtype),
+        "w_dkv": dense_init(ks[1], (d, cfg.kv_lora_rank + cfg.d_rope), dtype=dtype),
+        "w_uk": dense_init(ks[2], (cfg.kv_lora_rank, h * cfg.d_nope), dtype=dtype),
+        "w_uv": dense_init(ks[3], (cfg.kv_lora_rank, h * cfg.d_v), dtype=dtype),
+        "wo": dense_init(ks[4], (h * cfg.d_v, d), scale=(h * cfg.d_v) ** -0.5, dtype=dtype),
+    }
+
+
+def mla_forward(params: Dict, x: jnp.ndarray, cfg: MLAConfig,
+                return_cache: bool = False):
+    """Training / prefill with materialized per-head K/V (cheap at train
+    time); the cache stores only (c_kv, k_rope) — MLA's point."""
+    b, s, d = x.shape
+    h = cfg.n_heads
+    dn, dr, dv, r = cfg.d_nope, cfg.d_rope, cfg.d_v, cfg.kv_lora_rank
+
+    q = (x @ params["wq"]).reshape(b, s, h, dn + dr)
+    q_nope, q_rope = q[..., :dn], q[..., dn:]
+    ckv = x @ params["w_dkv"]                                    # (B, S, r + dr)
+    c, k_rope = ckv[..., :r], ckv[..., r:]
+
+    pos = jnp.arange(s)[None]
+    cos, sin = rope_angles(pos, dr, cfg.rope_theta)
+    q_rope = apply_rope(q_rope, cos, sin)
+    k_rope = apply_rope(k_rope[:, :, None, :], cos, sin)         # (B, S, 1, dr)
+
+    k_nope = (c @ params["w_uk"]).reshape(b, s, h, dn)
+    v = (c @ params["w_uv"]).reshape(b, s, h, dv)
+    k_full = jnp.concatenate([k_nope, jnp.broadcast_to(k_rope, (b, s, h, dr))], -1)
+    q_full = jnp.concatenate([q_nope, q_rope], -1)
+
+    o = chunked_causal_attention(q_full, k_full, v, cfg.q_chunk)
+    out = o.astype(x.dtype).reshape(b, s, h * dv) @ params["wo"]
+    if return_cache:
+        return out, {"c": c, "k_rope": k_rope[:, :, 0, :]}
+    return out
+
+
+def mla_decode(params: Dict, x_tok: jnp.ndarray, cache: Dict, pos: jnp.ndarray,
+               cfg: MLAConfig) -> Tuple[jnp.ndarray, Dict]:
+    """Absorbed-matmul MLA decode: scores are taken directly against the
+    compressed cache — q_nope is mapped into c-space through W_uk and the
+    value side stays compressed until the output projection.  Per-token
+    cache traffic is (r + d_rope) instead of 2·h·d_head."""
+    b, d = x_tok.shape
+    h = cfg.n_heads
+    dn, dr, dv, r = cfg.d_nope, cfg.d_rope, cfg.d_v, cfg.kv_lora_rank
+    s_max = cache["c"].shape[1]
+
+    q = (x_tok @ params["wq"]).reshape(b, h, dn + dr)
+    q_nope, q_rope = q[..., :dn], q[..., dn:]
+    cos, sin = rope_angles(pos[:, None], dr, cfg.rope_theta)
+    q_rope = apply_rope(q_rope[:, None], cos, sin)[:, 0]          # (B, h, dr)
+
+    ckv = x_tok @ params["w_dkv"]
+    c_new, k_rope_new = ckv[..., :r], ckv[..., r:]
+    k_rope_new = apply_rope(k_rope_new[:, None, None, :], cos, sin)[:, 0, 0]
+
+    at_pos = (jnp.arange(s_max)[None, :] == pos[:, None])          # (B, S) bool
+    c_cache = jnp.where(at_pos[..., None], c_new[:, None], cache["c"])
+    kr_cache = jnp.where(at_pos[..., None], k_rope_new[:, None], cache["k_rope"])
+
+    # absorb W_uk: q_c (B, h, r) = q_nope @ W_uk per head
+    w_uk = params["w_uk"].reshape(r, h, dn)
+    q_c = jnp.einsum("bhd,rhd->bhr", q_nope.astype(jnp.float32), w_uk.astype(jnp.float32))
+    sc = jnp.einsum("bhr,bsr->bhs", q_c, c_cache.astype(jnp.float32))
+    sc = sc + jnp.einsum("bhd,bsd->bhs", q_rope.astype(jnp.float32), kr_cache.astype(jnp.float32))
+    sc = sc * ((dn + dr) ** -0.5)
+    valid = jnp.arange(s_max)[None] <= pos[:, None]
+    sc = jnp.where(valid[:, None], sc, -jnp.inf)
+    p = jax.nn.softmax(sc, axis=-1)
+
+    # weighted compressed values, then decompress once per head
+    ctx = jnp.einsum("bhs,bsr->bhr", p, c_cache.astype(jnp.float32))   # (B, h, r)
+    w_uv = params["w_uv"].reshape(r, h, dv)
+    o = jnp.einsum("bhr,rhd->bhd", ctx, w_uv.astype(jnp.float32)).reshape(b, h * dv)
+    out = o.astype(x_tok.dtype) @ params["wo"]
+    return out, {"c": c_cache, "k_rope": kr_cache}

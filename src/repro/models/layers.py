@@ -1,0 +1,79 @@
+"""Shared model layers: norms, RoPE, MLPs, initializers.
+
+All modules are param-dict + pure-function style (pjit/shard_map
+friendly); parameter trees are plain nested dicts so sharding rules can
+pattern-match on path names.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict
+
+import jax
+import jax.numpy as jnp
+
+__all__ = [
+    "dense_init", "rms_norm", "layer_norm", "apply_rope", "rope_angles",
+    "mlp_init", "mlp_apply",
+]
+
+PyTree = Any
+
+
+def dense_init(rng, shape, scale=None, dtype=jnp.float32):
+    scale = (shape[0] ** -0.5) if scale is None else scale
+    return (jax.random.truncated_normal(rng, -2, 2, shape, jnp.float32) * scale).astype(dtype)
+
+
+def rms_norm(x: jnp.ndarray, w: jnp.ndarray, eps: float = 1e-6) -> jnp.ndarray:
+    x32 = x.astype(jnp.float32)
+    var = jnp.mean(x32 * x32, axis=-1, keepdims=True)
+    return (x32 * jax.lax.rsqrt(var + eps)).astype(x.dtype) * w
+
+
+def layer_norm(x, w, b, eps: float = 1e-6):
+    x32 = x.astype(jnp.float32)
+    mu = x32.mean(-1, keepdims=True)
+    var = ((x32 - mu) ** 2).mean(-1, keepdims=True)
+    return ((x32 - mu) * jax.lax.rsqrt(var + eps)).astype(x.dtype) * w + b
+
+
+def rope_angles(positions: jnp.ndarray, dim: int, theta: float = 10000.0):
+    """positions (...,) -> (cos, sin) each (..., dim/2), float32."""
+    freqs = 1.0 / (theta ** (jnp.arange(0, dim, 2, dtype=jnp.float32) / dim))
+    ang = positions.astype(jnp.float32)[..., None] * freqs
+    return jnp.cos(ang), jnp.sin(ang)
+
+
+def apply_rope(x: jnp.ndarray, cos: jnp.ndarray, sin: jnp.ndarray) -> jnp.ndarray:
+    """x: (..., S, H, D) with cos/sin (..., S, D/2) — rotate-half convention."""
+    d2 = x.shape[-1] // 2
+    x1, x2 = x[..., :d2], x[..., d2:]
+    c = cos[..., None, :]
+    s = sin[..., None, :]
+    return jnp.concatenate(
+        [x1 * c - x2 * s, x2 * c + x1 * s], axis=-1
+    ).astype(x.dtype)
+
+
+def mlp_init(rng, d_model: int, d_ff: int, kind: str = "swiglu", dtype=jnp.float32) -> Dict:
+    k1, k2, k3 = jax.random.split(rng, 3)
+    if kind == "swiglu":
+        return {
+            "w_gate": dense_init(k1, (d_model, d_ff), dtype=dtype),
+            "w_up": dense_init(k2, (d_model, d_ff), dtype=dtype),
+            "w_down": dense_init(k3, (d_ff, d_model), dtype=dtype),
+        }
+    return {  # plain gelu MLP (starcoder2-style)
+        "w_up": dense_init(k1, (d_model, d_ff), dtype=dtype),
+        "b_up": jnp.zeros((d_ff,), dtype),
+        "w_down": dense_init(k2, (d_ff, d_model), dtype=dtype),
+        "b_down": jnp.zeros((d_model,), dtype),
+    }
+
+
+def mlp_apply(params: Dict, x: jnp.ndarray, kind: str = "swiglu") -> jnp.ndarray:
+    if kind == "swiglu":
+        g = jax.nn.silu(x @ params["w_gate"])
+        return (g * (x @ params["w_up"])) @ params["w_down"]
+    h = jax.nn.gelu(x @ params["w_up"] + params["b_up"])
+    return h @ params["w_down"] + params["b_down"]

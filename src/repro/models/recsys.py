@@ -1,0 +1,268 @@
+"""RecSys ranking models: Wide&Deep, DeepFM, DCN-v2, BERT4Rec.
+
+All sparse features go through one unified embedding surface: a single
+(n_fields · vocab_per_field, dim) table indexed with per-field offsets
+(quotient layout), looked up via the EmbeddingBag op (kernels/
+embedding_bag) — JAX has no native EmbeddingBag, so this IS part of the
+system.  Tables row-shard over `model`; batch shards over the data
+axes (distributed/sharding_rules.py).
+
+`retrieval_cand` (1 query × 1M candidates) is a batched-dot scoring
+pass: CTR models score candidate feature rows in one forward; BERT4Rec
+encodes the history once and dots with the (sharded) item table +
+per-shard top-k merge.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.embedding_bag.ops import embedding_bag
+from .layers import dense_init, layer_norm
+
+__all__ = ["RecsysConfig", "B4RConfig", "wide_deep_init", "wide_deep_forward",
+           "deepfm_init", "deepfm_forward", "dcn_init", "dcn_forward",
+           "bert4rec_init", "bert4rec_forward", "bert4rec_score_items",
+           "bce_loss", "retrieval_topk"]
+
+
+@dataclasses.dataclass(frozen=True)
+class RecsysConfig:
+    n_sparse: int                 # number of categorical fields
+    vocab_per_field: int
+    embed_dim: int
+    mlp_dims: Tuple[int, ...]
+    n_dense: int = 0              # continuous features (dcn-v2: 13)
+    n_cross_layers: int = 0       # dcn-v2
+    interaction: str = "concat"   # concat | fm | cross | bidir-seq
+    param_dtype: object = jnp.float32
+    batch_over_model: bool = False  # reduce-scatter lookup + model-sharded tower
+
+    @property
+    def total_vocab(self) -> int:
+        return self.n_sparse * self.vocab_per_field
+
+
+def _field_offsets(cfg: RecsysConfig) -> jnp.ndarray:
+    return (jnp.arange(cfg.n_sparse) * cfg.vocab_per_field).astype(jnp.int32)
+
+
+def _lookup(table: jnp.ndarray, sparse_ids: jnp.ndarray, cfg: RecsysConfig,
+            mesh=None) -> jnp.ndarray:
+    """sparse_ids (B, n_sparse) per-field local ids → (B, n_sparse, dim).
+    With a mesh, uses the shard_map row-sharded lookup (no table gather)."""
+    idx = sparse_ids + _field_offsets(cfg)[None, :]
+    if mesh is not None:
+        from repro.distributed.embedding_ops import sharded_lookup, sharded_lookup_rs
+        from repro.distributed.sharding_rules import data_axes
+        if getattr(cfg, "batch_over_model", False):
+            return sharded_lookup_rs(table, idx, mesh, data_axes=data_axes(mesh))
+        return sharded_lookup(table, idx, mesh, data_axes=data_axes(mesh))
+    return jnp.take(table, idx, axis=0)
+
+
+def _bag_sum(table: jnp.ndarray, idx: jnp.ndarray, mesh=None) -> jnp.ndarray:
+    if mesh is not None:
+        from repro.distributed.embedding_ops import sharded_bag_sum
+        from repro.distributed.sharding_rules import data_axes
+        return sharded_bag_sum(table, idx, mesh, data_axes=data_axes(mesh))
+    return embedding_bag(table, idx, mode="sum")
+
+
+def _mlp_init(rng, dims, dtype):
+    params = {}
+    keys = jax.random.split(rng, len(dims) - 1)
+    for i, (a, b) in enumerate(zip(dims[:-1], dims[1:])):
+        params[f"w{i}"] = dense_init(keys[i], (a, b), dtype=dtype)
+        params[f"b{i}"] = jnp.zeros((b,), dtype)
+    return params
+
+
+def _mlp_apply(params, x, n, final_relu=False):
+    for i in range(n):
+        x = x @ params[f"w{i}"] + params[f"b{i}"]
+        if i < n - 1 or final_relu:
+            x = jax.nn.relu(x)
+    return x
+
+
+def bce_loss(logits: jnp.ndarray, labels: jnp.ndarray) -> jnp.ndarray:
+    logits = logits.astype(jnp.float32)
+    return jnp.mean(
+        jnp.maximum(logits, 0) - logits * labels + jnp.log1p(jnp.exp(-jnp.abs(logits)))
+    )
+
+
+# ------------------------------------------------------------- Wide & Deep
+def wide_deep_init(rng, cfg: RecsysConfig) -> Dict:
+    k1, k2, k3, k4 = jax.random.split(rng, 4)
+    dt = cfg.param_dtype
+    mlp_dims = (cfg.n_sparse * cfg.embed_dim + cfg.n_dense,) + cfg.mlp_dims + (1,)
+    return {
+        "wide": dense_init(k1, (cfg.total_vocab, 1), scale=0.01, dtype=dt),
+        "embed": dense_init(k2, (cfg.total_vocab, cfg.embed_dim), scale=0.02, dtype=dt),
+        "mlp": _mlp_init(k3, mlp_dims, dt),
+        "wide_dense": dense_init(k4, (max(cfg.n_dense, 1), 1), scale=0.01, dtype=dt),
+        "bias": jnp.zeros((), dt),
+    }
+
+
+def wide_deep_forward(params: Dict, sparse_ids: jnp.ndarray, cfg: RecsysConfig,
+                      dense: Optional[jnp.ndarray] = None, mesh=None) -> jnp.ndarray:
+    idx = sparse_ids + _field_offsets(cfg)[None, :]
+    wide = _bag_sum(params["wide"], idx, mesh)[:, 0]                    # (B,)
+    emb = _lookup(params["embed"], sparse_ids, cfg, mesh)               # (B, F, E)
+    deep_in = emb.reshape(emb.shape[0], -1)
+    if cfg.n_dense:
+        deep_in = jnp.concatenate([dense, deep_in], axis=1)
+        wide = wide + (dense @ params["wide_dense"])[:, 0]
+    deep = _mlp_apply(params["mlp"], deep_in, len(cfg.mlp_dims) + 1)[:, 0]
+    return wide + deep + params["bias"]
+
+
+# ------------------------------------------------------------------ DeepFM
+def deepfm_init(rng, cfg: RecsysConfig) -> Dict:
+    k1, k2, k3 = jax.random.split(rng, 3)
+    dt = cfg.param_dtype
+    mlp_dims = (cfg.n_sparse * cfg.embed_dim,) + cfg.mlp_dims + (1,)
+    return {
+        "first_order": dense_init(k1, (cfg.total_vocab, 1), scale=0.01, dtype=dt),
+        "embed": dense_init(k2, (cfg.total_vocab, cfg.embed_dim), scale=0.02, dtype=dt),
+        "mlp": _mlp_init(k3, mlp_dims, dt),
+        "bias": jnp.zeros((), dt),
+    }
+
+
+def deepfm_forward(params: Dict, sparse_ids: jnp.ndarray, cfg: RecsysConfig,
+                   dense: Optional[jnp.ndarray] = None, mesh=None) -> jnp.ndarray:
+    idx = sparse_ids + _field_offsets(cfg)[None, :]
+    first = _bag_sum(params["first_order"], idx, mesh)[:, 0]
+    emb = _lookup(params["embed"], sparse_ids, cfg, mesh)               # (B, F, E)
+    # FM second order: ½((Σv)² − Σv²) summed over dims
+    s = emb.sum(1)
+    fm = 0.5 * (s * s - (emb * emb).sum(1)).sum(-1)
+    deep = _mlp_apply(params["mlp"], emb.reshape(emb.shape[0], -1),
+                      len(cfg.mlp_dims) + 1)[:, 0]
+    return first + fm + deep + params["bias"]
+
+
+# ------------------------------------------------------------------ DCN-v2
+def dcn_init(rng, cfg: RecsysConfig) -> Dict:
+    ks = jax.random.split(rng, 4 + cfg.n_cross_layers)
+    dt = cfg.param_dtype
+    d0 = cfg.n_dense + cfg.n_sparse * cfg.embed_dim
+    cross = {}
+    for l in range(cfg.n_cross_layers):
+        cross[f"w{l}"] = dense_init(ks[l], (d0, d0), scale=0.02, dtype=dt)
+        cross[f"b{l}"] = jnp.zeros((d0,), dt)
+    mlp_dims = (d0,) + cfg.mlp_dims
+    return {
+        "embed": dense_init(ks[-3], (cfg.total_vocab, cfg.embed_dim), scale=0.02, dtype=dt),
+        "cross": cross,
+        "mlp": _mlp_init(ks[-2], mlp_dims, dt),
+        "head": dense_init(ks[-1], (d0 + cfg.mlp_dims[-1], 1), dtype=dt),
+    }
+
+
+def dcn_forward(params: Dict, sparse_ids: jnp.ndarray, cfg: RecsysConfig,
+                dense: jnp.ndarray, mesh=None) -> jnp.ndarray:
+    emb = _lookup(params["embed"], sparse_ids, cfg, mesh).reshape(sparse_ids.shape[0], -1)
+    x0 = jnp.concatenate([dense, emb], axis=1)                          # (B, d0)
+    x = x0
+    for l in range(cfg.n_cross_layers):
+        x = x0 * (x @ params["cross"][f"w{l}"] + params["cross"][f"b{l}"]) + x
+    deep = _mlp_apply(params["mlp"], x0, len(cfg.mlp_dims), final_relu=True)
+    out = jnp.concatenate([x, deep], axis=1) @ params["head"]
+    return out[:, 0]
+
+
+# ---------------------------------------------------------------- BERT4Rec
+@dataclasses.dataclass(frozen=True)
+class B4RConfig:
+    n_items: int
+    embed_dim: int = 64
+    n_blocks: int = 2
+    n_heads: int = 2
+    seq_len: int = 200
+    param_dtype: object = jnp.float32
+
+
+def bert4rec_init(rng, cfg: "B4RConfig") -> Dict:
+    ks = jax.random.split(rng, 2 + cfg.n_blocks)
+    dt = cfg.param_dtype
+    e = cfg.embed_dim
+    blocks = {}
+    for b in range(cfg.n_blocks):
+        kb = jax.random.split(ks[2 + b], 5)
+        blocks[f"block_{b}"] = {
+            "wq": dense_init(kb[0], (e, e), dtype=dt),
+            "wk": dense_init(kb[1], (e, e), dtype=dt),
+            "wv": dense_init(kb[2], (e, e), dtype=dt),
+            "wo": dense_init(kb[3], (e, e), dtype=dt),
+            "mlp": _mlp_init(kb[4], (e, 4 * e, e), dt),
+            "ln1_w": jnp.ones((e,), dt), "ln1_b": jnp.zeros((e,), dt),
+            "ln2_w": jnp.ones((e,), dt), "ln2_b": jnp.zeros((e,), dt),
+        }
+    # +2 for [PAD]=n_items, [MASK]=n_items+1; rows padded to a multiple of
+    # 256 so the table row-shards on any mesh
+    n_rows = ((cfg.n_items + 2 + 255) // 256) * 256
+    return {
+        "item_embed": dense_init(ks[0], (n_rows, e), scale=0.02, dtype=dt),
+        "pos_embed": dense_init(ks[1], (cfg.seq_len, e), scale=0.02, dtype=dt),
+        "blocks": blocks,
+        "ln_f_w": jnp.ones((e,), dt), "ln_f_b": jnp.zeros((e,), dt),
+    }
+
+
+def bert4rec_forward(params: Dict, item_seq: jnp.ndarray, cfg: "B4RConfig",
+                     mesh=None) -> jnp.ndarray:
+    """Bidirectional encoder. item_seq (B, S) int32 → hidden (B, S, E)."""
+    b, s = item_seq.shape
+    e, h = cfg.embed_dim, cfg.n_heads
+    dh = e // h
+    if mesh is not None:
+        import numpy as _np
+        from repro.distributed.embedding_ops import sharded_lookup
+        from repro.distributed.sharding_rules import data_axes
+        da = data_axes(mesh)
+        dp_size = int(_np.prod([mesh.shape[a] for a in da])) if da else 1
+        if b % dp_size != 0 or b < dp_size:
+            da = ()          # B=1 retrieval: replicate rows, keep table sharded
+        emb = sharded_lookup(params["item_embed"], item_seq, mesh, data_axes=da)
+    else:
+        emb = jnp.take(params["item_embed"], item_seq, axis=0)
+    x = emb + params["pos_embed"][None, :s]
+    pad_mask = item_seq != cfg.n_items                                  # PAD id
+
+    for bi in range(cfg.n_blocks):
+        bp = params["blocks"][f"block_{bi}"]
+        hx = layer_norm(x, bp["ln1_w"], bp["ln1_b"])
+        q = (hx @ bp["wq"]).reshape(b, s, h, dh)
+        k = (hx @ bp["wk"]).reshape(b, s, h, dh)
+        v = (hx @ bp["wv"]).reshape(b, s, h, dh)
+        sc = jnp.einsum("bqhd,bkhd->bhqk", q, k).astype(jnp.float32) * dh ** -0.5
+        sc = jnp.where(pad_mask[:, None, None, :], sc, -jnp.inf)
+        p = jax.nn.softmax(sc, axis=-1)
+        o = jnp.einsum("bhqk,bkhd->bqhd", p, v.astype(jnp.float32)).astype(x.dtype)
+        x = x + o.reshape(b, s, e) @ bp["wo"]
+        hx = layer_norm(x, bp["ln2_w"], bp["ln2_b"])
+        x = x + _mlp_apply(bp["mlp"], hx, 2)
+    return layer_norm(x, params["ln_f_w"], params["ln_f_b"])
+
+
+def bert4rec_score_items(params: Dict, hidden_at_mask: jnp.ndarray,
+                         cfg: "B4RConfig") -> jnp.ndarray:
+    """Tied-weight output: (B, E) → (B, n_items) scores."""
+    return hidden_at_mask @ params["item_embed"][: cfg.n_items].T
+
+
+# -------------------------------------------------------------- retrieval
+def retrieval_topk(query_vec: jnp.ndarray, cand_emb: jnp.ndarray, k: int = 100):
+    """Score 1×N candidates with a batched dot and take top-k.  With
+    cand_emb sharded over `model`, GSPMD computes per-shard partial
+    scores; top-k over the gathered score vector."""
+    scores = (cand_emb @ query_vec[:, None])[:, 0]                      # (N,)
+    return jax.lax.top_k(scores, k)

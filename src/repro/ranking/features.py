@@ -1,0 +1,59 @@
+"""Query-document features for the L1 ranker.
+
+Computed directly from the bitpacked occupancy tensor (i.e. from
+exactly the evidence the match engine sees) plus per-document side data
+(static rank, field lengths) and per-query term IDFs.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.index.blocks import WORD_BITS
+from repro.index.corpus import N_FIELDS
+from repro.index.builder import MAX_QUERY_TERMS
+
+__all__ = ["FEATURE_DIM", "unpack_occupancy", "doc_features"]
+
+FEATURE_DIM = 3 * N_FIELDS + 3  # 15 for 4 fields
+
+
+def unpack_occupancy(occ: jnp.ndarray) -> jnp.ndarray:
+    """(n_blocks, T, F, W) uint32 -> (n_docs_padded, T, F) bool."""
+    shifts = jnp.arange(WORD_BITS, dtype=jnp.uint32)
+    bits = (occ[..., None] >> shifts) & jnp.uint32(1)          # (nb, T, F, W, 32)
+    nb, t, f = occ.shape[0], occ.shape[1], occ.shape[2]
+    bits = bits.reshape(nb, t, f, -1).astype(bool)             # (nb, T, F, D)
+    return bits.transpose(0, 3, 1, 2).reshape(nb * bits.shape[3], t, f)
+
+
+def doc_features(
+    occ: jnp.ndarray,          # (n_blocks, T, F, W) uint32
+    idf: jnp.ndarray,          # (T,) float32 (0 for padded slots)
+    term_present: jnp.ndarray, # (T,) bool
+    static_rank: jnp.ndarray,  # (n_docs_padded,) float32
+    doc_len: jnp.ndarray,      # (n_docs_padded, F) float32 (normalized log lengths)
+) -> jnp.ndarray:
+    """Per-document features, (n_docs_padded, FEATURE_DIM) float32."""
+    hits = unpack_occupancy(occ).astype(jnp.float32)           # (D, T, F)
+    tp = term_present.astype(jnp.float32)
+    nt = jnp.maximum(tp.sum(), 1.0)
+    hits = hits * tp[None, :, None]
+
+    field_cov = hits.sum(1) / nt                                       # (D, F)
+    idf_sum = jnp.maximum((idf * tp).sum(), 1e-6)
+    field_idf = (hits * idf[None, :, None]).sum(1) / idf_sum           # (D, F)
+    any_field = hits.max(2)                                            # (D, T)
+    terms_matched = any_field.sum(1) / nt                              # (D,)
+    all_matched = (any_field.sum(1) >= nt).astype(jnp.float32)         # (D,)
+
+    return jnp.concatenate(
+        [
+            field_cov,
+            field_idf,
+            terms_matched[:, None],
+            all_matched[:, None],
+            static_rank[:, None],
+            doc_len,
+        ],
+        axis=1,
+    )

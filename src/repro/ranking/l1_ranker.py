@@ -1,0 +1,93 @@
+"""The L1 ranker — first rank-and-prune stage of the telescope (paper §3).
+
+A small MLP over query-document features; its score is the paper's
+``g(d)`` relevance estimate inside the reward (Eq. 3) and the ranking
+function for candidate pruning between L0 and L2.  Trained on the
+synthetic graded judgments.  The cascade accepts any scorer with the
+same signature — configs may swap in a recsys arch (wide_deep / deepfm)
+as the g(d) estimator (DESIGN.md §6).
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Dict
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .features import FEATURE_DIM, doc_features
+
+__all__ = ["init_l1", "l1_score", "score_all_docs", "train_l1", "idf_for_terms"]
+
+Params = Dict[str, jnp.ndarray]
+
+
+def init_l1(rng: jax.Array, hidden: int = 32, feature_dim: int = FEATURE_DIM) -> Params:
+    k1, k2, k3 = jax.random.split(rng, 3)
+    s1 = 1.0 / np.sqrt(feature_dim)
+    s2 = 1.0 / np.sqrt(hidden)
+    return {
+        "w1": jax.random.normal(k1, (feature_dim, hidden), jnp.float32) * s1,
+        "b1": jnp.zeros((hidden,), jnp.float32),
+        "w2": jax.random.normal(k2, (hidden, hidden), jnp.float32) * s2,
+        "b2": jnp.zeros((hidden,), jnp.float32),
+        "w3": jax.random.normal(k3, (hidden, 1), jnp.float32) * s2,
+        "b3": jnp.zeros((1,), jnp.float32),
+    }
+
+
+def l1_score(params: Params, feats: jnp.ndarray) -> jnp.ndarray:
+    """(..., FEATURE_DIM) -> (...,) score in (0, 1)."""
+    h = jax.nn.relu(feats @ params["w1"] + params["b1"])
+    h = jax.nn.relu(h @ params["w2"] + params["b2"])
+    return jax.nn.sigmoid((h @ params["w3"] + params["b3"])[..., 0])
+
+
+def score_all_docs(params, occ, idf, term_present, static_rank, doc_len):
+    """Precompute g(d) for every document of one query's occupancy.
+    (Used by the environment: the reward gathers these as docs are
+    recalled.)"""
+    feats = doc_features(occ, idf, term_present, static_rank, doc_len)
+    return l1_score(params, feats)
+
+
+def idf_for_terms(df_body: np.ndarray, n_docs: int, terms: np.ndarray) -> np.ndarray:
+    """Per-query-slot IDF, 0 for padded slots. terms: (Q, T) with -1 pad."""
+    safe = np.clip(terms, 0, None)
+    idf = np.log(n_docs / (1.0 + df_body[safe]))
+    return np.where(terms >= 0, idf, 0.0).astype(np.float32)
+
+
+@jax.jit
+def _l1_adam_step(params, opt_state, feats, targets, weights):
+    from repro.train.optimizer import AdamWConfig, adamw_update
+
+    def loss_fn(p):
+        pred = l1_score(p, feats)
+        return jnp.sum(weights * (pred - targets) ** 2) / jnp.maximum(weights.sum(), 1.0)
+
+    loss, grads = jax.value_and_grad(loss_fn)(params)
+    params, opt_state = adamw_update(params, grads, opt_state, AdamWConfig(lr=3e-3))
+    return params, opt_state, loss
+
+
+def train_l1(params, feats, gains, weights, steps: int = 300, batch: int = 4096, seed: int = 0):
+    """Pointwise regression of gain/4 on features (Adam).
+
+    feats: (N, FEATURE_DIM), gains: (N,) in [0,4], weights: (N,).
+    """
+    from repro.train.optimizer import adamw_init
+
+    rng = np.random.default_rng(seed)
+    targets = jnp.asarray(gains, jnp.float32) / 4.0
+    feats = jnp.asarray(feats, jnp.float32)
+    weights = jnp.asarray(weights, jnp.float32)
+    opt_state = adamw_init(params)
+    n = feats.shape[0]
+    losses = []
+    for _ in range(steps):
+        idx = rng.integers(0, n, size=min(batch, n))
+        params, opt_state, loss = _l1_adam_step(params, opt_state, feats[idx], targets[idx], weights[idx])
+        losses.append(float(loss))
+    return params, losses

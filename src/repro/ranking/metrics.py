@@ -1,0 +1,62 @@
+"""Candidate-set quality and efficiency metrics (paper §5).
+
+NCG — NDCG without position discounting, because L0 candidate sets are
+unordered (Eq. 5–6)::
+
+    CumGain = Σ_{i=1..|D|} gain_i ,  NCG = CumGain / CumGain_ideal
+
+|D| capped at 100 (candidates kept in scan order = static-rank order).
+Efficiency metric is the blocks-accessed accumulator ``u``.  Paired
+relative deltas + a sign-permutation significance test reproduce
+Table 1's reporting.
+"""
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+__all__ = ["ncg_at_k", "batched_ncg", "relative_delta", "paired_permutation_pvalue"]
+
+
+def ncg_at_k(
+    cand: jnp.ndarray,         # (K,) int32 doc ids, -1 pad, scan order
+    judged_ids: jnp.ndarray,   # (J,) int32, -1 pad
+    judged_gains: jnp.ndarray, # (J,) float32
+    k: int = 100,
+) -> jnp.ndarray:
+    cand_k = cand[:k]
+    valid = cand_k >= 0
+    eq = (cand_k[:, None] == judged_ids[None, :]) & (judged_ids[None, :] >= 0)
+    gains = jnp.sum(jnp.where(eq, judged_gains[None, :], 0.0), axis=1)
+    cum_gain = jnp.sum(jnp.where(valid, gains, 0.0))
+
+    j_valid = judged_ids >= 0
+    sorted_gains = jnp.sort(jnp.where(j_valid, judged_gains, 0.0))[::-1]
+    ideal = jnp.sum(sorted_gains[:k])
+    return jnp.where(ideal > 0, cum_gain / ideal, 0.0)
+
+
+@jax.jit
+def batched_ncg(cand, judged_ids, judged_gains):
+    return jax.vmap(ncg_at_k)(cand, judged_ids, judged_gains.astype(jnp.float32))
+
+
+def relative_delta(treatment: np.ndarray, baseline: np.ndarray) -> float:
+    """Mean relative change, as Table 1 reports (%)."""
+    b = np.mean(baseline)
+    return float((np.mean(treatment) - b) / max(b, 1e-9) * 100.0)
+
+
+def paired_permutation_pvalue(
+    treatment: np.ndarray, baseline: np.ndarray, n_perm: int = 2000, seed: int = 0
+) -> float:
+    """Two-sided paired sign-permutation test on the per-query deltas."""
+    rng = np.random.default_rng(seed)
+    d = np.asarray(treatment, np.float64) - np.asarray(baseline, np.float64)
+    obs = abs(d.mean())
+    signs = rng.choice([-1.0, 1.0], size=(n_perm, len(d)))
+    null = np.abs((signs * d[None, :]).mean(axis=1))
+    return float((np.sum(null >= obs) + 1) / (n_perm + 1))

@@ -1,0 +1,139 @@
+"""Optimizers — hand-rolled (no optax in the environment).
+
+AdamW with optional bf16 moment storage (halves optimizer-state HBM —
+how grok-1-314b fits one pod; DESIGN.md §7), SGD+momentum, Adafactor
+(sub-linear memory for the largest configs), global-norm clipping, and
+cosine/linear schedules.  All state is a pytree that shards like the
+parameters (ZeRO-style over `data` when the sharding rules say so).
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Any, Callable, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["AdamWConfig", "adamw_init", "adamw_update", "sgdm_init", "sgdm_update",
+           "adafactor_init", "adafactor_update", "clip_by_global_norm",
+           "cosine_schedule", "linear_warmup"]
+
+PyTree = Any
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamWConfig:
+    lr: float = 1e-3
+    b1: float = 0.9
+    b2: float = 0.999
+    eps: float = 1e-8
+    weight_decay: float = 0.0
+    state_dtype: Any = jnp.float32   # jnp.bfloat16 halves optimizer HBM
+
+
+def adamw_init(params: PyTree, cfg: AdamWConfig = AdamWConfig()):
+    zeros = lambda p: jnp.zeros(p.shape, cfg.state_dtype)
+    return {
+        "mu": jax.tree_util.tree_map(zeros, params),
+        "nu": jax.tree_util.tree_map(zeros, params),
+        "count": jnp.zeros((), jnp.int32),
+    }
+
+
+def adamw_update(params, grads, state, cfg: AdamWConfig = AdamWConfig(),
+                 lr_scale: jnp.ndarray | float = 1.0):
+    count = state["count"] + 1
+    c = count.astype(jnp.float32)
+    bc1 = 1.0 - cfg.b1 ** c
+    bc2 = 1.0 - cfg.b2 ** c
+
+    def upd(p, g, mu, nu):
+        g32 = g.astype(jnp.float32)
+        mu32 = cfg.b1 * mu.astype(jnp.float32) + (1 - cfg.b1) * g32
+        nu32 = cfg.b2 * nu.astype(jnp.float32) + (1 - cfg.b2) * g32 * g32
+        step = (mu32 / bc1) / (jnp.sqrt(nu32 / bc2) + cfg.eps)
+        step = step + cfg.weight_decay * p.astype(jnp.float32)
+        newp = p.astype(jnp.float32) - cfg.lr * lr_scale * step
+        return newp.astype(p.dtype), mu32.astype(cfg.state_dtype), nu32.astype(cfg.state_dtype)
+
+    flat_p, treedef = jax.tree_util.tree_flatten(params)
+    flat_g = treedef.flatten_up_to(grads)
+    flat_mu = treedef.flatten_up_to(state["mu"])
+    flat_nu = treedef.flatten_up_to(state["nu"])
+    res = [upd(p, g, m, n) for p, g, m, n in zip(flat_p, flat_g, flat_mu, flat_nu)]
+    unf = lambda i: jax.tree_util.tree_unflatten(treedef, [r[i] for r in res])
+    return unf(0), {"mu": unf(1), "nu": unf(2), "count": count}
+
+
+def sgdm_init(params: PyTree):
+    return {"mom": jax.tree_util.tree_map(jnp.zeros_like, params)}
+
+
+def sgdm_update(params, grads, state, lr: float = 0.01, beta: float = 0.9):
+    mom = jax.tree_util.tree_map(lambda m, g: beta * m + g, state["mom"], grads)
+    params = jax.tree_util.tree_map(lambda p, m: p - lr * m, params, mom)
+    return params, {"mom": mom}
+
+
+# --------------------------------------------------------------- adafactor
+def adafactor_init(params: PyTree):
+    def init(p):
+        if p.ndim >= 2:
+            return (jnp.zeros(p.shape[:-1], jnp.float32), jnp.zeros(p.shape[:-2] + p.shape[-1:], jnp.float32))
+        return (jnp.zeros(p.shape, jnp.float32), None)
+
+    return {
+        "fac": jax.tree_util.tree_map(init, params),
+        "count": jnp.zeros((), jnp.int32),
+    }
+
+
+def adafactor_update(params, grads, state, lr: float = 1e-2, decay: float = 0.8, eps: float = 1e-30):
+    count = state["count"] + 1
+    beta = 1.0 - count.astype(jnp.float32) ** (-decay)
+
+    def upd(p, g, fac):
+        g32 = g.astype(jnp.float32)
+        sq = g32 * g32 + eps
+        if p.ndim >= 2:
+            r, c = fac
+            r = beta * r + (1 - beta) * sq.mean(-1)
+            c = beta * c + (1 - beta) * sq.mean(-2)
+            denom = jnp.sqrt(r[..., None] * c[..., None, :] / jnp.maximum(r.mean(-1, keepdims=True)[..., None], eps))
+            step = g32 / jnp.maximum(denom, eps)
+            newfac = (r, c)
+        else:
+            v, _ = fac
+            v = beta * v + (1 - beta) * sq
+            step = g32 / jnp.sqrt(v + eps)
+            newfac = (v, None)
+        # relative step size (Adafactor's update clipping, simplified)
+        rms = jnp.sqrt(jnp.mean(step * step) + eps)
+        step = step / jnp.maximum(1.0, rms)
+        return (p.astype(jnp.float32) - lr * step).astype(p.dtype), newfac
+
+    flat_p, treedef = jax.tree_util.tree_flatten(params)
+    flat_g = treedef.flatten_up_to(grads)
+    flat_f = treedef.flatten_up_to(state["fac"])
+    res = [upd(p, g, f) for p, g, f in zip(flat_p, flat_g, flat_f)]
+    unf = lambda i: jax.tree_util.tree_unflatten(treedef, [r[i] for r in res])
+    return unf(0), {"fac": unf(1), "count": count}
+
+
+# ------------------------------------------------------------------ utils
+def clip_by_global_norm(grads: PyTree, max_norm: float) -> Tuple[PyTree, jnp.ndarray]:
+    leaves = jax.tree_util.tree_leaves(grads)
+    norm = jnp.sqrt(sum(jnp.sum(jnp.square(l.astype(jnp.float32))) for l in leaves))
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(norm, 1e-9))
+    return jax.tree_util.tree_map(lambda g: (g.astype(jnp.float32) * scale).astype(g.dtype), grads), norm
+
+
+def cosine_schedule(step: jnp.ndarray, total: int, warmup: int = 0, floor: float = 0.1):
+    warm = jnp.minimum(step / jnp.maximum(warmup, 1), 1.0)
+    t = jnp.clip((step - warmup) / jnp.maximum(total - warmup, 1), 0.0, 1.0)
+    return warm * (floor + (1 - floor) * 0.5 * (1 + jnp.cos(jnp.pi * t)))
+
+
+def linear_warmup(step: jnp.ndarray, warmup: int):
+    return jnp.minimum(step / jnp.maximum(warmup, 1), 1.0)

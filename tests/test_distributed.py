@@ -1,0 +1,52 @@
+"""Multi-device correctness: spawns one subprocess with 8 fake CPU
+devices (XLA_FLAGS must be set before jax init, so this cannot run
+in-process) and asserts sharded-vs-local numerical parity for the MoE
+EP/TP paths, the sharded embedding ops, a sharded LM train step, and
+the websearch serve invariants."""
+import json
+import os
+import subprocess
+import sys
+from pathlib import Path
+
+import pytest
+
+
+@pytest.fixture(scope="module")
+def multidev_results():
+    worker = Path(__file__).parent / "_multidev_worker.py"
+    env = dict(os.environ)
+    env["PYTHONPATH"] = str(Path(__file__).parent.parent / "src")
+    proc = subprocess.run(
+        [sys.executable, str(worker)], capture_output=True, text=True,
+        timeout=900, env=env,
+    )
+    assert proc.returncode == 0, f"worker failed:\n{proc.stderr[-3000:]}"
+    line = [l for l in proc.stdout.splitlines() if l.startswith("RESULT ")][-1]
+    return json.loads(line[len("RESULT "):])
+
+
+def test_moe_ep_parity(multidev_results):
+    assert multidev_results["moe_ep_err"] < 1e-5
+
+
+def test_moe_tp_parity(multidev_results):
+    assert multidev_results["moe_tp_err"] < 2e-4  # cross-shard reduction order
+
+
+def test_sharded_lookup_parity(multidev_results):
+    assert multidev_results["lookup_err"] == 0.0
+
+
+def test_sharded_bag_parity(multidev_results):
+    assert multidev_results["bag_err"] < 1e-6
+
+
+def test_lm_sharded_train_step(multidev_results):
+    assert not multidev_results["lm_sharded_nan"]
+    assert multidev_results["lm_sharded_loss"] > 0
+
+
+def test_websearch_sharded_serve(multidev_results):
+    assert multidev_results["ws_candidates_valid"]
+    assert multidev_results["ws_u_positive"]

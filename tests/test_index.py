@@ -1,0 +1,70 @@
+"""Index substrate: bitpacking, corpus shape, inverted index, occupancy."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.index.blocks import pack_bits, unpack_bits, words_per_block
+from repro.index.builder import MAX_QUERY_TERMS, build_index, query_occupancy
+from repro.index.corpus import A, B, CorpusConfig, N_FIELDS, T, U, generate_corpus
+
+
+@settings(deadline=None, max_examples=25)
+@given(st.integers(1, 8), st.integers(0, 2**32 - 1))
+def test_pack_unpack_roundtrip(words, seed):
+    rng = np.random.default_rng(seed)
+    bits = rng.random(words * 32) < 0.3
+    assert (unpack_bits(pack_bits(bits)) == bits).all()
+
+
+def test_pack_bit_order():
+    bits = np.zeros(64, bool)
+    bits[0] = bits[33] = True
+    w = pack_bits(bits)
+    assert w[0] == 1 and w[1] == 2
+
+
+@pytest.fixture(scope="module")
+def small():
+    corpus = generate_corpus(CorpusConfig(n_docs=512, vocab_size=256, seed=3))
+    index = build_index(corpus, block_docs=128)
+    return corpus, index
+
+
+def test_corpus_field_structure(small):
+    corpus, _ = small
+    # URL ⊆ Title by construction; anchors grow with static rank.
+    for d in range(0, 512, 37):
+        assert np.isin(corpus.field_terms[U][d], corpus.field_terms[T][d]).all()
+    top_anchor = np.mean([len(corpus.field_terms[A][d]) for d in range(32)])
+    tail_anchor = np.mean([len(corpus.field_terms[A][d]) for d in range(480, 512)])
+    assert top_anchor > tail_anchor
+
+
+def test_static_rank_sorted(small):
+    corpus, _ = small
+    assert (np.diff(corpus.static_rank) <= 0).all()
+    assert corpus.static_rank.max() <= 1.0
+
+
+def test_postings_sorted_and_df(small):
+    corpus, index = small
+    for f in range(N_FIELDS):
+        for term in (1, 10, 100):
+            ids = index.postings(term, f)
+            assert (np.diff(ids) > 0).all()  # static-rank (doc id) order
+            assert len(ids) == index.df[term, f]
+
+
+def test_occupancy_matches_postings(small):
+    corpus, index = small
+    terms = [5, 17, 200]
+    occ = query_occupancy(index, terms)
+    assert occ.shape == (index.n_blocks, MAX_QUERY_TERMS, N_FIELDS, words_per_block(128))
+    bits = unpack_bits(occ.transpose(1, 2, 0, 3).reshape(MAX_QUERY_TERMS, N_FIELDS, -1))
+    for t, term in enumerate(terms):
+        for f in range(N_FIELDS):
+            member = np.zeros(index.padded_docs, bool)
+            member[index.postings(term, f)] = True
+            assert (bits[t, f] == member).all()
+    # padded term slots are empty
+    assert not bits[len(terms):].any()

@@ -1,0 +1,166 @@
+"""Match rules, plans, executor and environment semantics."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.environment import EnvConfig, env_reset, env_step, execute_rule
+from repro.core.match_plan import batched_run_plan, make_plan
+from repro.core.match_rules import block_cost, default_rule_library, scan_block
+from repro.core.reward import r_agent, step_reward
+from repro.index.blocks import unpack_bits
+from repro.data.querylog import CAT1, CAT2
+
+
+# ------------------------------------------------------------- scan_block
+def _numpy_scan_block(occ, allowed, required, present):
+    """Oracle: per-doc evaluation of ∧_t ∨_f occ bits."""
+    T, F, W = occ.shape
+    bits = unpack_bits(occ.reshape(T * F, W)).reshape(T, F, W * 32)
+    masked = bits & allowed[:, :, None] & present[:, None, None]
+    tf_or = masked.any(axis=1)                       # (T, D)
+    req = required & present
+    if not req.any():
+        match = np.zeros(W * 32, bool)
+    else:
+        match = tf_or[req].all(axis=0)
+    v_inc = int(tf_or[present].sum())
+    return match, v_inc
+
+
+@settings(deadline=None, max_examples=30)
+@given(st.integers(0, 2**31 - 1), st.integers(1, 4))
+def test_scan_block_matches_oracle(seed, words):
+    rng = np.random.default_rng(seed)
+    T, F = 4, 4
+    occ = rng.integers(0, 2**32, size=(T, F, words), dtype=np.uint32)
+    allowed = rng.random((T, F)) < 0.5
+    required = rng.random(T) < 0.7
+    present = rng.random(T) < 0.8
+    match, v_inc = scan_block(
+        jnp.asarray(occ), jnp.asarray(allowed), jnp.asarray(required), jnp.asarray(present)
+    )
+    exp_match, exp_v = _numpy_scan_block(occ, allowed, required, present)
+    got_match = unpack_bits(np.asarray(match))
+    assert (got_match == exp_match).all()
+    assert int(v_inc) == exp_v
+
+
+@settings(deadline=None, max_examples=20)
+@given(st.integers(0, 2**31 - 1))
+def test_scan_block_field_monotonicity(seed):
+    """Adding allowed fields can only grow the match set."""
+    rng = np.random.default_rng(seed)
+    occ = rng.integers(0, 2**32, size=(4, 4, 2), dtype=np.uint32)
+    allowed = rng.random((4, 4)) < 0.4
+    bigger = allowed | (rng.random((4, 4)) < 0.4)
+    required = np.ones(4, bool)
+    present = np.ones(4, bool)
+    m1, _ = scan_block(jnp.asarray(occ), jnp.asarray(allowed), jnp.asarray(required), jnp.asarray(present))
+    m2, _ = scan_block(jnp.asarray(occ), jnp.asarray(bigger), jnp.asarray(required), jnp.asarray(present))
+    assert int(jnp.sum(m1 & ~m2)) == 0  # m1 ⊆ m2
+
+
+def test_block_cost_counts_planes():
+    allowed = jnp.asarray(np.array([[1, 1, 0, 0], [0, 0, 1, 0], [0, 0, 0, 0], [1, 1, 1, 1]], bool))
+    present = jnp.asarray(np.array([1, 1, 0, 1], bool))
+    assert int(block_cost(allowed, present)) == 2 + 1 + 0 + 4
+
+
+# ------------------------------------------------------------ environment
+@pytest.fixture(scope="module")
+def env_inputs(tiny_system):
+    sys_ = tiny_system
+    qids = np.where(sys_.log.category == CAT1)[0][:8]
+    occ, scores, tp = sys_.batch_inputs(qids)
+    return sys_, occ, scores, tp
+
+
+def test_u_accounting(env_inputs):
+    """u equals planes-per-block × blocks scanned for a single rule."""
+    sys_, occ, scores, tp = env_inputs
+    cfg = sys_.env_cfg
+    rs = sys_.ruleset
+    state = env_reset(cfg)
+    a, r = rs.allowed[0], rs.required[0]
+    s1 = execute_rule(cfg, occ[0], scores[0], tp[0], state, a, r,
+                      jnp.int32(10**9), jnp.int32(10**9))
+    planes = int(block_cost(a, tp[0]))
+    assert int(s1.u) == planes * cfg.n_blocks          # scanned the whole index
+    assert int(s1.block_ptr) == cfg.n_blocks
+
+
+def test_candidates_unique_sorted(env_inputs):
+    sys_, occ, scores, tp = env_inputs
+    cfg = sys_.env_cfg
+    state = env_reset(cfg)
+    s1 = execute_rule(cfg, occ[0], scores[0], tp[0], state,
+                      sys_.ruleset.allowed[0], sys_.ruleset.required[0],
+                      jnp.int32(10**9), jnp.int32(10**9))
+    cand = np.asarray(s1.cand)
+    got = cand[cand >= 0]
+    assert len(np.unique(got)) == len(got)
+    assert (np.diff(got) > 0).all()                    # scan order = doc id order
+    assert int(s1.cand_cnt) == len(got)
+
+
+def test_dedup_across_reset(env_inputs):
+    """Re-running the same rule after a_reset adds no candidates but costs u."""
+    sys_, occ, scores, tp = env_inputs
+    cfg = sys_.env_cfg
+    rs = sys_.ruleset
+    state = env_reset(cfg)
+    step = lambda st, a: env_step(cfg, rs, occ[0], scores[0], tp[0], st, jnp.int32(a))
+    s1 = step(state, 1)
+    s2 = step(s1, cfg.a_reset)
+    assert int(s2.block_ptr) == 0
+    s3 = step(s2, 1)
+    assert int(s3.cand_cnt) == int(s1.cand_cnt)
+    assert int(s3.u) > int(s1.u)
+
+
+def test_stop_is_terminal_and_frozen(env_inputs):
+    sys_, occ, scores, tp = env_inputs
+    cfg = sys_.env_cfg
+    step = lambda st, a: env_step(cfg, sys_.ruleset, occ[0], scores[0], tp[0], st, jnp.int32(a))
+    s1 = step(env_reset(cfg), 0)
+    s2 = step(s1, cfg.a_stop)
+    assert bool(s2.done)
+    s3 = step(s2, 0)  # further rules are no-ops
+    assert int(s3.u) == int(s2.u) and int(s3.cand_cnt) == int(s2.cand_cnt)
+
+
+def test_plan_executor_trajectory(env_inputs):
+    sys_, occ, scores, tp = env_inputs
+    cfg = sys_.env_cfg
+    plan = sys_.plans["CAT1"]
+    final, traj = batched_run_plan(cfg, sys_.ruleset, plan, occ, scores, tp)
+    u = np.asarray(traj["u"])
+    assert u.shape == (occ.shape[0], plan.length)
+    assert (np.diff(u, axis=1) >= 0).all()             # u is cumulative
+    assert (np.asarray(final.u) == u[:, -1]).all()
+
+
+# ----------------------------------------------------------------- reward
+def test_reward_no_progress_penalty(env_inputs):
+    sys_, occ, scores, tp = env_inputs
+    cfg = sys_.env_cfg
+    s0 = env_reset(cfg)
+    s1 = env_step(cfg, sys_.ruleset, occ[0], scores[0], tp[0], s0, jnp.int32(cfg.a_reset))
+    r = step_reward(cfg, s0, s1, jnp.float32(0.0))
+    assert float(r) == pytest.approx(-cfg.no_progress_penalty)
+
+
+def test_r_agent_form(env_inputs):
+    sys_, occ, scores, tp = env_inputs
+    cfg = sys_.env_cfg
+    s0 = env_reset(cfg)
+    s1 = env_step(cfg, sys_.ruleset, occ[0], scores[0], tp[0], s0, jnp.int32(0))
+    ra = float(r_agent(cfg, s1))
+    assert np.isfinite(ra) and ra >= 0.0
+    # manual recompute
+    topn = np.asarray(s1.topn)
+    m = min(max(int(s1.v), 1), cfg.n_top)
+    expect = np.where(np.isfinite(topn[:m]), topn[:m], 0).sum() / (m * max(int(s1.u), 1))
+    assert ra == pytest.approx(float(expect), rel=1e-5)

@@ -1,0 +1,123 @@
+"""NCG metric, query log generation, L1 ranker quality."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.telescope import l1_prune, merge_shard_candidates
+from repro.data.querylog import CAT1, CAT2, classify_query, sample_eval_sets
+from repro.ranking.metrics import (
+    batched_ncg,
+    ncg_at_k,
+    paired_permutation_pvalue,
+    relative_delta,
+)
+
+
+# -------------------------------------------------------------------- NCG
+def test_ncg_hand_example():
+    cand = jnp.asarray(np.array([3, 7, 9, -1], np.int32))
+    judged = jnp.asarray(np.array([3, 9, 11], np.int32))
+    gains = jnp.asarray(np.array([4.0, 2.0, 3.0]))
+    # cum gain = 4 + 2 = 6; ideal = 4 + 3 + 2 = 9
+    assert float(ncg_at_k(cand, judged, gains)) == pytest.approx(6 / 9)
+
+
+def test_ncg_perfect_and_bounds():
+    judged = jnp.asarray(np.arange(10, dtype=np.int32))
+    gains = jnp.asarray(np.ones(10, np.float32))
+    cand = jnp.asarray(np.concatenate([np.arange(10), -np.ones(20)]).astype(np.int32))
+    assert float(ncg_at_k(cand, judged, gains)) == pytest.approx(1.0)
+
+
+@settings(deadline=None, max_examples=20)
+@given(st.integers(0, 2**31 - 1))
+def test_ncg_in_unit_interval(seed):
+    rng = np.random.default_rng(seed)
+    cand = rng.choice(200, size=50, replace=False).astype(np.int32)
+    judged = rng.choice(200, size=30, replace=False).astype(np.int32)
+    gains = rng.integers(0, 5, size=30).astype(np.float32)
+    v = float(ncg_at_k(jnp.asarray(cand), jnp.asarray(judged), jnp.asarray(gains)))
+    assert 0.0 <= v <= 1.0
+
+
+def test_permutation_test_detects_shift(rng):
+    base = rng.normal(0, 1, 400)
+    assert paired_permutation_pvalue(base + 0.5, base) < 0.01
+    assert paired_permutation_pvalue(base, base.copy()) > 0.5
+
+
+def test_relative_delta_sign():
+    assert relative_delta(np.array([80.0]), np.array([100.0])) == pytest.approx(-20.0)
+
+
+# -------------------------------------------------------------- query log
+def test_querylog_structure(tiny_system):
+    log = tiny_system.log
+    assert (log.n_terms >= 1).all()
+    assert (log.terms[log.terms >= 0] < tiny_system.index.vocab_size).all()
+    assert log.popularity.sum() == pytest.approx(1.0)
+    # both categories present
+    assert (log.category == CAT1).any() and (log.category == CAT2).any()
+    # judged gains on the 5-point scale
+    assert log.judged_gains.min() >= 0 and log.judged_gains.max() <= 4
+
+
+def test_seed_doc_judged_relevant(tiny_system):
+    """The document a query was generated from should usually be judged
+    relevant — the generative link that makes NCG meaningful."""
+    log = tiny_system.log
+    hits = 0
+    for q in range(0, log.n_queries, 7):
+        j = log.judged_ids[q]
+        mask = j == log.seed_doc[q]
+        if mask.any() and log.judged_gains[q][mask][0] >= 2:
+            hits += 1
+    assert hits > log.n_queries // 7 * 0.5
+
+
+def test_classifier_agrees_with_generative_labels(tiny_system):
+    log, index = tiny_system.log, tiny_system.index
+    pred = classify_query(log, index)
+    agree = (pred == log.category).mean()
+    assert agree > 0.7
+
+
+def test_eval_sets_weighted_vs_unweighted(tiny_system):
+    log = tiny_system.log
+    w, u = sample_eval_sets(log, 400, seed=0)
+    # weighted set hits popular (head) queries far more often
+    assert log.popularity[w].mean() > 2 * log.popularity[u].mean()
+    assert len(np.unique(u)) == len(u)
+
+
+def test_l1_ranker_orders_relevant_docs(tiny_system):
+    """L1 scores must correlate with graded relevance — it is g(d) in Eq. 3."""
+    sys_ = tiny_system
+    qids = np.arange(0, 64)
+    occ, scores, _ = sys_.batch_inputs(qids)
+    good, bad = [], []
+    for row, q in enumerate(qids):
+        j, g = sys_.log.judged_ids[q], sys_.log.judged_gains[q]
+        valid = j >= 0
+        s = np.asarray(scores[row])[np.clip(j, 0, None)]
+        good.append(s[valid & (g >= 3)])
+        bad.append(s[valid & (g == 0)])
+    assert np.concatenate(good).mean() > np.concatenate(bad).mean() + 0.05
+
+
+# -------------------------------------------------------------- telescope
+def test_l1_prune_orders_by_score():
+    scores_all = jnp.asarray(np.linspace(0, 1, 100)[None, :].astype(np.float32))
+    cand = jnp.asarray(np.array([[5, 50, 99, -1]], np.int32))
+    ids, s = l1_prune(scores_all, cand, keep=3)
+    assert list(np.asarray(ids)[0]) == [99, 50, 5]
+    assert (np.diff(np.asarray(s)[0]) <= 0).all()
+
+
+def test_merge_shard_candidates_static_rank_order():
+    shard = np.full((2, 1, 4), -1, np.int32)
+    shard[0, 0, :2] = [7, 19]
+    shard[1, 0, :3] = [3, 11, 40]
+    merged = np.asarray(merge_shard_candidates(jnp.asarray(shard), keep=4))[0]
+    assert list(merged) == [3, 7, 11, 19]

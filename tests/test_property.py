@@ -1,0 +1,143 @@
+"""Hypothesis property tests on system-level invariants."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core.environment import env_reset, execute_rule
+from repro.core.match_rules import default_rule_library, block_cost
+from repro.core.reward import r_agent
+from repro.core.state_bins import bin_index, fit_bins
+from repro.models.moe import MoEConfig, moe_ffn, moe_init
+from repro.kernels.embedding_bag.ops import embedding_bag
+
+
+# ------------------------------------------------------------ match engine
+@settings(deadline=None, max_examples=8)
+@given(st.integers(0, 2**31 - 1), st.integers(1, 6), st.integers(8, 64))
+def test_u_monotone_in_quota(seed, small_quota, big_quota_mult):
+    """Scanning with a larger Δu quota never reads fewer blocks."""
+    from repro.index.builder import query_occupancy, build_index
+    from repro.index.corpus import CorpusConfig, generate_corpus
+
+    rng = np.random.default_rng(seed)
+    corpus = generate_corpus(CorpusConfig(n_docs=512, vocab_size=256, seed=seed % 97))
+    index = build_index(corpus, block_docs=128)
+    occ = jnp.asarray(query_occupancy(index, rng.integers(0, 256, 2).tolist()))
+    scores = jnp.asarray(rng.random(index.padded_docs).astype(np.float32))
+    tp = jnp.asarray(np.array([1, 1, 0, 0], bool))
+
+    from repro.core.environment import EnvConfig
+    cfg = EnvConfig(n_blocks=index.n_blocks, block_docs=128, k_rules=6,
+                    max_candidates=64, u_budget=10**6)
+    rs = default_rule_library()
+    a, r = rs.allowed[0], rs.required[0]
+    big_quota = small_quota * big_quota_mult
+
+    s_small = execute_rule(cfg, occ, scores, tp, env_reset(cfg), a, r,
+                           jnp.int32(small_quota), jnp.int32(10**9))
+    s_big = execute_rule(cfg, occ, scores, tp, env_reset(cfg), a, r,
+                         jnp.int32(big_quota), jnp.int32(10**9))
+    assert int(s_big.u) >= int(s_small.u)
+    assert int(s_big.cand_cnt) >= int(s_small.cand_cnt)
+    assert int(s_big.v) >= int(s_small.v)
+
+
+@settings(deadline=None, max_examples=15)
+@given(st.integers(0, 2**31 - 1))
+def test_reward_decreases_in_u(seed):
+    """Eq. 3: same relevance discovered at higher cost ⇒ lower reward."""
+    from repro.core.environment import EnvConfig, EnvState
+    rng = np.random.default_rng(seed)
+    cfg = EnvConfig(n_blocks=8, block_docs=128, k_rules=6, max_candidates=16,
+                    n_top=5)
+    topn = jnp.asarray(np.sort(rng.random(5).astype(np.float32))[::-1])
+
+    def state(u):
+        return EnvState(
+            block_ptr=jnp.int32(0), u=jnp.int32(u), v=jnp.int32(10),
+            matched=jnp.zeros((32,), jnp.uint32),
+            cand=jnp.zeros((16,), jnp.int32), cand_cnt=jnp.int32(5),
+            topn=topn, done=jnp.bool_(False),
+        )
+
+    u1 = int(rng.integers(1, 100))
+    u2 = u1 + int(rng.integers(1, 100))
+    assert float(r_agent(cfg, state(u1))) > float(r_agent(cfg, state(u2)))
+
+
+@settings(deadline=None, max_examples=10)
+@given(st.integers(0, 2**31 - 1))
+def test_block_cost_bounded(seed):
+    rng = np.random.default_rng(seed)
+    allowed = jnp.asarray(rng.random((4, 4)) < 0.5)
+    present = jnp.asarray(rng.random(4) < 0.8)
+    c = int(block_cost(allowed, present))
+    assert 0 <= c <= 16
+
+
+# ---------------------------------------------------------------- binning
+@settings(deadline=None, max_examples=10)
+@given(st.integers(0, 2**31 - 1))
+def test_bins_total_order_consistency(seed):
+    """Fitting points always map inside [0, p); monotone u keeps or
+    raises the stratum."""
+    rng = np.random.default_rng(seed)
+    u = np.cumsum(rng.exponential(10, 500))
+    v = np.cumsum(rng.exponential(30, 500))
+    bins = fit_bins(u, v, p=64)
+    idx = np.asarray(bin_index(bins, jnp.asarray(u), jnp.asarray(v)))
+    assert idx.min() >= 0 and idx.max() < bins.p
+    strata = idx // bins.pv
+    assert (np.diff(strata) >= 0).all()
+
+
+# -------------------------------------------------------------------- MoE
+@settings(deadline=None, max_examples=6)
+@given(st.integers(0, 2**31 - 1))
+def test_moe_zero_input_zero_output(seed):
+    cfg = MoEConfig(n_experts=4, top_k=2, d_model=16, d_ff=32, capacity_factor=4.0)
+    params = moe_init(jax.random.key(seed % 100), cfg)
+    out, _ = moe_ffn(params, jnp.zeros((8, 16)), cfg)
+    assert float(jnp.abs(out).max()) == 0.0  # SwiGLU(0) = 0
+
+
+@settings(deadline=None, max_examples=6)
+@given(st.integers(0, 2**31 - 1))
+def test_moe_capacity_drop_is_graceful(seed):
+    """With capacity 0 every token is dropped -> output only from the
+    (absent) shared expert = 0, never NaN."""
+    cfg = MoEConfig(n_experts=4, top_k=2, d_model=16, d_ff=32)
+    params = moe_init(jax.random.key(seed % 100), cfg)
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray(rng.normal(size=(8, 16)).astype(np.float32))
+    out, _ = moe_ffn(params, x, cfg, capacity=8)
+    assert not bool(jnp.isnan(out).any())
+
+
+# ---------------------------------------------------------- embedding bag
+def test_embedding_bag_empty_bag_is_zero():
+    table = jnp.ones((16, 4))
+    idx = jnp.full((2, 3), -1, jnp.int32)
+    out = embedding_bag(table, idx, mode="sum")
+    assert float(jnp.abs(out).max()) == 0.0
+
+
+# ----------------------------------------------------------- checkpoints
+@settings(deadline=None, max_examples=5)
+@given(st.integers(0, 2**31 - 1))
+def test_checkpoint_roundtrip_random_trees(seed):
+    import tempfile
+
+    from repro.distributed.checkpoint import restore, save
+    rng = np.random.default_rng(seed)
+    d = tempfile.mkdtemp(prefix=f"ck{seed % 1000}_")
+    tree = {
+        "a": jnp.asarray(rng.normal(size=(3, 5)).astype(np.float32)),
+        "b": [jnp.asarray(rng.integers(0, 10, 4).astype(np.int32)),
+              {"c": jnp.asarray(rng.normal(size=(2,)), jnp.bfloat16)}],
+    }
+    save(d, 0, tree)
+    got = restore(d, 0, tree)
+    for x, y in zip(jax.tree_util.tree_leaves(got), jax.tree_util.tree_leaves(tree)):
+        np.testing.assert_array_equal(np.asarray(x, np.float32), np.asarray(y, np.float32))
