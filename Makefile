@@ -1,0 +1,22 @@
+PYTHON ?= python
+export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH),)
+
+.PHONY: test serve-bench bench serve example
+
+# Tier-1 verify (ROADMAP.md)
+test:
+	$(PYTHON) -m pytest -x -q
+
+# Engine vs. naive-loop serving benchmark (QPS, p99, retrace count)
+serve-bench:
+	$(PYTHON) -m benchmarks.serve_bench --fast
+
+# Full benchmark sweep (kernels, plan executor, serving)
+bench:
+	$(PYTHON) -m benchmarks.run
+
+serve:
+	$(PYTHON) -m repro.launch.serve --batches 4 --batch 64
+
+example:
+	$(PYTHON) examples/serve_retrieval.py

@@ -49,6 +49,10 @@ def main() -> None:
     us = (time.time() - t0) / 5 * 1e6
     print(f"plan_executor_64q_4096d,{us:.0f},{us/64:.0f}us_per_query_host")
 
+    print("\n== serving engine (QPS / p99 / steady-state retraces) ==")
+    from benchmarks import serve_bench
+    serve_bench.main(fast=not args.full)
+
     # Table 1 / Figure 2
     if args.full:
         print("\n== Table 1 (retraining policies) ==")

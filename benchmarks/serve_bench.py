@@ -1,0 +1,146 @@
+"""Serving benchmark: online engine vs. the seed's naive batch loop.
+
+The seed driver split every arriving batch by query category with a
+boolean mask, so the jitted rollout saw a different batch shape almost
+every time and retraced continuously.  The engine quantizes shapes into
+power-of-two buckets hitting pre-compiled executables, caches repeated
+queries, and scatter-gathers across logical index shards.
+
+Prints ``name,value`` CSV rows and writes results/serve_bench.json:
+
+    PYTHONPATH=src python -m benchmarks.serve_bench            # full
+    PYTHONPATH=src python -m benchmarks.serve_bench --fast     # CI size
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import time
+from pathlib import Path
+
+import numpy as np
+
+
+def _rollout_cache_size() -> int:
+    """Tracing count of the shared greedy_rollout jit (version-tolerant)."""
+    from repro.core.qlearning import greedy_rollout
+    try:
+        return int(greedy_rollout._cache_size())
+    except Exception:
+        return -1
+
+
+def naive_serve_batches(sys_, policies, batches, keep: int = 100):
+    """The seed launch/serve.py inner loop, verbatim semantics: one
+    variable-size mask split per category per batch."""
+    import jax
+
+    from repro.core.qlearning import greedy_rollout
+    from repro.core.telescope import l1_prune
+    from repro.data.querylog import CAT1, CAT2
+
+    shapes_seen = set()
+    for qids in batches:
+        occ, scores, tp = sys_.batch_inputs(qids)
+        ids = None
+        for cat in (CAT1, CAT2):
+            m = sys_.log.category[qids] == cat
+            if not m.any():
+                continue
+            shapes_seen.add((cat, int(m.sum())))
+            fin, _ = greedy_rollout(sys_.env_cfg, sys_.qcfg, sys_.ruleset,
+                                    sys_.bins, policies[cat],
+                                    occ[m], scores[m], tp[m])
+            ids, _ = l1_prune(scores[m], fin.cand, keep=keep)
+        if ids is not None:
+            jax.block_until_ready(ids)
+    return shapes_seen
+
+
+def engine_serve_batches(engine, batches):
+    for qids in batches:
+        engine.serve(qids)     # submit + flush + claim responses
+
+
+def build_system(n_docs: int, n_queries: int, iters: int):
+    from repro.data.querylog import CAT1, CAT2, QueryLogConfig
+    from repro.index.corpus import CorpusConfig
+    from repro.system import RetrievalSystem, SystemConfig
+
+    sys_ = RetrievalSystem(SystemConfig(
+        corpus=CorpusConfig(n_docs=n_docs, vocab_size=1024, seed=0),
+        querylog=QueryLogConfig(n_queries=n_queries, seed=0),
+        block_docs=256, p_bins=512, u_budget=1024, l1_steps=120,
+    ))
+    sys_.fit_l1(n_queries=96)
+    sys_.fit_state_bins(n_queries=64)
+    policies = {cat: sys_.train_policy(cat, iters=iters, batch=32)[0]
+                for cat in (CAT1, CAT2)}
+    return sys_, policies
+
+
+def main(fast: bool = False) -> dict:
+    from repro.serving import EngineConfig, ServeEngine
+
+    n_docs = 2048 if fast else 4096
+    n_queries = 256 if fast else 512
+    iters = 20 if fast else 60
+    batch = 32 if fast else 48
+    n_batches = 6 if fast else 12
+    warm = 2
+
+    sys_, policies = build_system(n_docs, n_queries, iters)
+    rng = np.random.default_rng(7)
+    batches = [rng.integers(0, sys_.log.n_queries, size=batch)
+               for _ in range(warm + n_batches)]
+    volume = batch * n_batches
+
+    # ---------------------------------------------------------- naive loop
+    traces0 = _rollout_cache_size()
+    naive_serve_batches(sys_, policies, batches[:warm])
+    t0 = time.time()
+    shapes = naive_serve_batches(sys_, policies, batches[warm:])
+    t_naive = time.time() - t0
+    naive_traces = (_rollout_cache_size() - traces0) if traces0 >= 0 else -1
+
+    # -------------------------------------------------------------- engine
+    engine = ServeEngine(sys_, policies, EngineConfig(
+        min_bucket=8, max_bucket=max(8, 1 << (batch - 1).bit_length()),
+        cache_capacity=4096, n_shards=1))
+    engine.warmup()
+    engine_serve_batches(engine, batches[:warm])
+    compiles_after_warm = engine.compile_count
+    t0 = time.time()
+    engine_serve_batches(engine, batches[warm:])
+    t_engine = time.time() - t0
+    steady_retraces = engine.compile_count - compiles_after_warm
+
+    summary = engine.summary()
+    out = {
+        "volume_queries": volume,
+        "naive_s": t_naive,
+        "naive_qps": volume / t_naive,
+        "naive_distinct_shapes": len(shapes),
+        "naive_rollout_traces": naive_traces,
+        "engine_s": t_engine,
+        "engine_qps": volume / t_engine,
+        "engine_compiles_total": engine.compile_count,
+        "engine_steady_state_retraces": steady_retraces,
+        "engine_cache_hit_rate": summary["cache_hit_rate"],
+        "engine_latency_p50_ms": summary["latency_p50_ms"],
+        "engine_latency_p99_ms": summary["latency_p99_ms"],
+        "engine_mean_u": summary["mean_u"],
+        "speedup": t_naive / t_engine,
+    }
+    for k, v in out.items():
+        print(f"serve_bench.{k},{v:.4f}" if isinstance(v, float)
+              else f"serve_bench.{k},{v}")
+    Path("results").mkdir(parents=True, exist_ok=True)
+    Path("results/serve_bench.json").write_text(json.dumps(out, indent=1))
+    return out
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--fast", action="store_true")
+    main(fast=ap.parse_args().fast)

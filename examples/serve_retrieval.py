@@ -1,15 +1,43 @@
-"""Serve batched queries through the full telescope: L0 learned policy
-→ L1 prune → ranked results, with block-accounting per query.
+"""Serve queries through the online engine: L0 learned policy → shard
+merge → L1 prune, with admission, result caching and shape-bucketed
+micro-batching (docs/serving.md).
 
     PYTHONPATH=src python examples/serve_retrieval.py
 """
-import subprocess
-import sys
+import json
 
-# The serving driver is a first-class launcher; this example just runs a
-# small configuration of it.
-subprocess.run([
-    sys.executable, "-m", "repro.launch.serve",
-    "--n-docs", "4096", "--n-queries", "400",
-    "--batch", "32", "--batches", "2", "--iters", "60",
-], check=True, env={"PYTHONPATH": "src", "PATH": "/usr/bin:/bin"})
+import numpy as np
+
+from repro.data.querylog import CAT1, CAT2, QueryLogConfig
+from repro.index.corpus import CorpusConfig
+from repro.serving import EngineConfig, ServeEngine
+from repro.system import RetrievalSystem, SystemConfig
+
+
+def main() -> None:
+    sys_ = RetrievalSystem(SystemConfig(
+        corpus=CorpusConfig(n_docs=4096, vocab_size=1024, seed=0),
+        querylog=QueryLogConfig(n_queries=400, seed=0),
+        block_docs=256, p_bins=256, u_budget=1024, l1_steps=100,
+    ))
+    sys_.fit_l1(n_queries=96)
+    sys_.fit_state_bins(n_queries=64)
+    policies = {cat: sys_.train_policy(cat, iters=60, batch=32)[0]
+                for cat in (CAT1, CAT2)}
+
+    engine = ServeEngine(sys_, policies, EngineConfig(
+        min_bucket=8, max_bucket=32, cache_capacity=512, n_shards=2))
+    engine.warmup()
+
+    rng = np.random.default_rng(0)
+    qids = rng.integers(0, sys_.log.n_queries, size=96)
+    responses = engine.serve(qids)
+
+    r0 = responses[0]
+    print(f"query {r0.qid} (cat {r0.category}): u={r0.u} "
+          f"top doc ids {r0.doc_ids[:5].tolist()}")
+    print("engine summary:", json.dumps(engine.summary(), indent=1))
+
+
+if __name__ == "__main__":
+    main()

@@ -28,6 +28,7 @@ import numpy as np
 
 from repro.index.corpus import A, U, B, T, N_FIELDS
 from repro.index.builder import MAX_QUERY_TERMS
+from repro.kernels.common import reduce_and, reduce_or
 
 __all__ = ["RuleSet", "default_rule_library", "scan_block", "block_cost"]
 
@@ -129,12 +130,12 @@ def scan_block(
     """
     mask = (allowed & term_present[:, None]).astype(jnp.uint32)          # (T, F)
     planes = occ_block * mask[..., None]                                 # (T, F, W)
-    tf_or = jax.lax.reduce_or(planes, axes=(1,))                         # (T, W)
+    tf_or = reduce_or(planes, (1,))                                      # (T, W)
 
     req = (required & term_present).astype(jnp.uint32)[:, None]          # (T, 1)
     # Non-required slots contribute all-ones to the conjunction.
     conj_in = tf_or | (jnp.uint32(0xFFFFFFFF) * (1 - req))
-    match = jax.lax.reduce_and(conj_in, axes=(0,))                       # (W,)
+    match = reduce_and(conj_in, (0,))                                    # (W,)
     any_req = jnp.any(required & term_present)
     match = jnp.where(any_req, match, jnp.uint32(0))
 

@@ -30,7 +30,7 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
-from repro.kernels.common import INTERPRET, cdiv
+from repro.kernels.common import INTERPRET, cdiv, reduce_and, reduce_or, tpu_compiler_params
 
 __all__ = ["block_scan_pallas"]
 
@@ -45,12 +45,12 @@ def _kernel(occ_ref, masks_ref, match_ref, counts_ref, *, t: int, f: int):
 
     planes = occ * allowed[None, :, None]                 # (BB, T*F, W)
     grouped = planes.reshape(bb, t, f, w)
-    tf_or = jax.lax.reduce_or(grouped, axes=(2,))         # (BB, T, W)
+    tf_or = reduce_or(grouped, (2,))         # (BB, T, W)
 
     req = required.reshape(t, f)[:, 0]                    # (T,)
     full = jnp.uint32(0xFFFFFFFF)
     conj_in = tf_or | (full * (jnp.uint32(1) - req))[None, :, None]
-    match = jax.lax.reduce_and(conj_in, axes=(1,))        # (BB, W)
+    match = reduce_and(conj_in, (1,))        # (BB, W)
     any_req = (jnp.sum(req) > 0).astype(jnp.uint32)
     match = match * any_req
 
@@ -106,7 +106,7 @@ def block_scan_pallas(
             jax.ShapeDtypeStruct((grid[0] * block_bb, w), jnp.uint32),
             jax.ShapeDtypeStruct((grid[0] * block_bb, 8), jnp.int32),
         ],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=tpu_compiler_params(
             dimension_semantics=("arbitrary",),
         ),
         interpret=interpret,

@@ -25,7 +25,7 @@ import numpy as np
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
-from repro.kernels.common import INTERPRET, cdiv
+from repro.kernels.common import INTERPRET, cdiv, reduce_and, tpu_compiler_params
 
 __all__ = ["block_scan_pruned_pallas"]
 
@@ -50,9 +50,9 @@ def _kernel(meta_ref, occ_ref, match_ref, counts_ref, tf_scr,
     def _finalize():
         tf = tf_scr[...]                                # (t, W)
         full = jnp.uint32(0xFFFFFFFF)
-        req = meta_ref[2, :t]                           # (t,) 0/1
+        req = meta_ref[2, :t].astype(jnp.uint32)        # (t,) 0/1
         conj = tf | (full * (jnp.uint32(1) - req))[:, None]
-        match = jax.lax.reduce_and(conj, axes=(0,))
+        match = reduce_and(conj, (0,))
         any_req = (jnp.sum(req) > 0).astype(jnp.uint32)
         match = match * any_req
         match_ref[0] = match
@@ -108,7 +108,7 @@ def block_scan_pruned_pallas(
             jax.ShapeDtypeStruct((nb, w), jnp.uint32),
             jax.ShapeDtypeStruct((nb, 8), jnp.int32),
         ],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=tpu_compiler_params(
             dimension_semantics=("arbitrary", "arbitrary"),
         ),
         interpret=interpret,

@@ -8,11 +8,37 @@ from __future__ import annotations
 
 import jax
 import jax.numpy as jnp
+from jax.experimental.pallas import tpu as pltpu
 
-__all__ = ["INTERPRET", "pad_axis_to", "cdiv", "NEG_INF"]
+__all__ = ["INTERPRET", "pad_axis_to", "cdiv", "NEG_INF", "tpu_compiler_params",
+           "reduce_or", "reduce_and"]
 
 INTERPRET = jax.default_backend() != "tpu"
 NEG_INF = float("-inf")
+
+# Renamed TPUCompilerParams -> CompilerParams across jax releases.
+_COMPILER_PARAMS_CLS = getattr(pltpu, "CompilerParams", None) or getattr(
+    pltpu, "TPUCompilerParams")
+
+
+def tpu_compiler_params(**kwargs):
+    return _COMPILER_PARAMS_CLS(**kwargs)
+
+
+# lax.reduce_or / lax.reduce_and sugar is missing from some jax releases;
+# the generic lax.reduce lowers identically (and runs in pallas interpret).
+def reduce_or(x: jnp.ndarray, axes) -> jnp.ndarray:
+    if hasattr(jax.lax, "reduce_or"):
+        return jax.lax.reduce_or(x, axes=tuple(axes))
+    return jax.lax.reduce(x, jnp.zeros((), x.dtype), jax.lax.bitwise_or,
+                          tuple(axes))
+
+
+def reduce_and(x: jnp.ndarray, axes) -> jnp.ndarray:
+    if hasattr(jax.lax, "reduce_and"):
+        return jax.lax.reduce_and(x, axes=tuple(axes))
+    ones = jnp.array(~jnp.zeros((), x.dtype))
+    return jax.lax.reduce(x, ones, jax.lax.bitwise_and, tuple(axes))
 
 
 def cdiv(a: int, b: int) -> int:

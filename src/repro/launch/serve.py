@@ -1,9 +1,17 @@
-"""Serving driver: batched query evaluation through the full telescope
-(L0 learned match policy → shard merge → L1 rank/prune), with latency
-accounting in index blocks (u) — the unit the paper shows is linear in
-wall time.
+"""Serving driver: a thin CLI over `repro.serving.ServeEngine`.
+
+Trains the L0 policies + L1 ranker inline (as the seed driver did),
+then streams query batches through the online engine — admission →
+result cache → shape-bucketed micro-batching → pre-compiled per-shard
+rollout → L1 prune — with latency accounting both in wall time and in
+index blocks (u), the unit the paper shows is linear in machine time.
 
     PYTHONPATH=src python -m repro.launch.serve --batches 4 --batch 64
+
+Output keeps the seed schema (one JSON row per batch with t_inputs_s /
+t_serve_s / mean_u / p99_u / qps_host) and adds engine fields
+(cache hits, compile counts, latency percentiles) plus a trailing
+engine summary at results/serve_summary.json.
 """
 from __future__ import annotations
 
@@ -23,14 +31,17 @@ def main() -> None:
     ap.add_argument("--batches", type=int, default=4)
     ap.add_argument("--iters", type=int, default=120)
     ap.add_argument("--out", default="results/serve.json")
+    ap.add_argument("--min-bucket", type=int, default=8)
+    ap.add_argument("--max-bucket", type=int, default=64)
+    ap.add_argument("--cache", type=int, default=4096,
+                    help="result-cache capacity (0 disables)")
+    ap.add_argument("--shards", type=int, default=1,
+                    help="logical index shards for scatter-gather serving")
     args = ap.parse_args()
 
-    import jax
-
-    from repro.core.telescope import l1_prune
     from repro.data.querylog import CAT1, CAT2, QueryLogConfig
     from repro.index.corpus import CorpusConfig
-    from repro.ranking.metrics import batched_ncg
+    from repro.serving import EngineConfig, ServeEngine
     from repro.system import RetrievalSystem, SystemConfig
 
     sys_ = RetrievalSystem(SystemConfig(
@@ -44,42 +55,46 @@ def main() -> None:
     for cat in (CAT1, CAT2):
         policies[cat], _ = sys_.train_policy(cat, iters=args.iters, batch=48)
 
-    from repro.core.qlearning import greedy_rollout
+    engine = ServeEngine(sys_, policies, EngineConfig(
+        min_bucket=args.min_bucket, max_bucket=args.max_bucket,
+        cache_capacity=args.cache, n_shards=args.shards))
+    n_compiles_warm = engine.warmup()
+    print(f"warmup: {n_compiles_warm} bucket executables compiled")
 
     stats = []
     rng = np.random.default_rng(0)
     for bi in range(args.batches):
         qids = rng.integers(0, sys_.log.n_queries, size=args.batch)
         t0 = time.time()
-        occ, scores, tp = sys_.batch_inputs(qids)
-        t_inputs = time.time() - t0
-
-        # route each query by its category's policy (batch split by cat)
-        res = {}
+        rids = [engine.submit(int(q)) for q in qids]
+        t_inputs = time.time() - t0          # admission + cache lookups
         t0 = time.time()
-        for cat in (CAT1, CAT2):
-            m = sys_.log.category[qids] == cat
-            if not m.any():
-                continue
-            fin, _ = greedy_rollout(sys_.env_cfg, sys_.qcfg, sys_.ruleset,
-                                    sys_.bins, policies[cat],
-                                    occ[m], scores[m], tp[m])
-            ids, sc = l1_prune(scores[m], fin.cand, keep=100)
-            res[cat] = (fin, ids)
-        jax.block_until_ready(ids)
+        engine.flush()
         t_serve = time.time() - t0
+        res = [engine.take_response(r) for r in rids]
 
-        u_all = np.concatenate([np.asarray(res[c][0].u) for c in res])
+        u_all = np.array([r.u for r in res], np.float64)
+        lat = np.array([r.latency_s for r in res], np.float64)
         stats.append({
             "batch": bi, "t_inputs_s": t_inputs, "t_serve_s": t_serve,
             "mean_u": float(u_all.mean()),
             "p99_u": float(np.quantile(u_all, 0.99)),
             "qps_host": args.batch / (t_inputs + t_serve),
+            # engine-specific fields (new in the serving subsystem)
+            "n_cached": sum(r.cached for r in res),
+            "latency_p50_ms": float(np.quantile(lat, 0.50)) * 1e3,
+            "latency_p99_ms": float(np.quantile(lat, 0.99)) * 1e3,
+            "compiles_cum": engine.compile_count,
         })
         print(stats[-1])
 
+    summary = engine.summary()
+    print("engine summary:", json.dumps(summary, indent=1))
+
     Path(args.out).parent.mkdir(parents=True, exist_ok=True)
     Path(args.out).write_text(json.dumps(stats, indent=1))
+    Path(args.out).with_name("serve_summary.json").write_text(
+        json.dumps(summary, indent=1))
 
 
 if __name__ == "__main__":

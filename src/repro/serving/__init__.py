@@ -1,0 +1,20 @@
+"""Online query-serving engine (docs/serving.md).
+
+submit → admission → result cache → shape-bucketed micro-batch →
+pre-compiled per-shard rollout → scatter–gather merge → L1 prune →
+respond, with per-request latency/u telemetry.
+"""
+from repro.serving.batcher import (BucketConfig, MicroBatch, PendingRequest,
+                                   ShapeBucketBatcher, bucket_size_for)
+from repro.serving.cache import LRUResultCache, canonical_query_key
+from repro.serving.engine import (AdmissionError, EngineConfig, ServeEngine,
+                                  ServeResponse)
+from repro.serving.executor import ShardedExecutor
+from repro.serving.telemetry import Telemetry
+
+__all__ = [
+    "AdmissionError", "BucketConfig", "EngineConfig", "LRUResultCache",
+    "MicroBatch", "PendingRequest", "ServeEngine", "ServeResponse",
+    "ShapeBucketBatcher", "ShardedExecutor", "Telemetry",
+    "bucket_size_for", "canonical_query_key",
+]

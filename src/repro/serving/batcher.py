@@ -1,0 +1,118 @@
+"""Shape-bucketed micro-batching for the serving engine.
+
+JAX retraces a jitted rollout for every distinct input shape, so a
+serving loop that forwards whatever batch composition arrives — the
+seed driver's per-category mask split produced a different split size
+almost every batch — recompiles continuously.  The batcher quantizes:
+per-category FIFO queues are drained into fixed power-of-two bucket
+sizes in [min_bucket, max_bucket]; short drains are padded by
+replicating a real lane, and the engine drops every lane past
+``n_real`` before responding or caching.  In steady state every
+micro-batch therefore hits one of a handful of pre-compiled
+executables (see executor.py) and the compile count stops growing.
+"""
+from __future__ import annotations
+
+import dataclasses
+from collections import deque
+from typing import Deque, Dict, List, Optional
+
+import numpy as np
+
+__all__ = ["BucketConfig", "PendingRequest", "MicroBatch", "ShapeBucketBatcher",
+           "bucket_size_for"]
+
+
+@dataclasses.dataclass(frozen=True)
+class BucketConfig:
+    min_bucket: int = 8
+    max_bucket: int = 64
+
+    def __post_init__(self):
+        if self.min_bucket < 1 or self.max_bucket < self.min_bucket:
+            raise ValueError(f"bad bucket range [{self.min_bucket}, {self.max_bucket}]")
+        for b in (self.min_bucket, self.max_bucket):
+            if b & (b - 1):
+                raise ValueError(f"bucket bounds must be powers of two, got {b}")
+
+    def buckets(self) -> List[int]:
+        """All bucket sizes this config can emit (the compile universe)."""
+        out, b = [], self.min_bucket
+        while b <= self.max_bucket:
+            out.append(b)
+            b *= 2
+        return out
+
+
+def bucket_size_for(n: int, cfg: BucketConfig) -> int:
+    """Smallest power-of-two bucket ≥ n, clamped to the config range."""
+    if n < 1:
+        raise ValueError("empty micro-batch")
+    b = cfg.min_bucket
+    while b < n and b < cfg.max_bucket:
+        b *= 2
+    return b
+
+
+@dataclasses.dataclass
+class PendingRequest:
+    request_id: int
+    qid: int               # id into the query log
+    category: int
+    cache_key: object
+    t_submit: float
+
+
+@dataclasses.dataclass
+class MicroBatch:
+    category: int
+    bucket: int
+    requests: List[PendingRequest]     # the real lanes, in FIFO order
+
+    @property
+    def n_real(self) -> int:
+        return len(self.requests)
+
+    def padded_qids(self) -> np.ndarray:
+        """(bucket,) qids with padded lanes replicating the first real
+        lane — its rollout result is discarded, so any valid qid works."""
+        qids = np.full(self.bucket, self.requests[0].qid, np.int64)
+        qids[: self.n_real] = [r.qid for r in self.requests]
+        return qids
+
+
+class ShapeBucketBatcher:
+    """Per-category FIFO queues drained into shape buckets."""
+
+    def __init__(self, cfg: BucketConfig = BucketConfig()):
+        self.cfg = cfg
+        self._queues: Dict[int, Deque[PendingRequest]] = {}
+
+    def enqueue(self, req: PendingRequest) -> None:
+        self._queues.setdefault(req.category, deque()).append(req)
+
+    def pending(self, category: Optional[int] = None) -> int:
+        if category is not None:
+            return len(self._queues.get(category, ()))
+        return sum(len(q) for q in self._queues.values())
+
+    def categories(self) -> List[int]:
+        return [c for c, q in self._queues.items() if q]
+
+    def drain(self, category: int, force: bool = False) -> Optional[MicroBatch]:
+        """Pop up to max_bucket requests into a micro-batch.
+
+        Without ``force``, only a full max_bucket batch is released (the
+        throughput-optimal shape); with ``force`` a partial batch drains
+        into the smallest fitting bucket — the flush/latency path.
+        """
+        q = self._queues.get(category)
+        if not q:
+            return None
+        if not force and len(q) < self.cfg.max_bucket:
+            return None
+        take = min(len(q), self.cfg.max_bucket)
+        reqs = [q.popleft() for _ in range(take)]
+        return MicroBatch(category=category,
+                          bucket=bucket_size_for(take, self.cfg),
+                          requests=reqs)

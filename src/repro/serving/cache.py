@@ -1,0 +1,74 @@
+"""LRU result cache for the online serving engine.
+
+Keys are canonicalized query term sets (category, sorted unique valid
+term ids) so syntactic duplicates — repeated hot navigational queries,
+the head of the Zipf popularity curve — hit the same entry regardless
+of term order or padding.  Values are fully materialized host-side
+responses (doc ids, L1 scores, u), so a hit bypasses occupancy
+gathering, the rollout, and L1 pruning entirely.
+"""
+from __future__ import annotations
+
+from collections import OrderedDict
+from typing import Any, Hashable, Optional, Tuple
+
+import numpy as np
+
+__all__ = ["canonical_query_key", "LRUResultCache"]
+
+
+def canonical_query_key(terms, category: int) -> Tuple[int, Tuple[int, ...]]:
+    """(category, sorted deduped valid term ids) — padding (-1) stripped."""
+    t = np.asarray(terms).ravel()
+    t = t[t >= 0]
+    return (int(category), tuple(sorted({int(x) for x in t})))
+
+
+class LRUResultCache:
+    """Plain OrderedDict LRU with hit/miss accounting.
+
+    ``capacity <= 0`` disables caching (every lookup is a miss), which
+    keeps the engine's control flow identical with and without a cache.
+    """
+
+    def __init__(self, capacity: int = 4096):
+        self.capacity = capacity
+        self._entries: "OrderedDict[Hashable, Any]" = OrderedDict()
+        self.hits = 0
+        self.misses = 0
+        self.evictions = 0
+
+    def __len__(self) -> int:
+        return len(self._entries)
+
+    def get(self, key: Hashable) -> Optional[Any]:
+        if self.capacity > 0 and key in self._entries:
+            self._entries.move_to_end(key)
+            self.hits += 1
+            return self._entries[key]
+        self.misses += 1
+        return None
+
+    def put(self, key: Hashable, value: Any) -> None:
+        if self.capacity <= 0:
+            return
+        self._entries[key] = value
+        self._entries.move_to_end(key)
+        while len(self._entries) > self.capacity:
+            self._entries.popitem(last=False)
+            self.evictions += 1
+
+    @property
+    def hit_rate(self) -> float:
+        total = self.hits + self.misses
+        return self.hits / total if total else 0.0
+
+    def stats(self) -> dict:
+        return {
+            "size": len(self._entries),
+            "capacity": self.capacity,
+            "hits": self.hits,
+            "misses": self.misses,
+            "evictions": self.evictions,
+            "hit_rate": self.hit_rate,
+        }

@@ -1,0 +1,197 @@
+"""`ServeEngine`: the online query-serving front door.
+
+Request flow (docs/serving.md has the full diagram):
+
+    submit → admission → result cache → per-category shape bucket
+           → pre-compiled rollout executable (per shard, scatter–gather)
+           → L1 prune → respond (+ cache fill, telemetry)
+
+The engine wraps an already-trained `RetrievalSystem` (L1 ranker, state
+bins) plus one Q-table per query category.  `serve()` is the
+synchronous driver used by benchmarks and the CLI: it submits a stream,
+force-flushes the queues, and returns responses in submission order.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional, Sequence
+
+import numpy as np
+
+from repro.serving.batcher import (
+    BucketConfig, MicroBatch, PendingRequest, ShapeBucketBatcher,
+)
+from repro.serving.cache import LRUResultCache, canonical_query_key
+from repro.serving.executor import ShardedExecutor
+from repro.serving.telemetry import Telemetry
+
+__all__ = ["EngineConfig", "ServeResponse", "AdmissionError", "ServeEngine"]
+
+
+@dataclasses.dataclass(frozen=True)
+class EngineConfig:
+    min_bucket: int = 8
+    max_bucket: int = 64
+    cache_capacity: int = 4096
+    n_shards: int = 1
+    keep: int = 100                # L1 prune depth (paper's NCG@100 cut)
+    admission_limit: int = 4096    # max queued requests before shedding
+    max_completed: int = 65536     # unclaimed-response bound (oldest evicted)
+
+
+class AdmissionError(RuntimeError):
+    """Raised when the pending queue is at admission_limit (load shed)."""
+
+
+@dataclasses.dataclass
+class ServeResponse:
+    request_id: int
+    qid: int
+    category: int
+    doc_ids: np.ndarray        # (keep,) int32, -1 pad
+    scores: np.ndarray         # (keep,) float32
+    u: int                     # index blocks accessed (summed over shards)
+    cand_cnt: int
+    cached: bool
+    latency_s: float
+
+
+@dataclasses.dataclass
+class _CachedResult:
+    doc_ids: np.ndarray
+    scores: np.ndarray
+    u: int
+    cand_cnt: int
+
+
+class ServeEngine:
+    def __init__(self, system, policies: Dict[int, "np.ndarray"],
+                 cfg: EngineConfig = EngineConfig()):
+        self.system = system
+        self.policies = dict(policies)
+        self.cfg = cfg
+        self.bucket_cfg = BucketConfig(cfg.min_bucket, cfg.max_bucket)
+        self.batcher = ShapeBucketBatcher(self.bucket_cfg)
+        self.cache = LRUResultCache(cfg.cache_capacity)
+        self.executor = ShardedExecutor(system, n_shards=cfg.n_shards,
+                                        keep=cfg.keep)
+        self.telemetry = Telemetry()
+        self._next_id = 0
+        # Responses wait here until take_response(); bounded so callers
+        # that fire-and-forget don't leak result arrays forever.
+        self._completed: Dict[int, ServeResponse] = {}
+
+    def _complete(self, resp: ServeResponse) -> None:
+        self._completed[resp.request_id] = resp
+        while len(self._completed) > self.cfg.max_completed:
+            self._completed.pop(next(iter(self._completed)))
+
+    # ------------------------------------------------------------ warmup
+    def warmup(self) -> int:
+        """Pre-compile every bucket executable; returns compile count."""
+        self.executor.warmup(self.bucket_cfg.buckets())
+        return self.executor.compile_count
+
+    @property
+    def compile_count(self) -> int:
+        return self.executor.compile_count
+
+    # ------------------------------------------------------------ submit
+    def submit(self, qid: int) -> int:
+        """Admit one query-log query; returns its request id.
+
+        Cache hits complete immediately; misses queue for the next
+        micro-batch.  Raises AdmissionError when the queue is full.
+        """
+        if self.batcher.pending() >= self.cfg.admission_limit:
+            self.telemetry.record_rejection()
+            raise AdmissionError(
+                f"pending={self.batcher.pending()} >= {self.cfg.admission_limit}")
+        t0 = Telemetry.now()
+        rid = self._next_id
+        self._next_id += 1
+        log = self.system.log
+        cat = int(log.category[qid])
+        key = canonical_query_key(log.terms[qid], cat)
+        hit = self.cache.get(key)
+        if hit is not None:
+            t1 = Telemetry.now()
+            self._complete(ServeResponse(
+                request_id=rid, qid=int(qid), category=cat,
+                doc_ids=hit.doc_ids, scores=hit.scores, u=hit.u,
+                cand_cnt=hit.cand_cnt, cached=True, latency_s=t1 - t0))
+            self.telemetry.record_request(category=cat, latency_s=t1 - t0,
+                                          u=hit.u, cached=True, t_done=t1)
+            return rid
+        self.batcher.enqueue(PendingRequest(
+            request_id=rid, qid=int(qid), category=cat, cache_key=key,
+            t_submit=t0))
+        return rid
+
+    # ------------------------------------------------------------- batch
+    def _execute_batch(self, mb: MicroBatch) -> None:
+        t0 = Telemetry.now()
+        qids = mb.padded_qids()
+        occ, scores, tp = self.system.batch_inputs(qids)
+        t1 = Telemetry.now()
+        ids, sc, u, cnt = self.executor.execute(
+            self.policies[mb.category], occ, scores, tp)
+        t2 = Telemetry.now()
+        self.telemetry.record_batch(category=mb.category, bucket=mb.bucket,
+                                    n_real=mb.n_real, t_inputs_s=t1 - t0,
+                                    t_execute_s=t2 - t1)
+        # Padded lanes (>= n_real) are dropped here: never cached, never
+        # answered — the bucket-padding invariant the tests pin down.
+        for lane, req in enumerate(mb.requests):
+            result = _CachedResult(doc_ids=ids[lane], scores=sc[lane],
+                                   u=int(u[lane]), cand_cnt=int(cnt[lane]))
+            self.cache.put(req.cache_key, result)
+            latency = t2 - req.t_submit
+            self._complete(ServeResponse(
+                request_id=req.request_id, qid=req.qid,
+                category=mb.category, doc_ids=result.doc_ids,
+                scores=result.scores, u=result.u, cand_cnt=result.cand_cnt,
+                cached=False, latency_s=latency))
+            self.telemetry.record_request(category=mb.category,
+                                          latency_s=latency, u=result.u,
+                                          cached=False, t_done=t2)
+
+    def step(self) -> int:
+        """Drain every full bucket; returns micro-batches executed."""
+        n = 0
+        for cat in self.batcher.categories():
+            while True:
+                mb = self.batcher.drain(cat, force=False)
+                if mb is None:
+                    break
+                self._execute_batch(mb)
+                n += 1
+        return n
+
+    def flush(self) -> int:
+        """Force-drain everything (partial buckets padded up)."""
+        n = self.step()
+        for cat in self.batcher.categories():
+            while True:
+                mb = self.batcher.drain(cat, force=True)
+                if mb is None:
+                    break
+                self._execute_batch(mb)
+                n += 1
+        return n
+
+    # ----------------------------------------------------------- respond
+    def take_response(self, request_id: int) -> Optional[ServeResponse]:
+        return self._completed.pop(request_id, None)
+
+    def serve(self, qids: Sequence[int]) -> List[ServeResponse]:
+        """Synchronous driver: submit a stream, flush, return responses
+        in submission order."""
+        rids = [self.submit(int(q)) for q in qids]
+        self.flush()
+        return [self._completed.pop(r) for r in rids]
+
+    def summary(self) -> dict:
+        out = self.telemetry.summary(compile_count=self.compile_count)
+        out.update({f"cache_{k}": v for k, v in self.cache.stats().items()})
+        return out

@@ -1,0 +1,119 @@
+"""Rollout executor: pre-compiled per-bucket executables and multi-shard
+scatter–gather.
+
+The full L0→L1 serve step — greedy policy rollout per index shard,
+candidate scatter to global doc ids, static-rank merge across shards
+(`merge_shard_candidates`), and L1 rank/prune — is fused into one
+function and AOT-compiled (``jit(...).lower(...).compile()``) per
+bucket size.  The policy table and state bins are runtime *arguments*,
+so one executable serves every query category at that shape; in steady
+state the compile count is exactly ``len(BucketConfig.buckets())``.
+
+Sharding here is the logical split of the paper's multi-machine index:
+the block axis is cut into ``n_shards`` equal slices, each running its
+own rollout under a per-shard u budget ("the same policy is applied on
+every machine, which may lead to executing different sequences of match
+rules"), then per-shard candidates are gathered and merged by static
+rank before L1 — mirroring launch/steps.py's shard_map serve cell but
+driven from a single host process.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Dict, Iterable, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.qlearning import greedy_rollout
+from repro.core.telescope import l1_prune, merge_shard_candidates
+from repro.index.corpus import N_FIELDS
+
+__all__ = ["ShardedExecutor"]
+
+
+class ShardedExecutor:
+    def __init__(self, system, n_shards: int = 1, keep: int = 100):
+        if system.bins is None or system.qcfg is None:
+            raise ValueError("system needs fit_state_bins() before serving")
+        nb = system.env_cfg.n_blocks
+        if n_shards < 1 or nb % n_shards:
+            raise ValueError(f"n_shards={n_shards} must divide n_blocks={nb}")
+        self.system = system
+        self.n_shards = n_shards
+        self.keep = keep
+        self.blocks_per_shard = nb // n_shards
+        self.docs_per_shard = self.blocks_per_shard * system.env_cfg.block_docs
+        # Each shard scans its slice under the full per-machine u budget.
+        self.shard_env_cfg = dataclasses.replace(
+            system.env_cfg, n_blocks=self.blocks_per_shard)
+        self._jit = jax.jit(self._serve_fn)
+        self._compiled: Dict[int, jax.stages.Compiled] = {}
+        self.compile_count = 0
+        self.execute_count = 0
+
+    # ----------------------------------------------------------- the step
+    def _serve_fn(self, bins, q_table, occ, scores, term_present):
+        """(B, NB, T, F, W) occupancy → (ids, scores, u, cand_cnt)."""
+        sys_ = self.system
+        s, ds = self.n_shards, self.docs_per_shard
+        b = occ.shape[0]
+        occ_sh = occ.reshape(b, s, self.blocks_per_shard, *occ.shape[2:])
+        occ_sh = jnp.moveaxis(occ_sh, 1, 0)               # (S, B, nb/S, T, F, W)
+        scores_sh = jnp.moveaxis(scores.reshape(b, s, ds), 1, 0)  # (S, B, ds)
+
+        roll = partial(greedy_rollout, self.shard_env_cfg, sys_.qcfg,
+                       sys_.ruleset, bins, q_table)
+        final, _ = jax.vmap(roll, in_axes=(0, 0, None))(
+            occ_sh, scores_sh, term_present)
+
+        shard_base = (jnp.arange(s, dtype=jnp.int32) * ds)[:, None, None]
+        global_cand = jnp.where(final.cand >= 0, final.cand + shard_base, -1)
+        merged = merge_shard_candidates(
+            global_cand, keep=sys_.env_cfg.max_candidates)   # (B, K)
+        ids, sc = l1_prune(scores, merged, keep=self.keep)
+        u_tot = jnp.sum(final.u, axis=0)
+        cand_cnt = jnp.sum((merged >= 0).astype(jnp.int32), axis=1)
+        return ids, sc, u_tot, cand_cnt
+
+    # ------------------------------------------------------------ compile
+    def _abstract_args(self, bucket: int):
+        sys_ = self.system
+        cfg = sys_.env_cfg
+        t = sys_.log.terms.shape[1]
+        f = N_FIELDS
+        w = cfg.words_per_block
+        sd = jax.ShapeDtypeStruct
+        occ = sd((bucket, cfg.n_blocks, t, f, w), jnp.uint32)
+        scores = sd((bucket, cfg.n_blocks * cfg.block_docs), jnp.float32)
+        tp = sd((bucket, t), jnp.bool_)
+        bins = jax.tree_util.tree_map(
+            lambda x: sd(x.shape, x.dtype), sys_.bins)
+        q_abs = sd((sys_.qcfg.p, sys_.qcfg.n_actions), jnp.float32)
+        return bins, q_abs, occ, scores, tp
+
+    def compiled_for(self, bucket: int) -> jax.stages.Compiled:
+        exe = self._compiled.get(bucket)
+        if exe is None:
+            exe = self._jit.lower(*self._abstract_args(bucket)).compile()
+            self._compiled[bucket] = exe
+            self.compile_count += 1
+        return exe
+
+    def warmup(self, buckets: Iterable[int]) -> None:
+        for b in buckets:
+            self.compiled_for(b)
+
+    # ------------------------------------------------------------ execute
+    def execute(self, q_table, occ, scores, term_present
+                ) -> Tuple[np.ndarray, np.ndarray, np.ndarray, np.ndarray]:
+        """Run one micro-batch through its pre-compiled executable."""
+        exe = self.compiled_for(occ.shape[0])
+        ids, sc, u, cnt = exe(self.system.bins, q_table, occ, scores,
+                              term_present)
+        jax.block_until_ready(ids)
+        self.execute_count += 1
+        return (np.asarray(ids), np.asarray(sc), np.asarray(u),
+                np.asarray(cnt))

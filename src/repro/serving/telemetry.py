@@ -1,0 +1,100 @@
+"""Serving telemetry: per-request and per-batch accounting.
+
+Latency is wall time from admission to response; u is the paper's index
+blocks-accessed unit (shown linear in machine time), so both views of
+"cost" are recorded per request.  ``summary()`` aggregates into the
+p50/p99 + QPS shape every later scaling PR reports against.
+
+Per-request records live in a bounded sliding window (the engine is a
+long-running process; an unbounded list grows by one dict per request
+forever), while totals — request/cached/rejected counts — are plain
+counters, so summary percentiles are over the window but counts are
+lifetime-accurate.
+"""
+from __future__ import annotations
+
+import time
+from collections import deque
+from typing import Deque, Dict, Optional
+
+import numpy as np
+
+__all__ = ["Telemetry"]
+
+
+def _pct(xs: np.ndarray, q: float) -> float:
+    return float(np.quantile(xs, q)) if len(xs) else 0.0
+
+
+class Telemetry:
+    def __init__(self, window: int = 65536):
+        self.requests: Deque[dict] = deque(maxlen=window)
+        self.batches: Deque[dict] = deque(maxlen=window)
+        self.total_requests = 0
+        self.total_cached = 0
+        self.rejected = 0
+        self._t_start: Optional[float] = None
+        self._t_last: Optional[float] = None
+
+    # ------------------------------------------------------------- clocks
+    @staticmethod
+    def now() -> float:
+        return time.perf_counter()
+
+    def _touch(self, t: float) -> None:
+        if self._t_start is None:
+            self._t_start = t
+        self._t_last = t
+
+    # ------------------------------------------------------------ records
+    def record_request(self, *, category: int, latency_s: float, u: int,
+                       cached: bool, t_done: float) -> None:
+        self._touch(t_done)
+        self.total_requests += 1
+        self.total_cached += bool(cached)
+        self.requests.append({
+            "category": int(category),
+            "latency_s": float(latency_s),
+            "u": int(u),
+            "cached": bool(cached),
+        })
+
+    def record_batch(self, *, category: int, bucket: int, n_real: int,
+                     t_inputs_s: float, t_execute_s: float) -> None:
+        self.batches.append({
+            "category": int(category),
+            "bucket": int(bucket),
+            "n_real": int(n_real),
+            "n_padded": int(bucket - n_real),
+            "t_inputs_s": float(t_inputs_s),
+            "t_execute_s": float(t_execute_s),
+        })
+
+    def record_rejection(self) -> None:
+        self.rejected += 1
+
+    # ------------------------------------------------------------ summary
+    def summary(self, compile_count: int = 0) -> Dict[str, float]:
+        lat = np.array([r["latency_s"] for r in self.requests], np.float64)
+        us = np.array([r["u"] for r in self.requests], np.float64)
+        cached = np.array([r["cached"] for r in self.requests], bool)
+        span = ((self._t_last - self._t_start)
+                if self._t_start is not None and self._t_last is not None
+                and self._t_last > self._t_start else 0.0)
+        lanes = sum(b["bucket"] for b in self.batches)
+        padded = sum(b["n_padded"] for b in self.batches)
+        return {
+            "n_requests": self.total_requests,
+            "n_rejected": self.rejected,
+            "n_batches": len(self.batches),
+            "n_cached": self.total_cached,
+            "cache_hit_rate": float(cached.mean()) if len(cached) else 0.0,
+            "qps": (len(self.requests) / span) if span > 0 else 0.0,
+            "latency_p50_ms": _pct(lat, 0.50) * 1e3,
+            "latency_p99_ms": _pct(lat, 0.99) * 1e3,
+            "latency_mean_ms": float(lat.mean()) * 1e3 if len(lat) else 0.0,
+            "mean_u": float(us.mean()) if len(us) else 0.0,
+            "p99_u": _pct(us, 0.99),
+            "padding_overhead": (padded / lanes) if lanes else 0.0,
+            "compile_count": int(compile_count),
+        }

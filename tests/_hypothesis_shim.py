@@ -1,0 +1,72 @@
+"""Minimal stand-in for `hypothesis` used when the real package is not
+installed (offline CI images).  It supports exactly the subset this test
+suite uses — ``@settings(deadline=None, max_examples=N)`` stacked on
+``@given(st.integers(lo, hi), ...)`` — by expanding each property test
+into a deterministic loop over pseudo-random examples.
+
+The shim is installed into ``sys.modules`` by ``tests/conftest.py`` only
+when ``import hypothesis`` fails, so environments with the real package
+keep full shrinking/replay behaviour.
+"""
+from __future__ import annotations
+
+import functools
+import inspect
+import sys
+import types
+
+import numpy as np
+
+_DEFAULT_MAX_EXAMPLES = 10
+_SEED = 0x5EED
+
+
+class _Strategy:
+    def __init__(self, sample):
+        self._sample = sample
+
+
+def integers(min_value: int, max_value: int) -> _Strategy:
+    return _Strategy(lambda rng: int(rng.integers(min_value, max_value + 1)))
+
+
+def settings(deadline=None, max_examples: int = _DEFAULT_MAX_EXAMPLES, **_kw):
+    def deco(fn):
+        fn._shim_max_examples = max_examples
+        return fn
+    return deco
+
+
+def given(*strategies: _Strategy):
+    def deco(fn):
+        @functools.wraps(fn)
+        def wrapper(*args, **kwargs):
+            n = getattr(wrapper, "_shim_max_examples", _DEFAULT_MAX_EXAMPLES)
+            rng = np.random.default_rng(_SEED)
+            for _ in range(n):
+                vals = [s._sample(rng) for s in strategies]
+                fn(*args, *vals, **kwargs)
+        # Hide the generated parameters from pytest's fixture resolution:
+        # only the leading (fixture) params of the original signature remain.
+        sig = inspect.signature(fn)
+        params = list(sig.parameters.values())[: -len(strategies)]
+        wrapper.__signature__ = sig.replace(parameters=params)
+        del wrapper.__wrapped__
+        wrapper.is_hypothesis_test = True
+        return wrapper
+    return deco
+
+
+def install() -> None:
+    """Register the shim as the `hypothesis` package (idempotent)."""
+    if "hypothesis" in sys.modules:
+        return
+    mod = types.ModuleType("hypothesis")
+    st_mod = types.ModuleType("hypothesis.strategies")
+    st_mod.integers = integers
+    mod.given = given
+    mod.settings = settings
+    mod.strategies = st_mod
+    mod.__is_shim__ = True
+    sys.modules["hypothesis"] = mod
+    sys.modules["hypothesis.strategies"] = st_mod

@@ -1,9 +1,17 @@
 """Runs under 8 fake CPU devices (spawned by test_distributed.py).
 Checks sharded-vs-local numerical parity for every distribution
-primitive, then prints one JSON line."""
+primitive, then prints one JSON line.  Exits with code 42 (SKIP) when
+the host cannot emulate the required device count."""
 import os
 
-os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+N_DEVICES = 8
+SKIP_EXIT_CODE = 42
+
+# Merge (not overwrite) any ambient XLA_FLAGS, forcing the device count.
+_flags = [f for f in os.environ.get("XLA_FLAGS", "").split()
+          if not f.startswith("--xla_force_host_platform_device_count")]
+_flags.append(f"--xla_force_host_platform_device_count={N_DEVICES}")
+os.environ["XLA_FLAGS"] = " ".join(_flags)
 
 import json
 import sys
@@ -11,6 +19,11 @@ import sys
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 
 import jax
+
+if len(jax.devices()) < N_DEVICES:
+    print(f"SKIP host exposes {len(jax.devices())} devices, need {N_DEVICES}")
+    sys.exit(SKIP_EXIT_CODE)
+
 import jax.numpy as jnp
 import numpy as np
 from jax.sharding import NamedSharding, PartitionSpec as P

@@ -1,6 +1,15 @@
 import numpy as np
 import pytest
 
+try:  # Property tests prefer real hypothesis; fall back to the local shim
+    import hypothesis  # noqa: F401
+except ModuleNotFoundError:  # offline image — install the minimal shim
+    # plain module import: tests/ is on sys.path via pytest's conftest
+    # rootdir insertion, which also covers bare `pytest` invocations
+    from _hypothesis_shim import install as _install_hypothesis_shim
+
+    _install_hypothesis_shim()
+
 from repro.system import RetrievalSystem, SystemConfig
 from repro.index.corpus import CorpusConfig
 from repro.data.querylog import QueryLogConfig

@@ -1,0 +1,193 @@
+"""Serving engine: bucket sizing/padding invariants, cache parity,
+end-to-end parity vs. direct rollout, shards, admission, telemetry."""
+import numpy as np
+import pytest
+
+from repro.core.qlearning import greedy_rollout
+from repro.core.telescope import l1_prune
+from repro.data.querylog import CAT1, CAT2
+from repro.serving import (
+    AdmissionError, BucketConfig, EngineConfig, ServeEngine, bucket_size_for,
+)
+
+
+# -------------------------------------------------------------- bucketing
+def test_bucket_size_for():
+    cfg = BucketConfig(min_bucket=8, max_bucket=64)
+    assert bucket_size_for(1, cfg) == 8
+    assert bucket_size_for(8, cfg) == 8
+    assert bucket_size_for(9, cfg) == 16
+    assert bucket_size_for(33, cfg) == 64
+    assert bucket_size_for(500, cfg) == 64          # clamped to max
+    assert cfg.buckets() == [8, 16, 32, 64]
+    with pytest.raises(ValueError):
+        BucketConfig(min_bucket=6, max_bucket=64)   # not a power of two
+    with pytest.raises(ValueError):
+        BucketConfig(min_bucket=32, max_bucket=8)
+
+
+# ---------------------------------------------------------------- fixtures
+@pytest.fixture(scope="module")
+def trained(tiny_system):
+    """tiny_system + quickly-trained per-category policies (quality is
+    irrelevant here; parity and shape behaviour are what's under test)."""
+    policies = {cat: tiny_system.train_policy(cat, iters=10, batch=16)[0]
+                for cat in (CAT1, CAT2)}
+    return tiny_system, policies
+
+
+def _direct(sys_, policies, qids):
+    """Reference path: greedy_rollout + l1_prune, one category at a time."""
+    qids = np.asarray(qids)
+    ids = np.zeros((len(qids), 100), np.int32)
+    sc = np.zeros((len(qids), 100), np.float32)
+    u = np.zeros(len(qids), np.int64)
+    for cat in (CAT1, CAT2):
+        m = sys_.log.category[qids] == cat
+        if not m.any():
+            continue
+        occ, scores, tp = sys_.batch_inputs(qids[m])
+        fin, _ = greedy_rollout(sys_.env_cfg, sys_.qcfg, sys_.ruleset,
+                                sys_.bins, policies[cat], occ, scores, tp)
+        i_, s_ = l1_prune(scores, fin.cand, keep=100)
+        ids[m], sc[m], u[m] = np.asarray(i_), np.asarray(s_), np.asarray(fin.u)
+    return ids, sc, u
+
+
+# ------------------------------------------------------ padding invariants
+def test_padding_lanes_never_contribute(trained):
+    """3 real queries padded up to a bucket of 8: responses exist only
+    for the real lanes and are identical to an unpadded direct rollout."""
+    sys_, policies = trained
+    engine = ServeEngine(sys_, policies, EngineConfig(
+        min_bucket=8, max_bucket=8, cache_capacity=0))
+    qids = np.where(sys_.log.category == CAT1)[0][:3]
+    responses = engine.serve(qids)
+    assert len(responses) == 3
+    assert engine.take_response(999) is None         # nothing extra completed
+    ids, sc, u = _direct(sys_, policies, qids)
+    for lane, r in enumerate(responses):
+        assert not r.cached
+        np.testing.assert_array_equal(r.doc_ids, ids[lane])
+        np.testing.assert_allclose(r.scores, sc[lane], rtol=1e-6)
+        assert r.u == u[lane]
+    # the batch really was padded
+    assert engine.telemetry.batches[0]["bucket"] == 8
+    assert engine.telemetry.batches[0]["n_padded"] == 5
+
+
+# ---------------------------------------------------------- cache behaviour
+def test_cache_hit_parity(trained):
+    sys_, policies = trained
+    engine = ServeEngine(sys_, policies, EngineConfig(
+        min_bucket=8, max_bucket=16, cache_capacity=64))
+    qid = int(np.where(sys_.log.category == CAT2)[0][0])
+    (fresh,) = engine.serve([qid])
+    (hit,) = engine.serve([qid])
+    assert not fresh.cached and hit.cached
+    np.testing.assert_array_equal(fresh.doc_ids, hit.doc_ids)
+    np.testing.assert_allclose(fresh.scores, hit.scores, rtol=0)
+    assert fresh.u == hit.u
+    assert engine.cache.hits >= 1
+    # a cache hit never runs a new micro-batch
+    assert len(engine.telemetry.batches) == 1
+
+
+def test_cache_canonicalization(trained):
+    """Two distinct qids with the same term set share one cache entry."""
+    sys_, policies = trained
+    log = sys_.log
+    dup = None
+    seen = {}
+    for q in range(log.n_queries):
+        key = (int(log.category[q]),
+               tuple(sorted(t for t in log.terms[q] if t >= 0)))
+        if key in seen:
+            dup = (seen[key], q)
+            break
+        seen[key] = q
+    if dup is None:
+        pytest.skip("query log has no duplicate term sets")
+    engine = ServeEngine(sys_, policies, EngineConfig(
+        min_bucket=8, max_bucket=16, cache_capacity=64))
+    engine.serve([dup[0]])
+    (second,) = engine.serve([dup[1]])
+    assert second.cached
+
+
+# ------------------------------------------------------- end-to-end parity
+def test_engine_matches_direct_rollout(trained):
+    sys_, policies = trained
+    engine = ServeEngine(sys_, policies, EngineConfig(
+        min_bucket=8, max_bucket=16, cache_capacity=0, n_shards=1))
+    rng = np.random.default_rng(3)
+    qids = rng.integers(0, sys_.log.n_queries, size=24)
+    responses = engine.serve(qids)
+    ids, sc, u = _direct(sys_, policies, qids)
+    for lane, r in enumerate(responses):
+        assert r.qid == qids[lane]
+        np.testing.assert_array_equal(r.doc_ids, ids[lane])
+        np.testing.assert_allclose(r.scores, sc[lane], rtol=1e-6)
+        assert r.u == u[lane]
+
+
+# ------------------------------------------------------------------ shards
+def test_multishard_candidates_valid(trained):
+    sys_, policies = trained
+    engine = ServeEngine(sys_, policies, EngineConfig(
+        min_bucket=8, max_bucket=8, cache_capacity=0, n_shards=2))
+    qids = np.arange(8)
+    responses = engine.serve(qids)
+    n_docs_total = sys_.env_cfg.n_blocks * sys_.env_cfg.block_docs
+    for r in responses:
+        valid = r.doc_ids[r.doc_ids >= 0]
+        assert len(np.unique(valid)) == len(valid)      # no dup across shards
+        assert (valid < n_docs_total).all()
+        assert r.u > 0
+
+
+def test_bad_shard_count_rejected(trained):
+    sys_, policies = trained
+    with pytest.raises(ValueError):
+        ServeEngine(sys_, policies, EngineConfig(n_shards=3))  # 8 blocks % 3
+
+
+# ------------------------------------------------- steady-state compilation
+def test_zero_steady_state_retraces(trained):
+    sys_, policies = trained
+    engine = ServeEngine(sys_, policies, EngineConfig(
+        min_bucket=8, max_bucket=16, cache_capacity=0))
+    assert engine.warmup() == len(engine.bucket_cfg.buckets())
+    rng = np.random.default_rng(5)
+    for _ in range(4):                      # mixed CAT1/CAT2 stream
+        engine.serve(rng.integers(0, sys_.log.n_queries, size=13))
+    assert engine.compile_count == len(engine.bucket_cfg.buckets())
+
+
+# -------------------------------------------------------------- admission
+def test_admission_load_shedding(trained):
+    sys_, policies = trained
+    engine = ServeEngine(sys_, policies, EngineConfig(
+        min_bucket=8, max_bucket=8, cache_capacity=0, admission_limit=2))
+    engine.submit(0)
+    engine.submit(1)
+    with pytest.raises(AdmissionError):
+        engine.submit(2)
+    assert engine.telemetry.rejected == 1
+    engine.flush()                           # queued work still completes
+    assert engine.take_response(0) is not None
+
+
+# -------------------------------------------------------------- telemetry
+def test_summary_shape(trained):
+    sys_, policies = trained
+    engine = ServeEngine(sys_, policies, EngineConfig(
+        min_bucket=8, max_bucket=8, cache_capacity=16))
+    engine.serve([0, 1, 2, 0])
+    s = engine.summary()
+    for k in ("n_requests", "qps", "latency_p50_ms", "latency_p99_ms",
+              "mean_u", "p99_u", "cache_hit_rate", "compile_count",
+              "padding_overhead"):
+        assert k in s
+    assert s["n_requests"] == 4
+    assert s["mean_u"] > 0
