@@ -1,7 +1,13 @@
 PYTHON ?= python
 export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH),)
 
-.PHONY: test serve-bench bench serve example
+.PHONY: check compile test serve-bench bench serve example
+
+# CI gate: byte-compile everything, then the tier-1 suite
+check: compile test
+
+compile:
+	$(PYTHON) -m compileall -q src benchmarks examples tests
 
 # Tier-1 verify (ROADMAP.md)
 test:

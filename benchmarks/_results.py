@@ -1,0 +1,40 @@
+"""Shared result recording for every benchmark entrypoint.
+
+All perf surfaces (kernels, plan executor, serving) write
+``results/<name>.json`` with one schema, so the perf trajectory across
+PRs is diffable from a single place::
+
+    {"name": ..., "config": {...}, "metrics": {...}, "git_rev": ...}
+"""
+from __future__ import annotations
+
+import json
+import subprocess
+from pathlib import Path
+
+RESULTS_DIR = Path("results")
+
+
+def git_rev() -> str:
+    try:
+        rev = subprocess.run(
+            ["git", "rev-parse", "--short", "HEAD"],
+            capture_output=True, text=True, timeout=10, check=True,
+        ).stdout.strip()
+        dirty = subprocess.run(
+            ["git", "status", "--porcelain"],
+            capture_output=True, text=True, timeout=10, check=True,
+        ).stdout.strip()
+        return f"{rev}-dirty" if dirty else rev
+    except Exception:
+        return "unknown"
+
+
+def record(name: str, config: dict, metrics: dict) -> Path:
+    """Write one benchmark result in the shared schema; returns the path."""
+    RESULTS_DIR.mkdir(parents=True, exist_ok=True)
+    out = {"name": name, "config": config, "metrics": metrics,
+           "git_rev": git_rev()}
+    path = RESULTS_DIR / f"{name}.json"
+    path.write_text(json.dumps(out, indent=1))
+    return path

@@ -17,18 +17,26 @@ def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--full", action="store_true",
                     help="retrain policies for Table 1 (slower)")
+    ap.add_argument("--serve-bench", action=argparse.BooleanOptionalAction,
+                    default=True,
+                    help="run the serving engine benchmark "
+                         "(--no-serve-bench to skip)")
     args = ap.parse_args()
+
+    from benchmarks._results import record
 
     print("== kernel microbenchmarks ==")
     from benchmarks import kernel_bench
     kernel_bench.main()
 
-    print("\n== match-plan executor ==")
+    print("\n== match-plan executor (unified_rollout, StaticPlanPolicy) ==")
     import jax
     import numpy as np
 
+    from repro.core.rollout import unified_rollout
     from repro.index.corpus import CorpusConfig
     from repro.data.querylog import QueryLogConfig
+    from repro.policies import StaticPlanPolicy
     from repro.system import RetrievalSystem, SystemConfig
 
     sys_ = RetrievalSystem(SystemConfig(
@@ -38,20 +46,27 @@ def main() -> None:
     ))
     qids = np.arange(64)
     occ, scores, tp = sys_.batch_inputs(qids)
-    from repro.core.match_plan import batched_run_plan
     plan = sys_.plans["CAT2"]
+    policy = StaticPlanPolicy(plan, sys_.env_cfg.n_actions)
     fn = lambda: jax.block_until_ready(
-        batched_run_plan(sys_.env_cfg, sys_.ruleset, plan, occ, scores, tp)[0].u)
+        unified_rollout(sys_.env_cfg, sys_.ruleset, None, policy, plan.length,
+                        occ, scores, tp).final_state.u)
     fn()
     t0 = time.time()
     for _ in range(5):
         fn()
     us = (time.time() - t0) / 5 * 1e6
     print(f"plan_executor_64q_4096d,{us:.0f},{us/64:.0f}us_per_query_host")
+    record("plan_executor",
+           config={"n_docs": 4096, "batch": 64, "plan": "CAT2"},
+           metrics={"us_per_call": us, "us_per_query_host": us / 64})
 
-    print("\n== serving engine (QPS / p99 / steady-state retraces) ==")
-    from benchmarks import serve_bench
-    serve_bench.main(fast=not args.full)
+    if args.serve_bench:
+        print("\n== serving engine (QPS / p99 / steady-state retraces) ==")
+        from benchmarks import serve_bench
+        serve_bench.main(fast=not args.full)
+    else:
+        print("\n(serving engine benchmark skipped: --no-serve-bench)")
 
     # Table 1 / Figure 2
     if args.full:

@@ -14,18 +14,18 @@ Prints ``name,value`` CSV rows and writes results/serve_bench.json:
 from __future__ import annotations
 
 import argparse
-import json
 import time
-from pathlib import Path
 
 import numpy as np
 
 
 def _rollout_cache_size() -> int:
-    """Tracing count of the shared greedy_rollout jit (version-tolerant)."""
-    from repro.core.qlearning import greedy_rollout
+    """Tracing count of the shared unified_rollout jit (version-tolerant).
+    Every rollout path — the naive per-category split and the engine's
+    bucketed executables — routes through this one scan now."""
+    from repro.core.rollout import unified_rollout
     try:
-        return int(greedy_rollout._cache_size())
+        return int(unified_rollout._cache_size())
     except Exception:
         return -1
 
@@ -35,7 +35,7 @@ def naive_serve_batches(sys_, policies, batches, keep: int = 100):
     variable-size mask split per category per batch."""
     import jax
 
-    from repro.core.qlearning import greedy_rollout
+    from repro.core.rollout import unified_rollout
     from repro.core.telescope import l1_prune
     from repro.data.querylog import CAT1, CAT2
 
@@ -48,9 +48,9 @@ def naive_serve_batches(sys_, policies, batches, keep: int = 100):
             if not m.any():
                 continue
             shapes_seen.add((cat, int(m.sum())))
-            fin, _ = greedy_rollout(sys_.env_cfg, sys_.qcfg, sys_.ruleset,
-                                    sys_.bins, policies[cat],
-                                    occ[m], scores[m], tp[m])
+            fin = unified_rollout(sys_.env_cfg, sys_.ruleset, sys_.bins,
+                                  policies[cat], sys_.qcfg.t_max,
+                                  occ[m], scores[m], tp[m]).final_state
             ids, _ = l1_prune(scores[m], fin.cand, keep=keep)
         if ids is not None:
             jax.block_until_ready(ids)
@@ -65,6 +65,7 @@ def engine_serve_batches(engine, batches):
 def build_system(n_docs: int, n_queries: int, iters: int):
     from repro.data.querylog import CAT1, CAT2, QueryLogConfig
     from repro.index.corpus import CorpusConfig
+    from repro.policies import TabularQPolicy
     from repro.system import RetrievalSystem, SystemConfig
 
     sys_ = RetrievalSystem(SystemConfig(
@@ -74,7 +75,8 @@ def build_system(n_docs: int, n_queries: int, iters: int):
     ))
     sys_.fit_l1(n_queries=96)
     sys_.fit_state_bins(n_queries=64)
-    policies = {cat: sys_.train_policy(cat, iters=iters, batch=32)[0]
+    policies = {cat: TabularQPolicy(sys_.train_policy(cat, iters=iters,
+                                                      batch=32)[0])
                 for cat in (CAT1, CAT2)}
     return sys_, policies
 
@@ -135,8 +137,12 @@ def main(fast: bool = False) -> dict:
     for k, v in out.items():
         print(f"serve_bench.{k},{v:.4f}" if isinstance(v, float)
               else f"serve_bench.{k},{v}")
-    Path("results").mkdir(parents=True, exist_ok=True)
-    Path("results/serve_bench.json").write_text(json.dumps(out, indent=1))
+    from benchmarks._results import record
+    record("serve_bench",
+           config={"fast": fast, "n_docs": n_docs, "n_queries": n_queries,
+                   "train_iters": iters, "batch": batch,
+                   "n_batches": n_batches},
+           metrics=out)
     return out
 
 

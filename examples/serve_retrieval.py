@@ -1,6 +1,12 @@
-"""Serve queries through the online engine: L0 learned policy → shard
-merge → L1 prune, with admission, result caching and shape-bucketed
+"""Serve queries through the online engine: L0 policy → shard merge →
+L1 prune, with admission, result caching and shape-bucketed
 micro-batching (docs/serving.md).
+
+Demonstrates the unified Policy API (docs/policies.md): trained
+Q-table policies are published to a versioned PolicyStore, the engine
+serves snapshot v1, and publishing the hand-tuned static plans as v2
+hot-swaps the serving policy — no engine restart, result cache
+flushed, new executables compiled for the new policy structure.
 
     PYTHONPATH=src python examples/serve_retrieval.py
 """
@@ -22,20 +28,32 @@ def main() -> None:
     ))
     sys_.fit_l1(n_queries=96)
     sys_.fit_state_bins(n_queries=64)
-    policies = {cat: sys_.train_policy(cat, iters=60, batch=32)[0]
-                for cat in (CAT1, CAT2)}
+    store = sys_.train_policy_store(cats=(CAT1, CAT2), iters=60, batch=32)
 
-    engine = ServeEngine(sys_, policies, EngineConfig(
+    engine = ServeEngine(sys_, store, EngineConfig(
         min_bucket=8, max_bucket=32, cache_capacity=512, n_shards=2))
     engine.warmup()
 
     rng = np.random.default_rng(0)
     qids = rng.integers(0, sys_.log.n_queries, size=96)
-    responses = engine.serve(qids)
+    learned = engine.serve(qids)
 
-    r0 = responses[0]
+    r0 = learned[0]
     print(f"query {r0.qid} (cat {r0.category}): u={r0.u} "
-          f"top doc ids {r0.doc_ids[:5].tolist()}")
+          f"top doc ids {r0.doc_ids[:5].tolist()} "
+          f"[policy snapshot v{engine.policy_version}]")
+
+    # Hot-swap: publish the hand-tuned production plans as snapshot v2.
+    # The same engine serves them on the next drain — the baseline is
+    # just another Policy.
+    store.publish(sys_.baseline_policies((CAT1, CAT2)))
+    baseline = engine.serve(qids)
+    u_learned = np.mean([r.u for r in learned])
+    u_baseline = np.mean([r.u for r in baseline])
+    print(f"hot-swapped to v{engine.policy_version}: "
+          f"mean u learned={u_learned:.0f} vs static plan={u_baseline:.0f} "
+          f"({100 * (u_learned - u_baseline) / u_baseline:+.1f}%)")
+
     print("engine summary:", json.dumps(engine.summary(), indent=1))
 
 

@@ -11,17 +11,18 @@ executing.  Executing a plan yields the baseline trajectory used for
 from __future__ import annotations
 
 import dataclasses
-from functools import partial
+import warnings
 from typing import Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from .environment import EnvConfig, EnvState, env_reset, execute_rule
+from .environment import EnvConfig, EnvState
 from .match_rules import RuleSet
 
-__all__ = ["MatchPlan", "make_plan", "production_plans", "run_plan", "batched_run_plan"]
+__all__ = ["MatchPlan", "make_plan", "production_plans", "plan_rollout",
+           "run_plan", "batched_run_plan"]
 
 
 @jax.tree_util.register_pytree_node_class
@@ -89,7 +90,24 @@ def production_plans(ruleset: RuleSet) -> dict:
     }
 
 
-@partial(jax.jit, static_argnums=(0,))
+def plan_rollout(cfg, ruleset, plan, occ, scores, term_present):
+    """Batched plan execution through the unified rollout engine.
+    Returns (final_state, trajectory with (B, L) leaves) — the
+    supported replacement for run_plan/batched_run_plan."""
+    # Local imports: repro.policies wraps MatchPlan, so importing it at
+    # module scope would be circular.
+    from repro.core.rollout import unified_rollout
+    from repro.policies import StaticPlanPolicy
+
+    policy = StaticPlanPolicy(plan, cfg.n_actions)
+    res = unified_rollout(
+        cfg, ruleset, None, policy, plan.length, occ, scores, term_present
+    )
+    traj = jax.tree_util.tree_map(lambda x: jnp.moveaxis(x, 0, 1),
+                                  res.trajectory)                # (B, L)
+    return res.final_state, traj
+
+
 def run_plan(
     cfg: EnvConfig,
     ruleset: RuleSet,
@@ -98,31 +116,26 @@ def run_plan(
     scores: jnp.ndarray,
     term_present: jnp.ndarray,
 ) -> Tuple[EnvState, dict]:
-    """Execute a static plan for one query.  Returns the final state and
-    the per-entry trajectory {u, v, topn_sum, cand_cnt} (L,) arrays."""
-    state = env_reset(cfg)
-
-    def step(state: EnvState, entry):
-        rule_idx, reset_before, du_q, dv_q = entry
-        bp = jnp.where(reset_before, 0, state.block_ptr)
-        state = dataclasses.replace(state, block_ptr=bp)
-        allowed, required, _, _ = ruleset.gather(rule_idx)
-        state = execute_rule(cfg, occ, scores, term_present, state, allowed, required, du_q, dv_q)
-        traj = {
-            "u": state.u,
-            "v": state.v,
-            "topn_sum": jnp.sum(jnp.where(jnp.isfinite(state.topn), state.topn, 0.0)),
-            "cand_cnt": state.cand_cnt,
-        }
-        return state, traj
-
-    entries = (plan.rule_idx, plan.reset_before, plan.du_quota, plan.dv_quota)
-    state, traj = jax.lax.scan(step, state, entries)
-    return state, traj
+    """Deprecated: execute a static plan for one query.  Returns the
+    final state and the per-entry trajectory {u, v, topn_sum, cand_cnt}
+    (L,) arrays.  Use ``unified_rollout`` + ``StaticPlanPolicy``."""
+    warnings.warn(
+        "run_plan is deprecated; use repro.core.rollout.unified_rollout "
+        "with repro.policies.StaticPlanPolicy",
+        DeprecationWarning, stacklevel=2)
+    final, traj = plan_rollout(
+        cfg, ruleset, plan,
+        occ[None], scores[None], term_present[None])
+    final = jax.tree_util.tree_map(lambda x: x[0], final)
+    traj = {k: v[0] for k, v in traj.items()}
+    return final, traj
 
 
-@partial(jax.jit, static_argnums=(0,))
 def batched_run_plan(cfg, ruleset, plan, occ, scores, term_present):
-    return jax.vmap(lambda o, s, t: run_plan(cfg, ruleset, plan, o, s, t))(
-        occ, scores, term_present
-    )
+    """Deprecated batched plan executor (thin unified_rollout wrapper)."""
+    warnings.warn(
+        "batched_run_plan is deprecated; use "
+        "repro.core.rollout.unified_rollout with "
+        "repro.policies.StaticPlanPolicy",
+        DeprecationWarning, stacklevel=2)
+    return plan_rollout(cfg, ruleset, plan, occ, scores, term_present)

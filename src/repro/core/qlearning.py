@@ -1,26 +1,30 @@
 """Table-based Q-learning for dynamic match planning (paper §4).
 
-Q is a dense (p, k+2) table.  Rollouts are fully on-device: a
-``lax.scan`` over agent steps wrapping the batched environment, with
-ε-greedy behaviour during training and greedy action selection at test
-time.  TD(0) updates are batched: transitions landing in the same
-(state, action) cell are averaged (scatter-mean) before the learning-
-rate step, which keeps the update order-independent and deterministic.
+Q is a dense (p, k+2) table.  Rollouts are fully on-device through the
+single ``repro.core.rollout.unified_rollout`` scan: ε-greedy behaviour
+during training (``EpsilonGreedy(TabularQPolicy(q), ε)``) and greedy
+action selection at test time (``TabularQPolicy``).  TD(0) updates are
+batched: transitions landing in the same (state, action) cell are
+averaged (scatter-mean) before the learning-rate step, which keeps the
+update order-independent and deterministic.
+
+``rollout`` / ``greedy_rollout`` remain as deprecated thin wrappers
+over the unified engine.
 """
 from __future__ import annotations
 
 import dataclasses
+import warnings
 from functools import partial
 from typing import Tuple
 
 import jax
 import jax.numpy as jnp
-from jax import lax
 
-from .environment import EnvConfig, EnvState, env_reset, env_step
+from .environment import EnvConfig, EnvState
 from .match_rules import RuleSet
-from .reward import step_reward
-from .state_bins import StateBins, bin_index
+from .rollout import unified_rollout
+from .state_bins import StateBins
 
 __all__ = ["QConfig", "init_q", "rollout", "td_update", "train_batch", "greedy_rollout"]
 
@@ -40,8 +44,15 @@ def init_q(qcfg: QConfig) -> jnp.ndarray:
     return jnp.full((qcfg.p, qcfg.n_actions), qcfg.optimistic_init, jnp.float32)
 
 
-def _batch_reset(cfg: EnvConfig, batch: int) -> EnvState:
-    return jax.vmap(lambda _: env_reset(cfg))(jnp.arange(batch))
+def _epsilon_rollout(cfg, qcfg, ruleset, bins, q, occ, scores, term_present,
+                     prod_rewards, epsilon, rng):
+    """ε-greedy training episode through the unified engine."""
+    from repro.policies import EpsilonGreedy, TabularQPolicy
+
+    policy = EpsilonGreedy(TabularQPolicy(q), epsilon)
+    res = unified_rollout(cfg, ruleset, bins, policy, qcfg.t_max,
+                          occ, scores, term_present, prod_rewards, rng)
+    return res.final_state, res.transitions
 
 
 def rollout(
@@ -57,41 +68,16 @@ def rollout(
     epsilon: jnp.ndarray,      # () float32
     rng: jax.Array,
 ) -> Tuple[EnvState, dict]:
-    """ε-greedy episode for a query batch.  Returns final states and the
-    transition set {s, a, r, s2, done, valid} each (T_max, B)."""
-    batch = occ.shape[0]
-    state0 = _batch_reset(cfg, batch)
-    lp = prod_rewards.shape[1]
-
-    def step(carry, t):
-        state, rng = carry
-        rng, k1, k2 = jax.random.split(rng, 3)
-
-        s_bin = bin_index(bins, state.u, state.v)              # (B,)
-        greedy = jnp.argmax(q[s_bin], axis=-1).astype(jnp.int32)
-        explore = jax.random.randint(k1, (batch,), 0, qcfg.n_actions, dtype=jnp.int32)
-        take_explore = jax.random.uniform(k2, (batch,)) < epsilon
-        action = jnp.where(take_explore, explore, greedy)
-
-        new_state = jax.vmap(partial(env_step, cfg, ruleset))(
-            occ, scores, term_present, state, action
-        )
-        r_prod_t = prod_rewards[:, jnp.minimum(t, lp - 1)]
-        r = jax.vmap(partial(step_reward, cfg))(state, new_state, r_prod_t)
-        s2_bin = bin_index(bins, new_state.u, new_state.v)
-
-        trans = {
-            "s": s_bin,
-            "a": action,
-            "r": r,
-            "s2": s2_bin,
-            "done": new_state.done,
-            "valid": ~state.done,
-        }
-        return (new_state, rng), trans
-
-    (final_state, _), transitions = lax.scan(step, (state0, rng), jnp.arange(qcfg.t_max))
-    return final_state, transitions
+    """Deprecated: ε-greedy episode for a query batch.  Returns final
+    states and the transition set {s, a, r, s2, done, valid} each
+    (T_max, B).  Use ``unified_rollout`` + ``EpsilonGreedy``."""
+    warnings.warn(
+        "qlearning.rollout is deprecated; use "
+        "repro.core.rollout.unified_rollout with "
+        "repro.policies.EpsilonGreedy(TabularQPolicy(q), eps)",
+        DeprecationWarning, stacklevel=2)
+    return _epsilon_rollout(cfg, qcfg, ruleset, bins, q, occ, scores,
+                            term_present, prod_rewards, epsilon, rng)
 
 
 def td_update(qcfg: QConfig, q: jnp.ndarray, transitions: dict) -> jnp.ndarray:
@@ -117,7 +103,7 @@ def td_update(qcfg: QConfig, q: jnp.ndarray, transitions: dict) -> jnp.ndarray:
 
 @partial(jax.jit, static_argnums=(0, 1))
 def train_batch(cfg, qcfg, ruleset, bins, q, occ, scores, term_present, prod_rewards, epsilon, rng):
-    final_state, transitions = rollout(
+    final_state, transitions = _epsilon_rollout(
         cfg, qcfg, ruleset, bins, q, occ, scores, term_present, prod_rewards, epsilon, rng
     )
     q_new = td_update(qcfg, q, transitions)
@@ -132,19 +118,16 @@ def train_batch(cfg, qcfg, ruleset, bins, q, occ, scores, term_present, prod_rew
     return q_new, metrics
 
 
-@partial(jax.jit, static_argnums=(0, 1))
 def greedy_rollout(cfg, qcfg, ruleset, bins, q, occ, scores, term_present):
-    """Test-time policy: greedy argmax over Q (paper §4)."""
-    batch = occ.shape[0]
-    state0 = _batch_reset(cfg, batch)
+    """Deprecated: test-time greedy argmax over Q (paper §4).  Use
+    ``unified_rollout`` + ``TabularQPolicy``."""
+    warnings.warn(
+        "greedy_rollout is deprecated; use "
+        "repro.core.rollout.unified_rollout with "
+        "repro.policies.TabularQPolicy(q)",
+        DeprecationWarning, stacklevel=2)
+    from repro.policies import TabularQPolicy
 
-    def step(state, _):
-        s_bin = bin_index(bins, state.u, state.v)
-        action = jnp.argmax(q[s_bin], axis=-1).astype(jnp.int32)
-        new_state = jax.vmap(partial(env_step, cfg, ruleset))(
-            occ, scores, term_present, state, action
-        )
-        return new_state, action
-
-    final_state, actions = lax.scan(step, state0, jnp.arange(qcfg.t_max))
-    return final_state, actions
+    res = unified_rollout(cfg, ruleset, bins, TabularQPolicy(q), qcfg.t_max,
+                          occ, scores, term_present)
+    return res.final_state, res.transitions["a"]

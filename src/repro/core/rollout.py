@@ -1,0 +1,181 @@
+"""The ONE rollout scan loop (Unified Policy API).
+
+Every regime the paper compares — static production match plans (§3),
+ε-greedy Q-learning episodes (§4), and greedy test-time/serving
+rollouts — is the same computation: a ``lax.scan`` over agent steps,
+where each step asks a *policy* for an action and advances the batched
+match environment.  Historically the repo had three bespoke copies of
+that loop (``match_plan.run_plan``, ``qlearning.rollout`` /
+``greedy_rollout``, and the AOT serve path); they now all route here.
+
+A policy emits a :class:`PolicyAction` — a structured action that is a
+superset of the paper's action space: the rule/reset/stop index, plus
+the static-plan extras (rewind the scan pointer before executing,
+per-entry Δu/Δv quota overrides).  With the extras at their neutral
+values (``reset_before=False``, quotas ``USE_RULE_QUOTA``) the step is
+bit-identical to the legacy ``env_step``; with them driven from a
+``MatchPlan`` entry it is bit-identical to the legacy plan executor.
+
+``unified_rollout`` returns BOTH products the old loops split between
+them: the transition set ``{s, a, r, s2, done, valid}`` (for TD
+updates) and the per-step trajectory ``{u, v, topn_sum, cand_cnt}``
+(for baseline metrics and state-bin fitting).
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Any, Dict, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from .environment import EnvConfig, EnvState, env_reset, execute_rule
+from .match_rules import RuleSet
+from .reward import step_reward
+from .state_bins import bin_index
+
+__all__ = [
+    "USE_RULE_QUOTA", "PolicyAction", "RolloutResult",
+    "policy_env_step", "unified_rollout",
+]
+
+# Sentinel quota: "use the rule library's own Δu/Δv stopping condition".
+USE_RULE_QUOTA = -1
+
+
+class PolicyAction(NamedTuple):
+    """Structured per-query action emitted by a Policy (all (B,) arrays)."""
+
+    action: jnp.ndarray        # int32 in [0, k+1]: rule idx, a_reset, a_stop
+    reset_before: jnp.ndarray  # bool — rewind block_ptr before executing
+    du_quota: jnp.ndarray      # int32 — Δu override, USE_RULE_QUOTA = default
+    dv_quota: jnp.ndarray      # int32 — Δv override, USE_RULE_QUOTA = default
+
+    @staticmethod
+    def plain(action: jnp.ndarray) -> "PolicyAction":
+        """Wrap a bare action index with neutral extras."""
+        a = action.astype(jnp.int32)
+        q = jnp.full_like(a, USE_RULE_QUOTA)
+        return PolicyAction(a, jnp.zeros(a.shape, jnp.bool_), q, q)
+
+
+class RolloutResult(NamedTuple):
+    final_state: EnvState            # batched (B, ...) leaves
+    transitions: Dict[str, Any]      # {s, a, r, s2, done, valid}: (T, B)
+    trajectory: Dict[str, Any]       # {u, v, topn_sum, cand_cnt}:  (T, B)
+
+
+def policy_env_step(
+    cfg: EnvConfig,
+    ruleset: RuleSet,
+    occ: jnp.ndarray,
+    scores: jnp.ndarray,
+    term_present: jnp.ndarray,
+    state: EnvState,
+    pa: PolicyAction,
+) -> EnvState:
+    """One agent step under a structured action (single query).
+
+    Equals the legacy ``env_step`` when the extras are neutral;
+    reset-before is applied unconditionally (plan semantics: the legacy
+    executor rewound the pointer regardless of budget exhaustion).
+    """
+    action = pa.action
+    is_rule = action < cfg.k_rules
+    is_reset = action == cfg.a_reset
+    is_stop = action == cfg.a_stop
+
+    bp = jnp.where(pa.reset_before, 0, state.block_ptr)
+    state = dataclasses.replace(state, block_ptr=bp)
+
+    rule_idx = jnp.minimum(action, cfg.k_rules - 1)
+    allowed, required, du_q, dv_q = ruleset.gather(rule_idx)
+    du_q = jnp.where(pa.du_quota >= 0, pa.du_quota, du_q)
+    dv_q = jnp.where(pa.dv_quota >= 0, pa.dv_quota, dv_q)
+    # Zero quotas make the inner loop a no-op for reset/stop/done.
+    du_q = jnp.where(is_rule & ~state.done, du_q, 0)
+    dv_q = jnp.where(is_rule & ~state.done, dv_q, 0)
+
+    nstate = execute_rule(
+        cfg, occ, scores, term_present, state, allowed, required, du_q, dv_q
+    )
+
+    block_ptr = jnp.where(is_reset & ~state.done, 0, nstate.block_ptr)
+    done = state.done | is_stop | (nstate.u >= cfg.u_budget)
+    return dataclasses.replace(nstate, block_ptr=block_ptr, done=done)
+
+
+def _batch_reset(cfg: EnvConfig, batch: int) -> EnvState:
+    return jax.vmap(lambda _: env_reset(cfg))(jnp.arange(batch))
+
+
+@partial(jax.jit, static_argnums=(0, 4))
+def unified_rollout(
+    cfg: EnvConfig,
+    ruleset: RuleSet,
+    bins,                          # StateBins or None (policies that bin)
+    policy,                        # repro.policies.Policy (a pytree)
+    t_max: int,                    # static: episode length
+    occ: jnp.ndarray,              # (B, n_blocks, T, F, W) uint32
+    scores: jnp.ndarray,           # (B, n_pad) float32
+    term_present: jnp.ndarray,     # (B, T) bool
+    prod_rewards: Optional[jnp.ndarray] = None,  # (B, Lp) Eq. 4 subtrahend
+    rng: Optional[jax.Array] = None,
+) -> RolloutResult:
+    """Run ``policy`` for ``t_max`` steps over a query batch.
+
+    The compiled executable is keyed on (cfg, t_max, policy *structure*);
+    policy parameters (Q-tables, plan entries, ε) are runtime arguments,
+    so e.g. publishing a new Q-table snapshot never retraces.
+    """
+    batch = occ.shape[0]
+    state0 = _batch_reset(cfg, batch)
+    if prod_rewards is None:
+        prod_rewards = jnp.zeros((batch, 1), jnp.float32)
+    if rng is None:
+        rng = jax.random.key(0)
+    lp = prod_rewards.shape[1]
+
+    def state_bin(state: EnvState) -> jnp.ndarray:
+        if bins is None:
+            return jnp.zeros((batch,), jnp.int32)
+        return bin_index(bins, state.u, state.v)
+
+    def step(carry, t):
+        state, rng = carry
+        rng, sub = jax.random.split(rng)
+
+        s_bin = state_bin(state)
+        pa = policy.act(s_bin, state, sub, t)
+        new_state = jax.vmap(partial(policy_env_step, cfg, ruleset))(
+            occ, scores, term_present, state, pa
+        )
+
+        r_prod_t = prod_rewards[:, jnp.minimum(t, lp - 1)]
+        r = jax.vmap(partial(step_reward, cfg))(state, new_state, r_prod_t)
+
+        trans = {
+            "s": s_bin,
+            "a": pa.action,
+            "r": r,
+            "s2": state_bin(new_state),
+            "done": new_state.done,
+            "valid": ~state.done,
+        }
+        traj = {
+            "u": new_state.u,
+            "v": new_state.v,
+            "topn_sum": jnp.sum(
+                jnp.where(jnp.isfinite(new_state.topn), new_state.topn, 0.0),
+                axis=-1,
+            ),
+            "cand_cnt": new_state.cand_cnt,
+        }
+        return (new_state, rng), (trans, traj)
+
+    (final_state, _), (transitions, trajectory) = lax.scan(
+        step, (state0, rng), jnp.arange(t_max)
+    )
+    return RolloutResult(final_state, transitions, trajectory)

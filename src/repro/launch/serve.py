@@ -37,6 +37,8 @@ def main() -> None:
                     help="result-cache capacity (0 disables)")
     ap.add_argument("--shards", type=int, default=1,
                     help="logical index shards for scatter-gather serving")
+    ap.add_argument("--backend", default="xla",
+                    help="rollout backend (see repro.serving.available_backends)")
     args = ap.parse_args()
 
     from repro.data.querylog import CAT1, CAT2, QueryLogConfig
@@ -51,15 +53,18 @@ def main() -> None:
     ))
     sys_.fit_l1(n_queries=128)
     sys_.fit_state_bins(n_queries=96)
-    policies = {}
-    for cat in (CAT1, CAT2):
-        policies[cat], _ = sys_.train_policy(cat, iters=args.iters, batch=48)
+    # Trained tabular policies published as snapshot v1 of a PolicyStore;
+    # the engine pins the snapshot and would pick up any later publish.
+    store = sys_.train_policy_store(cats=(CAT1, CAT2),
+                                    iters=args.iters, batch=48)
 
-    engine = ServeEngine(sys_, policies, EngineConfig(
+    engine = ServeEngine(sys_, store, EngineConfig(
         min_bucket=args.min_bucket, max_bucket=args.max_bucket,
-        cache_capacity=args.cache, n_shards=args.shards))
+        cache_capacity=args.cache, n_shards=args.shards,
+        backend=args.backend))
     n_compiles_warm = engine.warmup()
-    print(f"warmup: {n_compiles_warm} bucket executables compiled")
+    print(f"warmup: {n_compiles_warm} bucket executables compiled "
+          f"(policy snapshot v{engine.policy_version})")
 
     stats = []
     rng = np.random.default_rng(0)

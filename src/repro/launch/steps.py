@@ -459,12 +459,14 @@ def _build_websearch(arch: ArchDef, shape_name: str, mesh, reduced: bool) -> Cel
     from jax.experimental.shard_map import shard_map
 
     from repro.core.environment import EnvConfig
-    from repro.core.qlearning import QConfig, greedy_rollout, train_batch
+    from repro.core.qlearning import QConfig, train_batch
+    from repro.core.rollout import unified_rollout
     from repro.core.state_bins import StateBins
     from repro.core.match_rules import default_rule_library
     from repro.core.telescope import merge_shard_candidates
     from repro.index.builder import MAX_QUERY_TERMS
     from repro.index.corpus import N_FIELDS
+    from repro.policies import TabularQPolicy
 
     wcfg = arch.model_cfg(reduced)
     spec = arch.shape(shape_name)
@@ -498,8 +500,8 @@ def _build_websearch(arch: ArchDef, shape_name: str, mesh, reduced: bool) -> Cel
 
     if spec.kind == "serve_websearch":
         def local_serve(qt, bins, occ, scores, tp):
-            final, actions = greedy_rollout(env_cfg, qcfg, ruleset, bins, qt,
-                                            occ, scores, tp)
+            final = unified_rollout(env_cfg, ruleset, bins, TabularQPolicy(qt),
+                                    qcfg.t_max, occ, scores, tp).final_state
             if mesh is None:
                 return final.cand, final.u, final.cand_cnt
             shard = jax.lax.axis_index("model")

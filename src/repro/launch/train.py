@@ -27,11 +27,10 @@ import numpy as np
 
 
 def train_policy_cmd(args) -> None:
-    import jax.numpy as jnp
-
     from repro.data.querylog import CAT1, CAT2, QueryLogConfig
     from repro.distributed.checkpoint import CheckpointManager
     from repro.index.corpus import CorpusConfig
+    from repro.policies import PolicyStore, TabularQPolicy
     from repro.ranking.metrics import relative_delta
     from repro.system import RetrievalSystem, SystemConfig
 
@@ -47,20 +46,31 @@ def train_policy_cmd(args) -> None:
     sys_.fit_state_bins(n_queries=128)
     print(f"[bins] p={sys_.bins.p}")
 
+    # Trained policies are published per category into a PolicyStore —
+    # a serving engine subscribed to this store would hot-swap to each
+    # new version (the serve-while-training loop, docs/policies.md).
+    # Every snapshot must cover every category, so not-yet-trained ones
+    # serve the hand-tuned static plan.
+    store = PolicyStore(staleness_bound=1)
     mgr = CheckpointManager(args.ckpt_dir, keep=2)
     out = {}
+    trained = sys_.baseline_policies((CAT1, CAT2))
     for cat, name in ((CAT1, "CAT1"), (CAT2, "CAT2")):
         q, hist = sys_.train_policy(cat, iters=args.iters, batch=args.batch,
                                     log_every=max(args.iters // 8, 1))
         mgr.save(cat, {"q": q})
+        trained[cat] = TabularQPolicy(q)
+        version = store.publish(dict(trained))
         qids = np.where(sys_.log.category == cat)[0][:256]
         res = sys_.evaluate(q, qids, cat)
         out[name] = {
             "delta_u_pct": relative_delta(res["policy_u"], res["baseline_u"]),
             "delta_ncg_pct": relative_delta(res["policy_ncg"], res["baseline_ncg"]),
+            "policy_version": version,
         }
         print(f"[{name}] Δu={out[name]['delta_u_pct']:+.1f}%  "
-              f"ΔNCG={out[name]['delta_ncg_pct']:+.1f}%")
+              f"ΔNCG={out[name]['delta_ncg_pct']:+.1f}%  "
+              f"(published policy snapshot v{version})")
     Path(args.out).parent.mkdir(parents=True, exist_ok=True)
     Path(args.out).write_text(json.dumps(out, indent=1))
 

@@ -1,0 +1,19 @@
+"""Unified Policy API (docs/policies.md).
+
+Static production plans, learned tabular Q policies, and exploration
+wrappers all implement one protocol and run through the single
+``repro.core.rollout.unified_rollout`` scan; ``PolicyStore`` versions
+immutable snapshots for serve-while-training.
+"""
+from repro.core.rollout import PolicyAction, RolloutResult, USE_RULE_QUOTA, unified_rollout
+
+from .base import Policy
+from .static_plan import StaticPlanPolicy
+from .store import PolicySnapshot, PolicyStore, StalePolicyError
+from .tabular import EpsilonGreedy, TabularQPolicy
+
+__all__ = [
+    "EpsilonGreedy", "Policy", "PolicyAction", "PolicySnapshot",
+    "PolicyStore", "RolloutResult", "StalePolicyError", "StaticPlanPolicy",
+    "TabularQPolicy", "USE_RULE_QUOTA", "unified_rollout",
+]

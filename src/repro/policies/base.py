@@ -1,0 +1,46 @@
+"""The Policy protocol — anything that can drive `unified_rollout`.
+
+A policy is a *pytree*: its parameters (Q-table, plan entries, ε) are
+leaves, so they are runtime arguments of compiled rollouts, while its
+class and static metadata are aux data, so the executable cache keys on
+policy *structure* only.  Publishing new parameters through a
+:class:`repro.policies.PolicyStore` therefore never retraces.
+
+Required surface::
+
+    act(s_bin, state, rng, t) -> PolicyAction   # traced, batched
+    n_actions: int                              # k_rules + 2
+    horizon:   Optional[int]                    # natural episode length
+
+``act`` receives the discretized state index ``s_bin`` (B,), the full
+batched :class:`EnvState` (for richer policies that look beyond the
+paper's (u, v) bins), a per-step PRNG key, and the step counter ``t``.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+from repro.core.rollout import PolicyAction, USE_RULE_QUOTA  # re-export
+
+__all__ = ["Policy", "PolicyAction", "USE_RULE_QUOTA"]
+
+
+class Policy:
+    """Base class for rollout policies (subclasses register as pytrees)."""
+
+    def act(self, s_bin, state, rng, t) -> PolicyAction:
+        raise NotImplementedError
+
+    @property
+    def n_actions(self) -> int:
+        raise NotImplementedError
+
+    @property
+    def horizon(self) -> Optional[int]:
+        """Natural episode length, or None to use the caller's t_max."""
+        return None
+
+    def describe(self) -> dict:
+        """Human-readable metadata (kind + static structure)."""
+        return {"kind": type(self).__name__, "n_actions": self.n_actions,
+                "horizon": self.horizon}

@@ -1,0 +1,69 @@
+"""StaticPlanPolicy — the hand-tuned production baseline as a Policy.
+
+Wrapping a :class:`~repro.core.match_plan.MatchPlan` makes the paper's
+"statically designed match plan" just another policy behind the same
+rollout engine: entry ``t`` of the plan becomes the step-``t`` action,
+including reset-before semantics and per-entry Δu/Δv quota overrides.
+Past the end of the plan the policy emits ``a_stop``, so it is safe to
+run under any ``t_max >= plan.length`` (serving uses a shared horizon).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.match_plan import MatchPlan
+from repro.core.rollout import PolicyAction, USE_RULE_QUOTA
+
+from .base import Policy
+
+__all__ = ["StaticPlanPolicy"]
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass
+class StaticPlanPolicy(Policy):
+    plan: MatchPlan
+    n_actions_: int               # k_rules + 2 (static: a_stop = n_actions-1)
+
+    def tree_flatten(self):
+        return ((self.plan,), (self.n_actions_,))
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        return cls(children[0], aux[0])
+
+    @property
+    def n_actions(self) -> int:
+        return self.n_actions_
+
+    @property
+    def horizon(self) -> Optional[int]:
+        return self.plan.length
+
+    def act(self, s_bin, state, rng, t) -> PolicyAction:
+        L = self.plan.length
+        b = s_bin.shape[0]
+        i = jnp.minimum(t, L - 1)
+        in_plan = t < L
+        a_stop = jnp.int32(self.n_actions_ - 1)
+
+        action = jnp.where(in_plan, self.plan.rule_idx[i], a_stop)
+        reset = jnp.where(in_plan, self.plan.reset_before[i], False)
+        du = jnp.where(in_plan, self.plan.du_quota[i], USE_RULE_QUOTA)
+        dv = jnp.where(in_plan, self.plan.dv_quota[i], USE_RULE_QUOTA)
+        bcast = lambda x, dt: jnp.broadcast_to(x.astype(dt), (b,))
+        return PolicyAction(
+            action=bcast(action, jnp.int32),
+            reset_before=bcast(reset, jnp.bool_),
+            du_quota=bcast(du, jnp.int32),
+            dv_quota=bcast(dv, jnp.int32),
+        )
+
+    def describe(self) -> dict:
+        out = super().describe()
+        out["plan_length"] = self.plan.length
+        return out

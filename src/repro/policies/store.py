@@ -1,0 +1,121 @@
+"""Versioned policy snapshots: publish / snapshot / subscribe.
+
+The serve-while-training direction (ROADMAP "async replication") needs
+one primitive: a trainer publishes immutable policy snapshots with
+monotonically increasing version ids, and serving replicas pin a
+snapshot and periodically refresh, with a *staleness bound* — a replica
+more than ``staleness_bound`` versions behind the head must refuse to
+serve (``StalePolicyError``) rather than silently answer with an
+ancient policy.
+
+Thread-safe: ``publish`` may be called from a trainer thread while
+engine replicas ``snapshot``/``validate`` concurrently.  Snapshots are
+immutable (the category→policy dict is copied on publish).
+"""
+from __future__ import annotations
+
+import threading
+from dataclasses import dataclass
+from types import MappingProxyType
+from typing import Callable, Dict, List, Mapping, Optional
+
+from .base import Policy
+
+__all__ = ["PolicySnapshot", "PolicyStore", "StalePolicyError"]
+
+
+class StalePolicyError(RuntimeError):
+    """A consumer's pinned snapshot is older than the staleness bound."""
+
+
+@dataclass(frozen=True)
+class PolicySnapshot:
+    version: int                        # monotonically increasing, from 1
+    policies: Mapping[int, Policy]      # category -> Policy (read-only)
+
+    def describe(self) -> dict:
+        return {"version": self.version,
+                "policies": {k: p.describe() for k, p in self.policies.items()}}
+
+
+def _validate_policies(policies: Dict[int, Policy]) -> None:
+    if not isinstance(policies, dict) or not policies:
+        raise TypeError(
+            "PolicyStore.publish expects a non-empty {category: Policy} dict, "
+            f"got {type(policies).__name__}")
+    for cat, pol in policies.items():
+        if not isinstance(pol, Policy):
+            raise TypeError(
+                f"category {cat}: expected a repro.policies.Policy, got "
+                f"{type(pol).__name__}. Raw Q-table arrays are no longer "
+                "accepted — wrap them with TabularQPolicy(q) (or a "
+                "MatchPlan with StaticPlanPolicy(plan, n_actions)).")
+
+
+class PolicyStore:
+    def __init__(self, staleness_bound: int = 1):
+        if staleness_bound < 0:
+            raise ValueError("staleness_bound must be >= 0")
+        self.staleness_bound = staleness_bound
+        self._lock = threading.Lock()
+        self._snapshot: Optional[PolicySnapshot] = None
+        self._subscribers: List[Callable[[PolicySnapshot], None]] = []
+
+    # ------------------------------------------------------------ publish
+    def publish(self, policies: Dict[int, Policy]) -> int:
+        """Install a new snapshot; returns its (strictly increasing)
+        version id and notifies subscribers."""
+        _validate_policies(policies)
+        with self._lock:
+            version = (self._snapshot.version if self._snapshot else 0) + 1
+            snap = PolicySnapshot(version, MappingProxyType(dict(policies)))
+            self._snapshot = snap
+            subscribers = list(self._subscribers)
+        for cb in subscribers:
+            cb(snap)
+        return version
+
+    # ----------------------------------------------------------- consume
+    @property
+    def version(self) -> int:
+        """Head version (0 before the first publish)."""
+        snap = self._snapshot
+        return snap.version if snap else 0
+
+    def snapshot(self) -> PolicySnapshot:
+        snap = self._snapshot
+        if snap is None:
+            raise LookupError("PolicyStore has no published snapshot yet")
+        return snap
+
+    def subscribe(self, callback: Callable[[PolicySnapshot], None]) -> Callable[[], None]:
+        """Register ``callback(snapshot)`` for future publishes (and
+        immediately for the current snapshot, if any).  Returns an
+        unsubscribe function."""
+        with self._lock:
+            self._subscribers.append(callback)
+            snap = self._snapshot
+        if snap is not None:
+            callback(snap)
+
+        def unsubscribe() -> None:
+            with self._lock:
+                if callback in self._subscribers:
+                    self._subscribers.remove(callback)
+        return unsubscribe
+
+    def staleness(self, version: int) -> int:
+        """Versions between a pinned snapshot and the head."""
+        return self.version - version
+
+    def validate(self, version: int) -> int:
+        """Enforce the staleness bound on a pinned snapshot version.
+        Returns the staleness; raises :class:`StalePolicyError` beyond
+        the bound."""
+        staleness = self.staleness(version)
+        if staleness > self.staleness_bound:
+            raise StalePolicyError(
+                f"snapshot v{version} is {staleness} versions behind head "
+                f"v{self.version} (staleness_bound={self.staleness_bound}); "
+                "refresh before serving")
+        return staleness

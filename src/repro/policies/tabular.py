@@ -1,0 +1,90 @@
+"""Tabular policies over the discretized (u, v) state space (paper §4).
+
+``TabularQPolicy`` is the test-time/serving policy: greedy argmax over
+a dense (p, k+2) Q-table.  ``EpsilonGreedy`` wraps ANY inner policy
+with ε-exploration; ε is a traced leaf, so schedules (the linear decay
+the trainer uses) never retrace the rollout.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.rollout import PolicyAction, USE_RULE_QUOTA
+
+from .base import Policy
+
+__all__ = ["TabularQPolicy", "EpsilonGreedy"]
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass
+class TabularQPolicy(Policy):
+    q: jnp.ndarray                # (p, n_actions) float32
+
+    def tree_flatten(self):
+        return ((self.q,), None)
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        return cls(*children)
+
+    @property
+    def n_actions(self) -> int:
+        return self.q.shape[-1]
+
+    def act(self, s_bin, state, rng, t) -> PolicyAction:
+        greedy = jnp.argmax(self.q[s_bin], axis=-1).astype(jnp.int32)
+        return PolicyAction.plain(greedy)
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass
+class EpsilonGreedy(Policy):
+    """ε-greedy exploration wrapper; explored steps take a uniform
+    action with the rule library's default quotas and no reset-before."""
+
+    inner: Policy
+    epsilon: jnp.ndarray          # () float32, traced (schedulable)
+
+    def __post_init__(self):
+        self.epsilon = jnp.asarray(self.epsilon, jnp.float32)
+
+    def tree_flatten(self):
+        return ((self.inner, self.epsilon), None)
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        obj = object.__new__(cls)
+        obj.inner, obj.epsilon = children
+        return obj
+
+    @property
+    def n_actions(self) -> int:
+        return self.inner.n_actions
+
+    @property
+    def horizon(self):
+        return self.inner.horizon
+
+    def act(self, s_bin, state, rng, t) -> PolicyAction:
+        k0, k1, k2 = jax.random.split(rng, 3)
+        base = self.inner.act(s_bin, state, k0, t)
+        b = s_bin.shape[0]
+        explore = jax.random.randint(k1, (b,), 0, self.n_actions,
+                                     dtype=jnp.int32)
+        take = jax.random.uniform(k2, (b,)) < self.epsilon
+        neutral = jnp.full((b,), USE_RULE_QUOTA, jnp.int32)
+        return PolicyAction(
+            action=jnp.where(take, explore, base.action),
+            reset_before=jnp.where(take, False, base.reset_before),
+            du_quota=jnp.where(take, neutral, base.du_quota),
+            dv_quota=jnp.where(take, neutral, base.dv_quota),
+        )
+
+    def describe(self) -> dict:
+        out = super().describe()
+        out["inner"] = self.inner.describe()
+        return out

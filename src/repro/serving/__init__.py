@@ -1,20 +1,23 @@
-"""Online query-serving engine (docs/serving.md).
+"""Online query-serving engine (docs/serving.md, docs/policies.md).
 
 submit → admission → result cache → shape-bucketed micro-batch →
-pre-compiled per-shard rollout → scatter–gather merge → L1 prune →
-respond, with per-request latency/u telemetry.
+pre-compiled per-(bucket, policy-structure) rollout → scatter–gather
+merge → L1 prune → respond, with per-request latency/u telemetry.
+Policies come from a versioned `repro.policies.PolicyStore` snapshot.
 """
 from repro.serving.batcher import (BucketConfig, MicroBatch, PendingRequest,
                                    ShapeBucketBatcher, bucket_size_for)
 from repro.serving.cache import LRUResultCache, canonical_query_key
 from repro.serving.engine import (AdmissionError, EngineConfig, ServeEngine,
                                   ServeResponse)
-from repro.serving.executor import ShardedExecutor
+from repro.serving.executor import (ShardedExecutor, available_backends,
+                                    register_rollout_backend)
 from repro.serving.telemetry import Telemetry
 
 __all__ = [
     "AdmissionError", "BucketConfig", "EngineConfig", "LRUResultCache",
     "MicroBatch", "PendingRequest", "ServeEngine", "ServeResponse",
     "ShapeBucketBatcher", "ShardedExecutor", "Telemetry",
-    "bucket_size_for", "canonical_query_key",
+    "available_backends", "bucket_size_for", "canonical_query_key",
+    "register_rollout_backend",
 ]

@@ -91,6 +91,12 @@ class ShapeBucketBatcher:
     def enqueue(self, req: PendingRequest) -> None:
         self._queues.setdefault(req.category, deque()).append(req)
 
+    def requeue(self, reqs: List[PendingRequest]) -> None:
+        """Put a drained (but unexecuted) micro-batch back at the FRONT
+        of its queues, preserving FIFO order for the retry."""
+        for req in reversed(reqs):
+            self._queues.setdefault(req.category, deque()).appendleft(req)
+
     def pending(self, category: Optional[int] = None) -> int:
         if category is not None:
             return len(self._queues.get(category, ()))

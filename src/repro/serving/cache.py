@@ -58,6 +58,11 @@ class LRUResultCache:
             self._entries.popitem(last=False)
             self.evictions += 1
 
+    def clear(self) -> None:
+        """Drop every entry but keep the hit/miss/eviction counters
+        (used on policy hot-swaps; telemetry must span versions)."""
+        self._entries.clear()
+
     @property
     def hit_rate(self) -> float:
         total = self.hits + self.misses

@@ -7,17 +7,26 @@ Request flow (docs/serving.md has the full diagram):
            → L1 prune → respond (+ cache fill, telemetry)
 
 The engine wraps an already-trained `RetrievalSystem` (L1 ranker, state
-bins) plus one Q-table per query category.  `serve()` is the
-synchronous driver used by benchmarks and the CLI: it submits a stream,
-force-flushes the queues, and returns responses in submission order.
+bins) plus per-category `Policy` objects consumed from a versioned
+`PolicyStore` (docs/policies.md).  Passing a plain `{category: Policy}`
+dict wraps it in a single-snapshot store; raw Q-table ndarrays are
+rejected — wrap them with `TabularQPolicy`.  A trainer can keep
+publishing snapshots to the store while the engine serves: the engine
+refreshes to the head snapshot at each drain (flushing the result
+cache on a version change, since cached responses embody the old
+policy) and refuses to serve a snapshot older than the store's
+staleness bound.  `serve()` is the synchronous driver used by
+benchmarks and the CLI: it submits a stream, force-flushes the queues,
+and returns responses in submission order.
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, List, Optional, Sequence
+from typing import Dict, List, Optional, Sequence, Union
 
 import numpy as np
 
+from repro.policies import Policy, PolicyStore
 from repro.serving.batcher import (
     BucketConfig, MicroBatch, PendingRequest, ShapeBucketBatcher,
 )
@@ -37,6 +46,8 @@ class EngineConfig:
     keep: int = 100                # L1 prune depth (paper's NCG@100 cut)
     admission_limit: int = 4096    # max queued requests before shedding
     max_completed: int = 65536     # unclaimed-response bound (oldest evicted)
+    backend: str = "xla"           # rollout backend (see executor)
+    auto_refresh: bool = True      # pull the head policy snapshot per drain
 
 
 class AdmissionError(RuntimeError):
@@ -65,16 +76,28 @@ class _CachedResult:
 
 
 class ServeEngine:
-    def __init__(self, system, policies: Dict[int, "np.ndarray"],
+    def __init__(self, system,
+                 policies: Union[PolicyStore, Dict[int, Policy]],
                  cfg: EngineConfig = EngineConfig()):
         self.system = system
-        self.policies = dict(policies)
         self.cfg = cfg
+        if isinstance(policies, PolicyStore):
+            self.store = policies
+        elif isinstance(policies, dict):
+            # publish() validates entries and rejects raw ndarrays with
+            # a pointer at TabularQPolicy.
+            self.store = PolicyStore(staleness_bound=0)
+            self.store.publish(policies)
+        else:
+            raise TypeError(
+                "ServeEngine expects a PolicyStore or a {category: Policy} "
+                f"dict, got {type(policies).__name__}")
+        self._snapshot = self.store.snapshot()
         self.bucket_cfg = BucketConfig(cfg.min_bucket, cfg.max_bucket)
         self.batcher = ShapeBucketBatcher(self.bucket_cfg)
         self.cache = LRUResultCache(cfg.cache_capacity)
         self.executor = ShardedExecutor(system, n_shards=cfg.n_shards,
-                                        keep=cfg.keep)
+                                        keep=cfg.keep, backend=cfg.backend)
         self.telemetry = Telemetry()
         self._next_id = 0
         # Responses wait here until take_response(); bounded so callers
@@ -86,10 +109,38 @@ class ServeEngine:
         while len(self._completed) > self.cfg.max_completed:
             self._completed.pop(next(iter(self._completed)))
 
+    # ---------------------------------------------------------- policies
+    @property
+    def policy_version(self) -> int:
+        """Version of the snapshot currently being served."""
+        return self._snapshot.version
+
+    def refresh_policies(self) -> bool:
+        """Adopt the store's head snapshot.  Returns True on a version
+        change; the result cache is flushed then, because cached
+        responses were produced by the previous policy."""
+        snap = self.store.snapshot()
+        if snap.version == self._snapshot.version:
+            return False
+        self._snapshot = snap
+        self.cache.clear()
+        return True
+
+    def _policy_for(self, category: int) -> Policy:
+        self.store.validate(self._snapshot.version)
+        try:
+            return self._snapshot.policies[category]
+        except KeyError:
+            raise KeyError(
+                f"policy snapshot v{self._snapshot.version} has no policy "
+                f"for category {category}") from None
+
     # ------------------------------------------------------------ warmup
     def warmup(self) -> int:
-        """Pre-compile every bucket executable; returns compile count."""
-        self.executor.warmup(self.bucket_cfg.buckets())
+        """Pre-compile every (bucket, policy-structure) executable for
+        the current snapshot; returns the compile count."""
+        self.executor.warmup(self.bucket_cfg.buckets(),
+                             self._snapshot.policies.values())
         return self.executor.compile_count
 
     @property
@@ -103,6 +154,10 @@ class ServeEngine:
         Cache hits complete immediately; misses queue for the next
         micro-batch.  Raises AdmissionError when the queue is full.
         """
+        if self.cfg.auto_refresh:
+            # A publish between drains must not leave old-policy cache
+            # entries answering new submissions.
+            self.refresh_policies()
         if self.batcher.pending() >= self.cfg.admission_limit:
             self.telemetry.record_rejection()
             raise AdmissionError(
@@ -113,6 +168,9 @@ class ServeEngine:
         log = self.system.log
         cat = int(log.category[qid])
         key = canonical_query_key(log.terms[qid], cat)
+        # Cached responses embody the pinned snapshot's policy, so the
+        # staleness bound applies to hits exactly as to rollouts.
+        self.store.validate(self._snapshot.version)
         hit = self.cache.get(key)
         if hit is not None:
             t1 = Telemetry.now()
@@ -135,7 +193,7 @@ class ServeEngine:
         occ, scores, tp = self.system.batch_inputs(qids)
         t1 = Telemetry.now()
         ids, sc, u, cnt = self.executor.execute(
-            self.policies[mb.category], occ, scores, tp)
+            self._policy_for(mb.category), occ, scores, tp)
         t2 = Telemetry.now()
         self.telemetry.record_batch(category=mb.category, bucket=mb.bucket,
                                     n_real=mb.n_real, t_inputs_s=t1 - t0,
@@ -156,29 +214,36 @@ class ServeEngine:
                                           latency_s=latency, u=result.u,
                                           cached=False, t_done=t2)
 
+    def _drain_category(self, cat: int, force: bool) -> int:
+        n = 0
+        while True:
+            mb = self.batcher.drain(cat, force=force)
+            if mb is None:
+                break
+            try:
+                self._execute_batch(mb)
+            except Exception:
+                # A failed batch (stale snapshot, missing category,
+                # backend error) must not lose admitted requests: put
+                # them back at the front of the queue, FIFO preserved,
+                # before propagating.
+                self.batcher.requeue(mb.requests)
+                raise
+            n += 1
+        return n
+
     def step(self) -> int:
         """Drain every full bucket; returns micro-batches executed."""
-        n = 0
-        for cat in self.batcher.categories():
-            while True:
-                mb = self.batcher.drain(cat, force=False)
-                if mb is None:
-                    break
-                self._execute_batch(mb)
-                n += 1
-        return n
+        if self.cfg.auto_refresh:
+            self.refresh_policies()
+        return sum(self._drain_category(cat, force=False)
+                   for cat in self.batcher.categories())
 
     def flush(self) -> int:
         """Force-drain everything (partial buckets padded up)."""
         n = self.step()
-        for cat in self.batcher.categories():
-            while True:
-                mb = self.batcher.drain(cat, force=True)
-                if mb is None:
-                    break
-                self._execute_batch(mb)
-                n += 1
-        return n
+        return n + sum(self._drain_category(cat, force=True)
+                       for cat in self.batcher.categories())
 
     # ----------------------------------------------------------- respond
     def take_response(self, request_id: int) -> Optional[ServeResponse]:
@@ -194,4 +259,5 @@ class ServeEngine:
     def summary(self) -> dict:
         out = self.telemetry.summary(compile_count=self.compile_count)
         out.update({f"cache_{k}": v for k, v in self.cache.stats().items()})
+        out["policy_version"] = self.policy_version
         return out

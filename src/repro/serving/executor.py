@@ -1,13 +1,23 @@
-"""Rollout executor: pre-compiled per-bucket executables and multi-shard
+"""Rollout executor: pre-compiled per-(bucket, policy-structure)
+executables, a pluggable rollout backend, and multi-shard
 scatter–gather.
 
-The full L0→L1 serve step — greedy policy rollout per index shard,
-candidate scatter to global doc ids, static-rank merge across shards
-(`merge_shard_candidates`), and L1 rank/prune — is fused into one
-function and AOT-compiled (``jit(...).lower(...).compile()``) per
-bucket size.  The policy table and state bins are runtime *arguments*,
-so one executable serves every query category at that shape; in steady
-state the compile count is exactly ``len(BucketConfig.buckets())``.
+The full L0→L1 serve step — policy rollout per index shard through
+``unified_rollout``, candidate scatter to global doc ids, static-rank
+merge across shards (`merge_shard_candidates`), and L1 rank/prune — is
+fused into one function and AOT-compiled (``jit(...).lower(...)
+.compile()``) per (bucket size, policy structure).  Policy *parameters*
+(Q-tables, plan entries, ε) and the state bins are runtime arguments,
+so one executable serves every query category sharing a policy
+structure, and publishing a new snapshot through a ``PolicyStore``
+never retraces; in steady state the compile count is
+``len(BucketConfig.buckets()) × n_policy_structures``.
+
+The rollout inner loop is a *backend* chosen at construction:
+``"xla"`` is the unified_rollout scan; ``"pallas_block_scan"`` is the
+registered stub for the plane-pruned block-scan kernel
+(kernels/block_scan/block_scan_pruned.py) — the switch point the
+ROADMAP's multi-backend item needs.
 
 Sharding here is the logical split of the paper's multi-machine index:
 the block axis is cut into ``n_shards`` equal slices, each running its
@@ -20,54 +30,97 @@ driven from a single host process.
 from __future__ import annotations
 
 import dataclasses
-from functools import partial
-from typing import Dict, Iterable, Tuple
+from typing import Callable, Dict, Iterable, Tuple
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.qlearning import greedy_rollout
+from repro.core.rollout import unified_rollout
 from repro.core.telescope import l1_prune, merge_shard_candidates
 from repro.index.corpus import N_FIELDS
+from repro.policies import Policy
 
-__all__ = ["ShardedExecutor"]
+__all__ = ["ShardedExecutor", "available_backends", "register_rollout_backend"]
+
+
+# ------------------------------------------------------------------ backends
+# A backend runs one policy rollout over one index shard slice:
+#   backend(cfg, ruleset, bins, policy, t_max, occ, scores, tp) -> EnvState
+ROLLOUT_BACKENDS: Dict[str, Callable] = {}
+
+
+def register_rollout_backend(name: str):
+    def deco(fn: Callable) -> Callable:
+        ROLLOUT_BACKENDS[name] = fn
+        return fn
+    return deco
+
+
+def available_backends() -> Tuple[str, ...]:
+    return tuple(sorted(ROLLOUT_BACKENDS))
+
+
+@register_rollout_backend("xla")
+def _xla_rollout(cfg, ruleset, bins, policy, t_max, occ, scores, tp):
+    return unified_rollout(cfg, ruleset, bins, policy, t_max,
+                           occ, scores, tp).final_state
+
+
+@register_rollout_backend("pallas_block_scan")
+def _pallas_block_scan_rollout(cfg, ruleset, bins, policy, t_max, occ,
+                               scores, tp):
+    raise NotImplementedError(
+        "the 'pallas_block_scan' serving backend is a registered stub: it "
+        "will drive the plane-pruned Pallas block-scan kernel "
+        "(repro/kernels/block_scan/block_scan_pruned.py) through the "
+        "unified rollout's execute_rule inner loop. Use backend='xla' "
+        "until it lands.")
 
 
 class ShardedExecutor:
-    def __init__(self, system, n_shards: int = 1, keep: int = 100):
+    def __init__(self, system, n_shards: int = 1, keep: int = 100,
+                 backend: str = "xla"):
         if system.bins is None or system.qcfg is None:
             raise ValueError("system needs fit_state_bins() before serving")
         nb = system.env_cfg.n_blocks
         if n_shards < 1 or nb % n_shards:
             raise ValueError(f"n_shards={n_shards} must divide n_blocks={nb}")
+        if backend not in ROLLOUT_BACKENDS:
+            raise ValueError(
+                f"unknown rollout backend {backend!r}; available: "
+                f"{available_backends()}")
         self.system = system
         self.n_shards = n_shards
         self.keep = keep
+        self.backend = backend
+        self._backend_fn = ROLLOUT_BACKENDS[backend]
         self.blocks_per_shard = nb // n_shards
         self.docs_per_shard = self.blocks_per_shard * system.env_cfg.block_docs
         # Each shard scans its slice under the full per-machine u budget.
         self.shard_env_cfg = dataclasses.replace(
             system.env_cfg, n_blocks=self.blocks_per_shard)
         self._jit = jax.jit(self._serve_fn)
-        self._compiled: Dict[int, jax.stages.Compiled] = {}
+        self._compiled: Dict[tuple, jax.stages.Compiled] = {}
         self.compile_count = 0
         self.execute_count = 0
 
     # ----------------------------------------------------------- the step
-    def _serve_fn(self, bins, q_table, occ, scores, term_present):
+    def _serve_fn(self, bins, policy, occ, scores, term_present):
         """(B, NB, T, F, W) occupancy → (ids, scores, u, cand_cnt)."""
         sys_ = self.system
         s, ds = self.n_shards, self.docs_per_shard
         b = occ.shape[0]
+        t_max = policy.horizon or sys_.qcfg.t_max
         occ_sh = occ.reshape(b, s, self.blocks_per_shard, *occ.shape[2:])
         occ_sh = jnp.moveaxis(occ_sh, 1, 0)               # (S, B, nb/S, T, F, W)
         scores_sh = jnp.moveaxis(scores.reshape(b, s, ds), 1, 0)  # (S, B, ds)
 
-        roll = partial(greedy_rollout, self.shard_env_cfg, sys_.qcfg,
-                       sys_.ruleset, bins, q_table)
-        final, _ = jax.vmap(roll, in_axes=(0, 0, None))(
-            occ_sh, scores_sh, term_present)
+        def one_shard(o, sc):
+            return self._backend_fn(self.shard_env_cfg, sys_.ruleset, bins,
+                                    policy, t_max, o, sc, term_present)
+
+        final = jax.vmap(one_shard)(occ_sh, scores_sh)
 
         shard_base = (jnp.arange(s, dtype=jnp.int32) * ds)[:, None, None]
         global_cand = jnp.where(final.cand >= 0, final.cand + shard_base, -1)
@@ -79,7 +132,13 @@ class ShardedExecutor:
         return ids, sc, u_tot, cand_cnt
 
     # ------------------------------------------------------------ compile
-    def _abstract_args(self, bucket: int):
+    @staticmethod
+    def _policy_key(policy: Policy) -> tuple:
+        leaves, treedef = jax.tree_util.tree_flatten(policy)
+        return (treedef,
+                tuple((tuple(l.shape), str(l.dtype)) for l in leaves))
+
+    def _abstract_args(self, bucket: int, policy: Policy):
         sys_ = self.system
         cfg = sys_.env_cfg
         t = sys_.log.terms.shape[1]
@@ -91,27 +150,37 @@ class ShardedExecutor:
         tp = sd((bucket, t), jnp.bool_)
         bins = jax.tree_util.tree_map(
             lambda x: sd(x.shape, x.dtype), sys_.bins)
-        q_abs = sd((sys_.qcfg.p, sys_.qcfg.n_actions), jnp.float32)
-        return bins, q_abs, occ, scores, tp
+        pol_abs = jax.tree_util.tree_map(
+            lambda x: sd(x.shape, x.dtype), policy)
+        return bins, pol_abs, occ, scores, tp
 
-    def compiled_for(self, bucket: int) -> jax.stages.Compiled:
-        exe = self._compiled.get(bucket)
+    def compiled_for(self, bucket: int, policy: Policy) -> jax.stages.Compiled:
+        if not isinstance(policy, Policy):
+            raise TypeError(
+                f"expected a repro.policies.Policy, got {type(policy).__name__}; "
+                "raw Q-table arrays are no longer accepted — wrap with "
+                "TabularQPolicy(q)")
+        key = (bucket, self._policy_key(policy))
+        exe = self._compiled.get(key)
         if exe is None:
-            exe = self._jit.lower(*self._abstract_args(bucket)).compile()
-            self._compiled[bucket] = exe
+            exe = self._jit.lower(*self._abstract_args(bucket, policy)).compile()
+            self._compiled[key] = exe
             self.compile_count += 1
         return exe
 
-    def warmup(self, buckets: Iterable[int]) -> None:
+    def warmup(self, buckets: Iterable[int],
+               policies: Iterable[Policy]) -> None:
+        policies = list(policies)
         for b in buckets:
-            self.compiled_for(b)
+            for pol in policies:
+                self.compiled_for(b, pol)
 
     # ------------------------------------------------------------ execute
-    def execute(self, q_table, occ, scores, term_present
+    def execute(self, policy: Policy, occ, scores, term_present
                 ) -> Tuple[np.ndarray, np.ndarray, np.ndarray, np.ndarray]:
         """Run one micro-batch through its pre-compiled executable."""
-        exe = self.compiled_for(occ.shape[0])
-        ids, sc, u, cnt = exe(self.system.bins, q_table, occ, scores,
+        exe = self.compiled_for(occ.shape[0], policy)
+        ids, sc, u, cnt = exe(self.system.bins, policy, occ, scores,
                               term_present)
         jax.block_until_ready(ids)
         self.execute_count += 1

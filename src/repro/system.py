@@ -16,11 +16,13 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.environment import EnvConfig
-from repro.core.match_plan import MatchPlan, batched_run_plan, production_plans
+from repro.core.match_plan import MatchPlan, plan_rollout, production_plans
 from repro.core.match_rules import RuleSet, default_rule_library
-from repro.core.qlearning import QConfig, greedy_rollout, init_q, train_batch
+from repro.core.qlearning import QConfig, init_q, train_batch
 from repro.core.reward import r_agent
+from repro.core.rollout import unified_rollout
 from repro.core.state_bins import StateBins, fit_bins
+from repro.policies import PolicyStore, StaticPlanPolicy, TabularQPolicy
 from repro.data.querylog import CAT1, CAT2, QueryLog, QueryLogConfig, generate_querylog
 from repro.index.builder import InvertedIndex, batch_query_occupancy, build_index
 from repro.index.corpus import Corpus, CorpusConfig, generate_corpus
@@ -137,10 +139,20 @@ class RetrievalSystem:
     def plan_for_category(self, cat: int) -> MatchPlan:
         return self.plans["CAT2" if cat == CAT2 else "CAT1"]
 
+    def plan_policy(self, cat: int) -> StaticPlanPolicy:
+        """The hand-tuned production plan as a first-class Policy."""
+        return StaticPlanPolicy(self.plan_for_category(cat), self.env_cfg.n_actions)
+
+    def _run_plan_batch(self, plan: MatchPlan, occ, scores, term_present):
+        """Batched static-plan execution via the unified rollout; returns
+        (final_state, trajectory with (B, L) leaves)."""
+        return plan_rollout(self.env_cfg, self.ruleset, plan,
+                            occ, scores, term_present)
+
     def run_baseline(self, query_ids: Sequence[int], cat: int):
         occ, scores, term_present = self.batch_inputs(query_ids)
         plan = self.plan_for_category(cat)
-        final, traj = batched_run_plan(self.env_cfg, self.ruleset, plan, occ, scores, term_present)
+        final, traj = self._run_plan_batch(plan, occ, scores, term_present)
         return final, traj, (occ, scores, term_present)
 
     def production_step_rewards(self, traj) -> jnp.ndarray:
@@ -193,7 +205,7 @@ class RetrievalSystem:
             qids = rng_np.choice(qids_all, size=min(batch, len(qids_all)), replace=True)
             occ, scores, term_present = self.batch_inputs(qids)
             plan = self.plan_for_category(cat)
-            _, traj = batched_run_plan(self.env_cfg, self.ruleset, plan, occ, scores, term_present)
+            _, traj = self._run_plan_batch(plan, occ, scores, term_present)
             prod_r = self.production_step_rewards(traj)
             eps = eps_start + (eps_end - eps_start) * it / max(iters - 1, 1)
             key, sub = jax.random.split(key)
@@ -207,6 +219,25 @@ class RetrievalSystem:
                       " ".join(f"{k}={v:.4f}" for k, v in history[-1].items()))
         return q, history
 
+    # ------------------------------------------------------------ policies
+    def train_policy_store(self, cats: Sequence[int] = (CAT1, CAT2),
+                           store: Optional[PolicyStore] = None,
+                           staleness_bound: int = 1,
+                           **train_kwargs) -> PolicyStore:
+        """Train per-category tabular policies and publish one snapshot.
+        Pass an existing ``store`` to publish a fresh version into it
+        (the serve-while-training loop)."""
+        policies = {cat: TabularQPolicy(self.train_policy(cat, **train_kwargs)[0])
+                    for cat in cats}
+        if store is None:
+            store = PolicyStore(staleness_bound=staleness_bound)
+        store.publish(policies)
+        return store
+
+    def baseline_policies(self, cats: Sequence[int] = (CAT1, CAT2)):
+        """The hand-tuned production plans as a {category: Policy} dict."""
+        return {cat: self.plan_policy(cat) for cat in cats}
+
     # ------------------------------------------------------------ evaluation
     def evaluate(self, q: jnp.ndarray, query_ids: Sequence[int], cat: int):
         """Learned policy vs production plan on the same queries.
@@ -214,12 +245,13 @@ class RetrievalSystem:
         occ, scores, term_present = self.batch_inputs(query_ids)
         judged_ids, judged_gains = self.judged(query_ids)
 
-        base_final, _ = batched_run_plan(
-            self.env_cfg, self.ruleset, self.plan_for_category(cat), occ, scores, term_present
+        plan = self.plan_for_category(cat)
+        base_final, _ = self._run_plan_batch(plan, occ, scores, term_present)
+        pol_res = unified_rollout(
+            self.env_cfg, self.ruleset, self.bins, TabularQPolicy(q),
+            self.qcfg.t_max, occ, scores, term_present,
         )
-        pol_final, actions = greedy_rollout(
-            self.env_cfg, self.qcfg, self.ruleset, self.bins, q, occ, scores, term_present
-        )
+        pol_final, actions = pol_res.final_state, pol_res.transitions["a"]
 
         out = {}
         for name, fin in (("baseline", base_final), ("policy", pol_final)):

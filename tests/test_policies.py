@@ -1,0 +1,371 @@
+"""Unified Policy API: parity with the legacy rollout loops, the
+PolicyStore contract, serving integration, and deprecation shims.
+
+The legacy loops (pre-refactor ``run_plan`` / ``greedy_rollout``) are
+reimplemented verbatim here as oracles, so the parity claims hold
+against the original semantics, not against the shims (which route
+through the unified engine themselves).
+"""
+import dataclasses
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from jax import lax
+
+from repro.core.environment import env_reset, env_step, execute_rule
+from repro.core.match_plan import batched_run_plan, run_plan
+from repro.core.qlearning import greedy_rollout, rollout
+from repro.core.rollout import unified_rollout
+from repro.core.state_bins import bin_index
+from repro.data.querylog import CAT1, CAT2
+from repro.policies import (
+    EpsilonGreedy, PolicySnapshot, PolicyStore, StalePolicyError,
+    StaticPlanPolicy, TabularQPolicy,
+)
+from repro.serving import EngineConfig, ServeEngine, available_backends
+from repro.serving.executor import ShardedExecutor
+
+
+# ----------------------------------------------------------- legacy oracles
+def _legacy_run_plan(cfg, ruleset, plan, occ, scores, tp):
+    """Verbatim pre-refactor match_plan.run_plan (single query)."""
+    state = env_reset(cfg)
+
+    def step(state, entry):
+        rule_idx, reset_before, du_q, dv_q = entry
+        bp = jnp.where(reset_before, 0, state.block_ptr)
+        state = dataclasses.replace(state, block_ptr=bp)
+        allowed, required, _, _ = ruleset.gather(rule_idx)
+        state = execute_rule(cfg, occ, scores, tp, state, allowed, required,
+                             du_q, dv_q)
+        traj = {
+            "u": state.u,
+            "v": state.v,
+            "topn_sum": jnp.sum(jnp.where(jnp.isfinite(state.topn),
+                                          state.topn, 0.0)),
+            "cand_cnt": state.cand_cnt,
+        }
+        return state, traj
+
+    entries = (plan.rule_idx, plan.reset_before, plan.du_quota, plan.dv_quota)
+    return lax.scan(step, state, entries)
+
+
+def _legacy_greedy_rollout(cfg, qcfg, ruleset, bins, q, occ, scores, tp):
+    """Verbatim pre-refactor qlearning.greedy_rollout (batched)."""
+    batch = occ.shape[0]
+    state0 = jax.vmap(lambda _: env_reset(cfg))(jnp.arange(batch))
+
+    def step(state, _):
+        s_bin = bin_index(bins, state.u, state.v)
+        action = jnp.argmax(q[s_bin], axis=-1).astype(jnp.int32)
+        new_state = jax.vmap(partial(env_step, cfg, ruleset))(
+            occ, scores, tp, state, action)
+        return new_state, action
+
+    return lax.scan(step, state0, jnp.arange(qcfg.t_max))
+
+
+STATE_FIELDS = ("u", "v", "cand", "cand_cnt", "topn", "matched", "block_ptr")
+
+
+def _assert_states_equal(a, b, fields=STATE_FIELDS):
+    for f in fields:
+        np.testing.assert_array_equal(
+            np.asarray(getattr(a, f)), np.asarray(getattr(b, f)), err_msg=f)
+
+
+@pytest.fixture(scope="module")
+def inputs(tiny_system):
+    qids = np.where(tiny_system.log.category == CAT1)[0][:6]
+    return tiny_system, tiny_system.batch_inputs(qids)
+
+
+@pytest.fixture(scope="module")
+def trained_q(tiny_system):
+    return tiny_system.train_policy(CAT2, iters=8, batch=16)[0]
+
+
+# --------------------------------------------------- static-plan parity
+@pytest.mark.parametrize("plan_name", ["CAT1", "CAT2"])
+def test_static_plan_policy_bitforbit(inputs, plan_name):
+    """StaticPlanPolicy through unified_rollout reproduces the legacy
+    plan executor bit-for-bit — trajectory and final state (the CAT1
+    plan includes a reset-before entry; CAT2 a double pass)."""
+    sys_, (occ, scores, tp) = inputs
+    plan = sys_.plans[plan_name]
+
+    leg_fin, leg_traj = jax.vmap(
+        lambda o, s, t: _legacy_run_plan(sys_.env_cfg, sys_.ruleset, plan,
+                                         o, s, t))(occ, scores, tp)
+
+    policy = StaticPlanPolicy(plan, sys_.env_cfg.n_actions)
+    res = unified_rollout(sys_.env_cfg, sys_.ruleset, None, policy,
+                          plan.length, occ, scores, tp)
+    traj = {k: np.asarray(jnp.moveaxis(v, 0, 1))
+            for k, v in res.trajectory.items()}   # (B, L) like the oracle
+
+    for k in leg_traj:
+        np.testing.assert_array_equal(np.asarray(leg_traj[k]), traj[k],
+                                      err_msg=k)
+    _assert_states_equal(leg_fin, res.final_state)
+
+
+def test_static_plan_policy_stops_past_horizon(inputs):
+    """Under t_max > plan.length the policy emits a_stop; the state is
+    frozen at the end-of-plan state."""
+    sys_, (occ, scores, tp) = inputs
+    plan = sys_.plans["CAT1"]
+    policy = StaticPlanPolicy(plan, sys_.env_cfg.n_actions)
+    short = unified_rollout(sys_.env_cfg, sys_.ruleset, None, policy,
+                            plan.length, occ, scores, tp)
+    long = unified_rollout(sys_.env_cfg, sys_.ruleset, None, policy,
+                           plan.length + 3, occ, scores, tp)
+    _assert_states_equal(short.final_state, long.final_state,
+                         fields=("u", "v", "cand", "cand_cnt", "topn"))
+    assert np.asarray(long.final_state.done).all()
+
+
+# --------------------------------------------------- greedy / ε parity
+def test_tabular_q_policy_matches_legacy_greedy(inputs, trained_q):
+    sys_, (occ, scores, tp) = inputs
+    leg_fin, leg_actions = _legacy_greedy_rollout(
+        sys_.env_cfg, sys_.qcfg, sys_.ruleset, sys_.bins, trained_q,
+        occ, scores, tp)
+    res = unified_rollout(sys_.env_cfg, sys_.ruleset, sys_.bins,
+                          TabularQPolicy(trained_q), sys_.qcfg.t_max,
+                          occ, scores, tp)
+    np.testing.assert_array_equal(np.asarray(leg_actions),
+                                  np.asarray(res.transitions["a"]))
+    _assert_states_equal(leg_fin, res.final_state,
+                         fields=STATE_FIELDS + ("done",))
+
+
+def test_epsilon_zero_equals_greedy(inputs, trained_q):
+    sys_, (occ, scores, tp) = inputs
+    greedy = unified_rollout(sys_.env_cfg, sys_.ruleset, sys_.bins,
+                             TabularQPolicy(trained_q), sys_.qcfg.t_max,
+                             occ, scores, tp)
+    eps0 = unified_rollout(sys_.env_cfg, sys_.ruleset, sys_.bins,
+                           EpsilonGreedy(TabularQPolicy(trained_q),
+                                         jnp.float32(0.0)),
+                           sys_.qcfg.t_max, occ, scores, tp,
+                           None, jax.random.key(42))
+    np.testing.assert_array_equal(np.asarray(greedy.transitions["a"]),
+                                  np.asarray(eps0.transitions["a"]))
+    _assert_states_equal(greedy.final_state, eps0.final_state)
+
+
+def test_epsilon_one_explores(inputs, trained_q):
+    """ε=1 is uniform-random — the action stream must leave the greedy
+    trajectory (and ε is a traced leaf: same compiled fn both calls)."""
+    sys_, (occ, scores, tp) = inputs
+    pol = EpsilonGreedy(TabularQPolicy(trained_q), jnp.float32(1.0))
+    r1 = unified_rollout(sys_.env_cfg, sys_.ruleset, sys_.bins, pol,
+                         sys_.qcfg.t_max, occ, scores, tp,
+                         None, jax.random.key(0))
+    greedy = unified_rollout(sys_.env_cfg, sys_.ruleset, sys_.bins,
+                             TabularQPolicy(trained_q), sys_.qcfg.t_max,
+                             occ, scores, tp)
+    assert (np.asarray(r1.transitions["a"])
+            != np.asarray(greedy.transitions["a"])).any()
+
+
+def test_unified_rollout_returns_both_products(inputs, trained_q):
+    sys_, (occ, scores, tp) = inputs
+    res = unified_rollout(sys_.env_cfg, sys_.ruleset, sys_.bins,
+                          TabularQPolicy(trained_q), sys_.qcfg.t_max,
+                          occ, scores, tp)
+    t, b = sys_.qcfg.t_max, occ.shape[0]
+    for k in ("s", "a", "r", "s2", "done", "valid"):
+        assert res.transitions[k].shape == (t, b), k
+    for k in ("u", "v", "topn_sum", "cand_cnt"):
+        assert res.trajectory[k].shape == (t, b), k
+
+
+# -------------------------------------------------------- deprecation shims
+def test_run_plan_shim_warns_and_matches(inputs):
+    sys_, (occ, scores, tp) = inputs
+    plan = sys_.plans["CAT2"]
+    leg_fin, leg_traj = _legacy_run_plan(sys_.env_cfg, sys_.ruleset, plan,
+                                         occ[0], scores[0], tp[0])
+    with pytest.warns(DeprecationWarning):
+        fin, traj = run_plan(sys_.env_cfg, sys_.ruleset, plan,
+                             occ[0], scores[0], tp[0])
+    for k in leg_traj:
+        np.testing.assert_array_equal(np.asarray(leg_traj[k]),
+                                      np.asarray(traj[k]), err_msg=k)
+    _assert_states_equal(leg_fin, fin)
+    with pytest.warns(DeprecationWarning):
+        batched_run_plan(sys_.env_cfg, sys_.ruleset, plan, occ, scores, tp)
+
+
+def test_greedy_rollout_shim_warns_and_matches(inputs, trained_q):
+    sys_, (occ, scores, tp) = inputs
+    leg_fin, leg_actions = _legacy_greedy_rollout(
+        sys_.env_cfg, sys_.qcfg, sys_.ruleset, sys_.bins, trained_q,
+        occ, scores, tp)
+    with pytest.warns(DeprecationWarning):
+        fin, actions = greedy_rollout(sys_.env_cfg, sys_.qcfg, sys_.ruleset,
+                                      sys_.bins, trained_q, occ, scores, tp)
+    np.testing.assert_array_equal(np.asarray(leg_actions), np.asarray(actions))
+    _assert_states_equal(leg_fin, fin)
+
+
+def test_rollout_shim_warns(inputs, trained_q):
+    sys_, (occ, scores, tp) = inputs
+    prod_r = jnp.zeros((occ.shape[0], 4), jnp.float32)
+    with pytest.warns(DeprecationWarning):
+        final, trans = rollout(sys_.env_cfg, sys_.qcfg, sys_.ruleset,
+                               sys_.bins, trained_q, occ, scores, tp,
+                               prod_r, jnp.float32(0.3), jax.random.key(0))
+    assert trans["a"].shape == (sys_.qcfg.t_max, occ.shape[0])
+
+
+# ------------------------------------------------------------- PolicyStore
+def test_store_version_monotonicity(trained_q):
+    store = PolicyStore(staleness_bound=2)
+    pol = TabularQPolicy(trained_q)
+    versions = [store.publish({CAT1: pol}) for _ in range(5)]
+    assert versions == [1, 2, 3, 4, 5]
+    assert store.version == 5
+    snap = store.snapshot()
+    assert isinstance(snap, PolicySnapshot) and snap.version == 5
+
+
+def test_store_staleness_bound_rejection(trained_q):
+    store = PolicyStore(staleness_bound=1)
+    pol = TabularQPolicy(trained_q)
+    v1 = store.publish({CAT1: pol})
+    store.publish({CAT1: pol})
+    assert store.validate(v1) == 1          # exactly at the bound: ok
+    store.publish({CAT1: pol})
+    with pytest.raises(StalePolicyError):
+        store.validate(v1)                  # 2 behind, bound 1: rejected
+    assert store.validate(store.version) == 0
+
+
+def test_store_rejects_raw_arrays_and_empty(trained_q):
+    store = PolicyStore()
+    with pytest.raises(TypeError, match="TabularQPolicy"):
+        store.publish({CAT1: np.asarray(trained_q)})
+    with pytest.raises(TypeError):
+        store.publish({})
+    with pytest.raises(LookupError):
+        store.snapshot()
+
+
+def test_store_subscribe(trained_q):
+    store = PolicyStore()
+    pol = TabularQPolicy(trained_q)
+    store.publish({CAT1: pol})
+    seen = []
+    unsubscribe = store.subscribe(lambda snap: seen.append(snap.version))
+    assert seen == [1]                      # replay current snapshot
+    store.publish({CAT1: pol})
+    assert seen == [1, 2]
+    unsubscribe()
+    store.publish({CAT1: pol})
+    assert seen == [1, 2]
+
+
+def test_snapshot_policies_read_only(trained_q):
+    store = PolicyStore()
+    store.publish({CAT1: TabularQPolicy(trained_q)})
+    with pytest.raises(TypeError):
+        store.snapshot().policies[CAT2] = TabularQPolicy(trained_q)
+
+
+# ------------------------------------------------------ serving integration
+def test_engine_rejects_raw_ndarray(tiny_system, trained_q):
+    with pytest.raises(TypeError, match="TabularQPolicy"):
+        ServeEngine(tiny_system, {CAT1: np.asarray(trained_q),
+                                  CAT2: np.asarray(trained_q)})
+    with pytest.raises(TypeError, match="PolicyStore"):
+        ServeEngine(tiny_system, np.asarray(trained_q))
+
+
+def test_engine_serves_static_plan_policy(tiny_system):
+    """The hand-tuned baseline is just another policy behind the same
+    engine: served u matches the direct baseline run."""
+    sys_ = tiny_system
+    engine = ServeEngine(sys_, sys_.baseline_policies(), EngineConfig(
+        min_bucket=4, max_bucket=4, cache_capacity=0))
+    qids = np.where(sys_.log.category == CAT1)[0][:4]
+    responses = engine.serve(qids)
+    base_final, _, _ = sys_.run_baseline(qids, CAT1)
+    for lane, r in enumerate(responses):
+        assert r.u == int(np.asarray(base_final.u)[lane])
+
+
+def test_engine_hot_swap_and_cache_flush(tiny_system, trained_q):
+    """Publishing a new snapshot hot-swaps serving and flushes the
+    result cache (cached responses embody the previous policy)."""
+    sys_ = tiny_system
+    pol = TabularQPolicy(trained_q)
+    store = PolicyStore(staleness_bound=1)
+    store.publish({CAT1: pol, CAT2: pol})
+    engine = ServeEngine(sys_, store, EngineConfig(
+        min_bucket=4, max_bucket=4, cache_capacity=64))
+    qid = int(np.where(sys_.log.category == CAT1)[0][0])
+    (first,) = engine.serve([qid])
+    (hit,) = engine.serve([qid])
+    assert not first.cached and hit.cached
+    assert engine.policy_version == 1
+
+    store.publish({CAT1: sys_.plan_policy(CAT1), CAT2: sys_.plan_policy(CAT2)})
+    (swapped,) = engine.serve([qid])
+    assert engine.policy_version == 2
+    assert not swapped.cached               # cache flushed on version change
+    base_final, _, _ = sys_.run_baseline([qid], CAT1)
+    assert swapped.u == int(np.asarray(base_final.u)[0])
+
+
+# ---------------------------------------------------------------- backends
+def test_backend_registry(tiny_system):
+    assert "xla" in available_backends()
+    assert "pallas_block_scan" in available_backends()
+    with pytest.raises(ValueError, match="available"):
+        ShardedExecutor(tiny_system, backend="no_such_backend")
+
+
+def test_pallas_backend_is_stub(tiny_system, trained_q):
+    exe = ShardedExecutor(tiny_system, backend="pallas_block_scan")
+    with pytest.raises(NotImplementedError, match="pallas_block_scan"):
+        exe.compiled_for(4, TabularQPolicy(trained_q))
+
+
+def test_pinned_engine_refuses_stale_cache_hits(tiny_system, trained_q):
+    """An engine pinned past the staleness bound (auto_refresh=False)
+    must refuse to serve even from its result cache."""
+    sys_ = tiny_system
+    pol = TabularQPolicy(trained_q)
+    store = PolicyStore(staleness_bound=0)
+    store.publish({CAT1: pol, CAT2: pol})
+    engine = ServeEngine(sys_, store, EngineConfig(
+        min_bucket=4, max_bucket=4, cache_capacity=64, auto_refresh=False))
+    qid = int(np.where(sys_.log.category == CAT1)[0][0])
+    engine.serve([qid])                      # fills the cache at v1
+    store.publish({CAT1: pol, CAT2: pol})    # head moves to v2, bound 0
+    with pytest.raises(StalePolicyError):
+        engine.submit(qid)                   # would have been a cache hit
+    assert engine.refresh_policies()
+    (hit,) = engine.serve([qid])             # refreshed: cache was flushed
+    assert not hit.cached and engine.policy_version == 2
+
+
+def test_failed_batch_requeues_requests(tiny_system, trained_q):
+    """A batch that fails mid-drain (here: the stub backend) must not
+    lose admitted requests — they go back in the queue."""
+    pol = TabularQPolicy(trained_q)
+    engine = ServeEngine(tiny_system, {CAT1: pol, CAT2: pol}, EngineConfig(
+        min_bucket=4, max_bucket=4, cache_capacity=0,
+        backend="pallas_block_scan"))
+    rid = engine.submit(0)
+    with pytest.raises(NotImplementedError):
+        engine.flush()
+    assert engine.batcher.pending() == 1     # request survived the failure
+    assert engine.take_response(rid) is None

@@ -3,9 +3,10 @@ end-to-end parity vs. direct rollout, shards, admission, telemetry."""
 import numpy as np
 import pytest
 
-from repro.core.qlearning import greedy_rollout
+from repro.core.rollout import unified_rollout
 from repro.core.telescope import l1_prune
 from repro.data.querylog import CAT1, CAT2
+from repro.policies import TabularQPolicy
 from repro.serving import (
     AdmissionError, BucketConfig, EngineConfig, ServeEngine, bucket_size_for,
 )
@@ -31,13 +32,14 @@ def test_bucket_size_for():
 def trained(tiny_system):
     """tiny_system + quickly-trained per-category policies (quality is
     irrelevant here; parity and shape behaviour are what's under test)."""
-    policies = {cat: tiny_system.train_policy(cat, iters=10, batch=16)[0]
+    policies = {cat: TabularQPolicy(tiny_system.train_policy(cat, iters=10,
+                                                             batch=16)[0])
                 for cat in (CAT1, CAT2)}
     return tiny_system, policies
 
 
 def _direct(sys_, policies, qids):
-    """Reference path: greedy_rollout + l1_prune, one category at a time."""
+    """Reference path: unified_rollout + l1_prune, one category at a time."""
     qids = np.asarray(qids)
     ids = np.zeros((len(qids), 100), np.int32)
     sc = np.zeros((len(qids), 100), np.float32)
@@ -47,8 +49,9 @@ def _direct(sys_, policies, qids):
         if not m.any():
             continue
         occ, scores, tp = sys_.batch_inputs(qids[m])
-        fin, _ = greedy_rollout(sys_.env_cfg, sys_.qcfg, sys_.ruleset,
-                                sys_.bins, policies[cat], occ, scores, tp)
+        fin = unified_rollout(sys_.env_cfg, sys_.ruleset, sys_.bins,
+                              policies[cat], sys_.qcfg.t_max,
+                              occ, scores, tp).final_state
         i_, s_ = l1_prune(scores, fin.cand, keep=100)
         ids[m], sc[m], u[m] = np.asarray(i_), np.asarray(s_), np.asarray(fin.u)
     return ids, sc, u
