@@ -1,7 +1,8 @@
 """Kernel micro-benchmarks: wall-time of the jitted ops on this host
 (CPU; interpret-mode Pallas) + derived bandwidth/throughput, plus the
 analytic TPU-target roofline for each kernel (what the BlockSpec tiling
-implies on v5e).  CSV: name,us_per_call,derived."""
+implies on v5e).  Prints ``name,us_per_call,derived`` CSV and records
+``results/kernel_bench.json`` in the shared benchmarks/_results schema."""
 from __future__ import annotations
 
 import time
@@ -40,6 +41,16 @@ def rows():
     out.append(("block_scan_v5e_model", bytes_scanned / 819e9 * 1e6,
                 "us_at_HBM_roofline"))
 
+    # plane-pruned scan: a shallow 2-plane rule (e.g. mr_B — one present
+    # term in U|T) streams only its active planes, so the v5e roofline
+    # cost drops by T*F/n_active = 8x vs the full tile (the whole point
+    # of the pallas_block_scan backend)
+    shallow_active = 2
+    bytes_pruned = nb * shallow_active * w * 4
+    out.append(("block_scan_pruned_shallow_v5e_model",
+                bytes_pruned / 819e9 * 1e6,
+                f"us_at_HBM_roofline_{occ.size * 4 // bytes_pruned}x_fewer_bytes"))
+
     # flash attention vs naive reference (XLA path)
     from repro.kernels.flash_attention.ops import flash_attention_reference
     q = jnp.asarray(rng.normal(size=(1, 8, 512, 64)), jnp.float32)
@@ -69,9 +80,17 @@ def rows():
 
 
 def main() -> None:
+    from benchmarks._results import record
+
     print("name,us_per_call,derived")
+    metrics = {}
     for name, us, derived in rows():
         print(f"{name},{us:.1f},{derived}")
+        metrics[name] = {"us_per_call": us, "derived": derived}
+    record("kernel_bench",
+           config={"backend": jax.default_backend(),
+                   "interpret_pallas": jax.default_backend() != "tpu"},
+           metrics=metrics)
 
 
 if __name__ == "__main__":

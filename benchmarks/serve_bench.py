@@ -6,7 +6,13 @@ every time and retraced continuously.  The engine quantizes shapes into
 power-of-two buckets hitting pre-compiled executables, caches repeated
 queries, and scatter-gathers across logical index shards.
 
-Prints ``name,value`` CSV rows and writes results/serve_bench.json:
+A second section sweeps the scan backends (``--backends``, default
+xla + pallas_block_scan) over the same stream, recording QPS, latency
+percentiles, u, and BYTES STREAMED PER QUERY — the bandwidth metric the
+plane-pruned backend exists to cut (bytes ∝ u instead of blocks·T·F·W).
+
+Prints ``name,value`` CSV rows and writes results/serve_bench.json in
+the shared benchmarks/_results schema:
 
     PYTHONPATH=src python -m benchmarks.serve_bench            # full
     PYTHONPATH=src python -m benchmarks.serve_bench --fast     # CI size
@@ -62,6 +68,81 @@ def engine_serve_batches(engine, batches):
         engine.serve(qids)     # submit + flush + claim responses
 
 
+def bytes_streamed_per_query(sys_, policies, qids, backend: str,
+                             chunk: int = 4) -> float:
+    """Mean HBM bytes a scan backend streams per query under a PER-LANE
+    model, derived from the rollout's per-step Δu and each chosen rule's
+    active-plane count (the backends are bit-identical, so one xla
+    rollout prices both).  "xla" streams the full T·F·W tile per block;
+    the pruned backend streams n_active·W per block, rounded up to its
+    speculation chunk C.  This is a lower bound on real traffic: both
+    backends keep streaming for already-stopped lanes until the whole
+    batch's loop exits, and the engine pads batches to bucket size —
+    that batch-coupled overhead is shared by both and not counted here."""
+    from repro.core.rollout import unified_rollout
+    from repro.data.querylog import CAT1, CAT2
+
+    qids = np.asarray(qids)
+    total = np.zeros(len(qids))
+    w = sys_.env_cfg.words_per_block
+    allowed = np.asarray(sys_.ruleset.allowed)          # (k, T, F)
+    k, t, f = allowed.shape
+    for cat in (CAT1, CAT2):
+        m = sys_.log.category[qids] == cat
+        if not m.any():
+            continue
+        occ, scores, tp = sys_.batch_inputs(qids[m])
+        res = unified_rollout(sys_.env_cfg, sys_.ruleset, sys_.bins,
+                              policies[cat], sys_.qcfg.t_max,
+                              occ, scores, tp)
+        a = np.asarray(res.transitions["a"])            # (S, Bm)
+        u = np.asarray(res.trajectory["u"])             # (S, Bm) cumulative
+        du = np.diff(u, axis=0, prepend=0)
+        tpn = np.asarray(tp)                            # (Bm, T)
+        rule = np.clip(a, 0, k - 1)
+        n_active = (allowed[rule] & tpn[None, :, :, None]).sum(axis=(2, 3))
+        blocks = np.where(n_active > 0, du // np.maximum(n_active, 1), 0)
+        if backend == "pallas_block_scan":
+            launched = np.ceil(blocks / chunk) * chunk * (blocks > 0)
+            bytes_ = launched * n_active * w * 4
+        else:
+            bytes_ = blocks * (t * f * w * 4)
+        total[m] = bytes_.sum(axis=0)
+    return float(total.mean())
+
+
+def backend_sweep(sys_, policies, batches, backends):
+    """Serve the same stream through one engine per scan backend,
+    recording QPS / latency / u / bytes-streamed-per-query."""
+    from repro.core.scan_backends import DEFAULT_CHUNK_BLOCKS
+    from repro.serving import EngineConfig, ServeEngine
+
+    batch = len(batches[0])
+    bucket = 1 << (batch - 1).bit_length()
+    out = {}
+    for name in backends:
+        engine = ServeEngine(sys_, policies, EngineConfig(
+            min_bucket=bucket, max_bucket=bucket, cache_capacity=0,
+            backend=name))
+        engine.warmup()
+        engine_serve_batches(engine, batches[:1])       # post-compile warm
+        t0 = time.time()
+        engine_serve_batches(engine, batches[1:])
+        dt = time.time() - t0
+        s = engine.summary()
+        out[name] = {
+            "qps": batch * (len(batches) - 1) / dt,
+            "latency_p50_ms": s["latency_p50_ms"],
+            "latency_p99_ms": s["latency_p99_ms"],
+            "mean_u": s["mean_u"],
+            "p99_u": s["p99_u"],
+            "bytes_per_query": bytes_streamed_per_query(
+                sys_, policies, np.concatenate(batches[1:]), name,
+                chunk=DEFAULT_CHUNK_BLOCKS),
+        }
+    return out
+
+
 def build_system(n_docs: int, n_queries: int, iters: int):
     from repro.data.querylog import CAT1, CAT2, QueryLogConfig
     from repro.index.corpus import CorpusConfig
@@ -81,7 +162,8 @@ def build_system(n_docs: int, n_queries: int, iters: int):
     return sys_, policies
 
 
-def main(fast: bool = False) -> dict:
+def main(fast: bool = False,
+         backends: str = "xla,pallas_block_scan") -> dict:
     from repro.serving import EngineConfig, ServeEngine
 
     n_docs = 2048 if fast else 4096
@@ -90,6 +172,7 @@ def main(fast: bool = False) -> dict:
     batch = 32 if fast else 48
     n_batches = 6 if fast else 12
     warm = 2
+    backend_list = [b for b in backends.split(",") if b]
 
     sys_, policies = build_system(n_docs, n_queries, iters)
     rng = np.random.default_rng(7)
@@ -137,11 +220,25 @@ def main(fast: bool = False) -> dict:
     for k, v in out.items():
         print(f"serve_bench.{k},{v:.4f}" if isinstance(v, float)
               else f"serve_bench.{k},{v}")
+
+    # ----------------------------------------------------- backend sweep
+    # Same stream through each scan backend: QPS/latency/u plus the
+    # bandwidth story (bytes streamed per query ∝ u for the pruned path,
+    # ∝ blocks·T·F·W for full-tile xla).  Wall times on CPU compare an
+    # interpret-mode Pallas emulation against compiled XLA, so bytes is
+    # the architecture-level metric here.
+    sweep = backend_sweep(sys_, policies, batches[: warm + max(2, n_batches // 3)],
+                          backend_list)
+    out["backends"] = sweep
+    for name, row in sweep.items():
+        for k, v in row.items():
+            print(f"serve_bench.backend.{name}.{k},{v:.4f}")
+
     from benchmarks._results import record
     record("serve_bench",
            config={"fast": fast, "n_docs": n_docs, "n_queries": n_queries,
                    "train_iters": iters, "batch": batch,
-                   "n_batches": n_batches},
+                   "n_batches": n_batches, "backends": backend_list},
            metrics=out)
     return out
 
@@ -149,4 +246,8 @@ def main(fast: bool = False) -> dict:
 if __name__ == "__main__":
     ap = argparse.ArgumentParser()
     ap.add_argument("--fast", action="store_true")
-    main(fast=ap.parse_args().fast)
+    ap.add_argument("--backends", default="xla,pallas_block_scan",
+                    help="comma-separated scan backends to sweep "
+                         "(see repro.core.scan_backends.available_backends)")
+    a = ap.parse_args()
+    main(fast=a.fast, backends=a.backends)

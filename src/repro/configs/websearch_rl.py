@@ -21,6 +21,10 @@ class WebSearchCfg:
     p_bins: int = 10_000   # paper's p
     t_max: int = 8
     u_budget: int = 65536
+    # Index-scan backend for the serve/train cells (core/scan_backends.py):
+    # "xla" full-tile block scanning, "pallas_block_scan" chunked
+    # plane-pruned kernel (bytes streamed ∝ u).
+    backend: str = "xla"
 
 
 def model_cfg(reduced: bool) -> WebSearchCfg:

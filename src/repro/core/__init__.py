@@ -1,10 +1,11 @@
 from .match_rules import RuleSet, default_rule_library, scan_block, block_cost
-from .match_plan import (MatchPlan, make_plan, plan_rollout,
-                         production_plans, run_plan, batched_run_plan)
+from .match_plan import MatchPlan, make_plan, plan_rollout, production_plans
 from .environment import EnvConfig, EnvState, env_reset, env_step, execute_rule
+from .scan_backends import (ScanBackend, available_backends,
+                            get_scan_backend, register_scan_backend)
 from .state_bins import StateBins, fit_bins, bin_index
 from .reward import r_agent, step_reward
 from .rollout import (PolicyAction, RolloutResult, USE_RULE_QUOTA,
                       policy_env_step, unified_rollout)
-from .qlearning import QConfig, init_q, rollout, td_update, train_batch, greedy_rollout
+from .qlearning import QConfig, init_q, td_update, train_batch
 from .telescope import l1_prune, merge_shard_candidates

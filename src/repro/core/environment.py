@@ -22,14 +22,12 @@ from __future__ import annotations
 
 import dataclasses
 from functools import partial
-from typing import Tuple
 
 import jax
 import jax.numpy as jnp
-from jax import lax
 
 from repro.index.blocks import WORD_BITS
-from .match_rules import RuleSet, block_cost, scan_block
+from .match_rules import RuleSet
 
 __all__ = ["EnvConfig", "EnvState", "env_reset", "env_step", "execute_rule", "batched_env_step"]
 
@@ -102,61 +100,6 @@ def env_reset(cfg: EnvConfig) -> EnvState:
     )
 
 
-def _unpack_words(words: jnp.ndarray) -> jnp.ndarray:
-    """(W,) uint32 -> (W*32,) bool, LSB-first (matches blocks.pack_bits)."""
-    shifts = jnp.arange(WORD_BITS, dtype=jnp.uint32)
-    bits = (words[:, None] >> shifts[None, :]) & jnp.uint32(1)
-    return bits.reshape(-1).astype(bool)
-
-
-def _scan_one_block(
-    cfg: EnvConfig,
-    occ: jnp.ndarray,          # (n_blocks, T, F, W) uint32
-    scores: jnp.ndarray,       # (n_docs_padded,) float32 — precomputed L1 scores
-    term_present: jnp.ndarray, # (T,) bool
-    allowed: jnp.ndarray,      # (T, F) bool
-    required: jnp.ndarray,     # (T,) bool
-    state: EnvState,
-) -> EnvState:
-    W, D = cfg.words_per_block, cfg.block_docs
-    bp = state.block_ptr
-    occ_block = lax.dynamic_index_in_dim(occ, bp, axis=0, keepdims=False)
-
-    match_words, v_inc = scan_block(occ_block, allowed, required, term_present)
-
-    # Dedup against docs already selected by earlier rules / passes.
-    old = lax.dynamic_slice(state.matched, (bp * W,), (W,))
-    new_words = match_words & ~old
-    matched = lax.dynamic_update_slice(state.matched, old | match_words, (bp * W,))
-
-    new_bits = _unpack_words(new_words)                       # (D,) bool
-    doc_ids = bp * D + jnp.arange(D, dtype=jnp.int32)
-
-    # Append new docs to the fixed-K buffer in scan (static-rank) order.
-    pos = state.cand_cnt + jnp.cumsum(new_bits.astype(jnp.int32)) - 1
-    write_pos = jnp.where(new_bits & (pos < cfg.max_candidates), pos, cfg.max_candidates)
-    cand = state.cand.at[write_pos].set(doc_ids, mode="drop")
-    n_new = jnp.sum(new_bits, dtype=jnp.int32)
-    cand_cnt = jnp.minimum(state.cand_cnt + n_new, cfg.max_candidates)
-
-    # Update running top-n L1 scores with the block's new docs.
-    block_scores = lax.dynamic_slice(scores, (bp * D,), (D,))
-    masked = jnp.where(new_bits, block_scores, -jnp.inf)
-    topn, _ = lax.top_k(jnp.concatenate([state.topn, masked]), cfg.n_top)
-
-    u_inc = block_cost(allowed, term_present)
-    return EnvState(
-        block_ptr=bp + 1,
-        u=state.u + u_inc,
-        v=state.v + v_inc,
-        matched=matched,
-        cand=cand,
-        cand_cnt=cand_cnt,
-        topn=topn,
-        done=state.done,
-    )
-
-
 def execute_rule(
     cfg: EnvConfig,
     occ: jnp.ndarray,
@@ -169,22 +112,19 @@ def execute_rule(
     dv_quota: jnp.ndarray,
 ) -> EnvState:
     """Run one match rule until its stopping condition (paper §3):
-    Δu ≥ du_quota, Δv ≥ dv_quota, end of index, or episode budget."""
-    u0, v0 = state.u, state.v
+    Δu ≥ du_quota, Δv ≥ dv_quota, end of index, or episode budget.
 
-    def cond(s: EnvState):
-        return (
-            (s.u - u0 < du_quota)
-            & (s.v - v0 < dv_quota)
-            & (s.block_ptr < cfg.n_blocks)
-            & (s.u < cfg.u_budget)
-            & ~s.done
-        )
+    Single-query REFERENCE path.  The loop body lives in
+    ``core/scan_backends.py`` (``xla_run_rule``), where it doubles as
+    the ``"xla"`` entry of the pluggable batched scan-backend registry;
+    the plane-pruned Pallas strategy registers there as
+    ``"pallas_block_scan"``.
+    """
+    # Local import: scan_backends imports EnvConfig/EnvState from here.
+    from .scan_backends import xla_run_rule
 
-    def body(s: EnvState):
-        return _scan_one_block(cfg, occ, scores, term_present, allowed, required, s)
-
-    return lax.while_loop(cond, body, state)
+    return xla_run_rule(cfg, occ, scores, term_present, state,
+                        allowed, required, du_quota, dv_quota)
 
 
 def env_step(

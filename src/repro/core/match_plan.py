@@ -11,18 +11,15 @@ executing.  Executing a plan yields the baseline trajectory used for
 from __future__ import annotations
 
 import dataclasses
-import warnings
 from typing import Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from .environment import EnvConfig, EnvState
 from .match_rules import RuleSet
 
-__all__ = ["MatchPlan", "make_plan", "production_plans", "plan_rollout",
-           "run_plan", "batched_run_plan"]
+__all__ = ["MatchPlan", "make_plan", "production_plans", "plan_rollout"]
 
 
 @jax.tree_util.register_pytree_node_class
@@ -90,10 +87,11 @@ def production_plans(ruleset: RuleSet) -> dict:
     }
 
 
-def plan_rollout(cfg, ruleset, plan, occ, scores, term_present):
+def plan_rollout(cfg, ruleset, plan, occ, scores, term_present,
+                 backend: str = "xla"):
     """Batched plan execution through the unified rollout engine.
-    Returns (final_state, trajectory with (B, L) leaves) — the
-    supported replacement for run_plan/batched_run_plan."""
+    Returns (final_state, trajectory with (B, L) leaves).  ``backend``
+    selects the index-scan strategy (core/scan_backends.py)."""
     # Local imports: repro.policies wraps MatchPlan, so importing it at
     # module scope would be circular.
     from repro.core.rollout import unified_rollout
@@ -101,41 +99,9 @@ def plan_rollout(cfg, ruleset, plan, occ, scores, term_present):
 
     policy = StaticPlanPolicy(plan, cfg.n_actions)
     res = unified_rollout(
-        cfg, ruleset, None, policy, plan.length, occ, scores, term_present
+        cfg, ruleset, None, policy, plan.length, occ, scores, term_present,
+        backend=backend,
     )
     traj = jax.tree_util.tree_map(lambda x: jnp.moveaxis(x, 0, 1),
                                   res.trajectory)                # (B, L)
     return res.final_state, traj
-
-
-def run_plan(
-    cfg: EnvConfig,
-    ruleset: RuleSet,
-    plan: MatchPlan,
-    occ: jnp.ndarray,
-    scores: jnp.ndarray,
-    term_present: jnp.ndarray,
-) -> Tuple[EnvState, dict]:
-    """Deprecated: execute a static plan for one query.  Returns the
-    final state and the per-entry trajectory {u, v, topn_sum, cand_cnt}
-    (L,) arrays.  Use ``unified_rollout`` + ``StaticPlanPolicy``."""
-    warnings.warn(
-        "run_plan is deprecated; use repro.core.rollout.unified_rollout "
-        "with repro.policies.StaticPlanPolicy",
-        DeprecationWarning, stacklevel=2)
-    final, traj = plan_rollout(
-        cfg, ruleset, plan,
-        occ[None], scores[None], term_present[None])
-    final = jax.tree_util.tree_map(lambda x: x[0], final)
-    traj = {k: v[0] for k, v in traj.items()}
-    return final, traj
-
-
-def batched_run_plan(cfg, ruleset, plan, occ, scores, term_present):
-    """Deprecated batched plan executor (thin unified_rollout wrapper)."""
-    warnings.warn(
-        "batched_run_plan is deprecated; use "
-        "repro.core.rollout.unified_rollout with "
-        "repro.policies.StaticPlanPolicy",
-        DeprecationWarning, stacklevel=2)
-    return plan_rollout(cfg, ruleset, plan, occ, scores, term_present)

@@ -8,25 +8,20 @@ batched: transitions landing in the same (state, action) cell are
 averaged (scatter-mean) before the learning-rate step, which keeps the
 update order-independent and deterministic.
 
-``rollout`` / ``greedy_rollout`` remain as deprecated thin wrappers
-over the unified engine.
+``train_batch`` takes a static ``backend`` (core/scan_backends.py), so
+training episodes can run plane-pruned Pallas scans, not just serving.
 """
 from __future__ import annotations
 
 import dataclasses
-import warnings
 from functools import partial
-from typing import Tuple
 
 import jax
 import jax.numpy as jnp
 
-from .environment import EnvConfig, EnvState
-from .match_rules import RuleSet
 from .rollout import unified_rollout
-from .state_bins import StateBins
 
-__all__ = ["QConfig", "init_q", "rollout", "td_update", "train_batch", "greedy_rollout"]
+__all__ = ["QConfig", "init_q", "td_update", "train_batch"]
 
 
 @dataclasses.dataclass(frozen=True)
@@ -45,39 +40,15 @@ def init_q(qcfg: QConfig) -> jnp.ndarray:
 
 
 def _epsilon_rollout(cfg, qcfg, ruleset, bins, q, occ, scores, term_present,
-                     prod_rewards, epsilon, rng):
+                     prod_rewards, epsilon, rng, backend="xla"):
     """ε-greedy training episode through the unified engine."""
     from repro.policies import EpsilonGreedy, TabularQPolicy
 
     policy = EpsilonGreedy(TabularQPolicy(q), epsilon)
     res = unified_rollout(cfg, ruleset, bins, policy, qcfg.t_max,
-                          occ, scores, term_present, prod_rewards, rng)
+                          occ, scores, term_present, prod_rewards, rng,
+                          backend=backend)
     return res.final_state, res.transitions
-
-
-def rollout(
-    cfg: EnvConfig,
-    qcfg: QConfig,
-    ruleset: RuleSet,
-    bins: StateBins,
-    q: jnp.ndarray,            # (p, A)
-    occ: jnp.ndarray,          # (B, n_blocks, T, F, W)
-    scores: jnp.ndarray,       # (B, n_pad)
-    term_present: jnp.ndarray, # (B, T)
-    prod_rewards: jnp.ndarray, # (B, Lp) production per-step r_agent (Eq. 4)
-    epsilon: jnp.ndarray,      # () float32
-    rng: jax.Array,
-) -> Tuple[EnvState, dict]:
-    """Deprecated: ε-greedy episode for a query batch.  Returns final
-    states and the transition set {s, a, r, s2, done, valid} each
-    (T_max, B).  Use ``unified_rollout`` + ``EpsilonGreedy``."""
-    warnings.warn(
-        "qlearning.rollout is deprecated; use "
-        "repro.core.rollout.unified_rollout with "
-        "repro.policies.EpsilonGreedy(TabularQPolicy(q), eps)",
-        DeprecationWarning, stacklevel=2)
-    return _epsilon_rollout(cfg, qcfg, ruleset, bins, q, occ, scores,
-                            term_present, prod_rewards, epsilon, rng)
 
 
 def td_update(qcfg: QConfig, q: jnp.ndarray, transitions: dict) -> jnp.ndarray:
@@ -101,10 +72,12 @@ def td_update(qcfg: QConfig, q: jnp.ndarray, transitions: dict) -> jnp.ndarray:
     return q + qcfg.alpha * mean_td.reshape(qcfg.p, qcfg.n_actions)
 
 
-@partial(jax.jit, static_argnums=(0, 1))
-def train_batch(cfg, qcfg, ruleset, bins, q, occ, scores, term_present, prod_rewards, epsilon, rng):
+@partial(jax.jit, static_argnums=(0, 1), static_argnames=("backend",))
+def train_batch(cfg, qcfg, ruleset, bins, q, occ, scores, term_present,
+                prod_rewards, epsilon, rng, *, backend="xla"):
     final_state, transitions = _epsilon_rollout(
-        cfg, qcfg, ruleset, bins, q, occ, scores, term_present, prod_rewards, epsilon, rng
+        cfg, qcfg, ruleset, bins, q, occ, scores, term_present, prod_rewards,
+        epsilon, rng, backend
     )
     q_new = td_update(qcfg, q, transitions)
     metrics = {
@@ -116,18 +89,3 @@ def train_batch(cfg, qcfg, ruleset, bins, q, occ, scores, term_present, prod_rew
         "q_abs_mean": jnp.mean(jnp.abs(q_new)),
     }
     return q_new, metrics
-
-
-def greedy_rollout(cfg, qcfg, ruleset, bins, q, occ, scores, term_present):
-    """Deprecated: test-time greedy argmax over Q (paper §4).  Use
-    ``unified_rollout`` + ``TabularQPolicy``."""
-    warnings.warn(
-        "greedy_rollout is deprecated; use "
-        "repro.core.rollout.unified_rollout with "
-        "repro.policies.TabularQPolicy(q)",
-        DeprecationWarning, stacklevel=2)
-    from repro.policies import TabularQPolicy
-
-    res = unified_rollout(cfg, ruleset, bins, TabularQPolicy(q), qcfg.t_max,
-                          occ, scores, term_present)
-    return res.final_state, res.transitions["a"]

@@ -5,8 +5,11 @@ Every regime the paper compares — static production match plans (§3),
 rollouts — is the same computation: a ``lax.scan`` over agent steps,
 where each step asks a *policy* for an action and advances the batched
 match environment.  Historically the repo had three bespoke copies of
-that loop (``match_plan.run_plan``, ``qlearning.rollout`` /
-``greedy_rollout``, and the AOT serve path); they now all route here.
+that loop (static-plan execution, Q-learning episodes, and the AOT
+serve path); they now all route here.  HOW each rule execution streams
+the index is a pluggable *scan backend* (``core/scan_backends.py``,
+static ``backend=`` argument): the ``"xla"`` reference loop or the
+chunked plane-pruned ``"pallas_block_scan"`` kernel, bit-identical.
 
 A policy emits a :class:`PolicyAction` — a structured action that is a
 superset of the paper's action space: the rule/reset/stop index, plus
@@ -25,15 +28,16 @@ from __future__ import annotations
 
 import dataclasses
 from functools import partial
-from typing import Any, Dict, NamedTuple, Optional
+from typing import Any, Dict, NamedTuple, Optional, Union
 
 import jax
 import jax.numpy as jnp
 from jax import lax
 
-from .environment import EnvConfig, EnvState, env_reset, execute_rule
+from .environment import EnvConfig, EnvState, env_reset
 from .match_rules import RuleSet
 from .reward import step_reward
+from .scan_backends import ScanBackend, get_scan_backend
 from .state_bins import bin_index
 
 __all__ = [
@@ -75,13 +79,18 @@ def policy_env_step(
     term_present: jnp.ndarray,
     state: EnvState,
     pa: PolicyAction,
+    backend: Union[str, ScanBackend] = "xla",
 ) -> EnvState:
-    """One agent step under a structured action (single query).
+    """One agent step under a structured action (BATCHED over queries).
 
-    Equals the legacy ``env_step`` when the extras are neutral;
+    Equals the legacy ``vmap(env_step)`` when the extras are neutral;
     reset-before is applied unconditionally (plan semantics: the legacy
     executor rewound the pointer regardless of budget exhaustion).
+    ``backend`` (static) selects the index-scan strategy for the rule's
+    inner loop — see ``core/scan_backends.py``; every registered
+    backend is pinned bit-for-bit against ``"xla"``.
     """
+    scan = get_scan_backend(backend) if isinstance(backend, str) else backend
     action = pa.action
     is_rule = action < cfg.k_rules
     is_reset = action == cfg.a_reset
@@ -98,7 +107,7 @@ def policy_env_step(
     du_q = jnp.where(is_rule & ~state.done, du_q, 0)
     dv_q = jnp.where(is_rule & ~state.done, dv_q, 0)
 
-    nstate = execute_rule(
+    nstate = scan.run_rule(
         cfg, occ, scores, term_present, state, allowed, required, du_q, dv_q
     )
 
@@ -111,7 +120,7 @@ def _batch_reset(cfg: EnvConfig, batch: int) -> EnvState:
     return jax.vmap(lambda _: env_reset(cfg))(jnp.arange(batch))
 
 
-@partial(jax.jit, static_argnums=(0, 4))
+@partial(jax.jit, static_argnums=(0, 4), static_argnames=("backend",))
 def unified_rollout(
     cfg: EnvConfig,
     ruleset: RuleSet,
@@ -123,12 +132,17 @@ def unified_rollout(
     term_present: jnp.ndarray,     # (B, T) bool
     prod_rewards: Optional[jnp.ndarray] = None,  # (B, Lp) Eq. 4 subtrahend
     rng: Optional[jax.Array] = None,
+    *,
+    backend: str = "xla",          # static: scan backend (scan_backends.py)
 ) -> RolloutResult:
     """Run ``policy`` for ``t_max`` steps over a query batch.
 
-    The compiled executable is keyed on (cfg, t_max, policy *structure*);
-    policy parameters (Q-tables, plan entries, ε) are runtime arguments,
-    so e.g. publishing a new Q-table snapshot never retraces.
+    The compiled executable is keyed on (cfg, t_max, backend, policy
+    *structure*); policy parameters (Q-tables, plan entries, ε) are
+    runtime arguments, so e.g. publishing a new Q-table snapshot never
+    retraces.  ``backend`` selects how rule executions stream the index
+    (``"xla"`` reference loop vs ``"pallas_block_scan"`` chunked
+    plane-pruned kernel); every backend produces bit-identical states.
     """
     batch = occ.shape[0]
     state0 = _batch_reset(cfg, batch)
@@ -143,14 +157,16 @@ def unified_rollout(
             return jnp.zeros((batch,), jnp.int32)
         return bin_index(bins, state.u, state.v)
 
+    scan = get_scan_backend(backend)
+
     def step(carry, t):
         state, rng = carry
         rng, sub = jax.random.split(rng)
 
         s_bin = state_bin(state)
         pa = policy.act(s_bin, state, sub, t)
-        new_state = jax.vmap(partial(policy_env_step, cfg, ruleset))(
-            occ, scores, term_present, state, pa
+        new_state = policy_env_step(
+            cfg, ruleset, occ, scores, term_present, state, pa, scan
         )
 
         r_prod_t = prod_rewards[:, jnp.minimum(t, lp - 1)]

@@ -10,10 +10,32 @@ BlockSpec index_map, so the DMA engine fetches exactly
 ``n_active × W`` words per block: bytes streamed = u (the paper's cost
 accumulator), not T·F·W.
 
-Grid: (n_blocks, n_active).  The per-term OR is accumulated in VMEM
-scratch across the plane steps of one block; conjunction + popcounts
-happen on the last plane.  n_active is static (the rule is known at
-trace time); planes are (term, field) pairs flattened to t*F+f.
+Two entry points:
+
+``block_scan_pruned_pallas``
+    The original static-rule kernel: the rule masks are host (numpy)
+    values, the active-plane list is computed at trace time, and the
+    grid covers exactly the active planes.  Grid: (n_blocks, n_active).
+
+``block_scan_pruned_chunk``
+    The serving/rollout variant behind the ``pallas_block_scan`` scan
+    backend (core/scan_backends.py): rule masks are TRACED (chosen by
+    the policy at runtime), so the plane-step count is the static
+    worst case P = T·F and a per-step validity flag in the prefetched
+    meta masks the padding steps.  Padding steps map to the last
+    active plane, so the Pallas pipeline's revisiting-block elision
+    skips their DMA — bytes streamed stays ∝ n_active, not P.  The
+    kernel processes a static chunk of C consecutive blocks per launch
+    for a whole query batch: grid (B, C, P), block start per lane read
+    from the meta.  Inactive lanes / out-of-range blocks are clamped
+    to block n_blocks-1 and masked by the caller.
+
+Semantics are pinned against ``block_scan_reference``
+(kernels/block_scan/ref.py → core.match_rules.scan_block) for every
+edge, including rules with ZERO active planes (the occupancy read is
+fully masked: match = 0, v_inc = 0) and rules with no required terms
+(match = 0 but v_inc still counts term hits among the planes the rule
+paid to inspect — u is charged, so v is too).
 """
 from __future__ import annotations
 
@@ -27,7 +49,10 @@ from jax.experimental.pallas import tpu as pltpu
 
 from repro.kernels.common import INTERPRET, cdiv, reduce_and, tpu_compiler_params
 
-__all__ = ["block_scan_pruned_pallas"]
+__all__ = [
+    "block_scan_pruned_pallas", "block_scan_pruned_chunk", "build_rule_meta",
+    "META_ROWS", "META_BP_COL",
+]
 
 
 def _kernel(meta_ref, occ_ref, match_ref, counts_ref, tf_scr,
@@ -39,18 +64,20 @@ def _kernel(meta_ref, occ_ref, match_ref, counts_ref, tf_scr,
         tf_scr[...] = jnp.zeros_like(tf_scr)
 
     # meta row 0: plane ids (t*F+f); row 1: term id per active plane;
-    # row 2: required-mask per term (length-t prefix).
+    # row 2: step-valid flag (0 for the padding plane when the rule has
+    # no active planes); row 3: required-mask per term (length-t prefix).
     term = meta_ref[1, pi]
+    valid = meta_ref[2, pi].astype(jnp.uint32)
     plane = occ_ref[0]                                  # (1, W) active plane
-    # OR this plane into its term's running bitmap.
+    # OR this plane into its term's running bitmap (masked when padding).
     row = tf_scr[term]
-    tf_scr[term] = row | plane[0]
+    tf_scr[term] = row | (plane[0] * valid)
 
     @pl.when(pi == n_active - 1)
     def _finalize():
         tf = tf_scr[...]                                # (t, W)
         full = jnp.uint32(0xFFFFFFFF)
-        req = meta_ref[2, :t].astype(jnp.uint32)        # (t,) 0/1
+        req = meta_ref[3, :t].astype(jnp.uint32)        # (t,) 0/1
         conj = tf | (full * (jnp.uint32(1) - req))[:, None]
         match = reduce_and(conj, (0,))
         any_req = (jnp.sum(req) > 0).astype(jnp.uint32)
@@ -76,21 +103,27 @@ def block_scan_pruned_pallas(
     nb, t, f, w = occ.shape
     amask = np.asarray(allowed) & np.asarray(term_present)[:, None]
     planes = np.argwhere(amask.reshape(-1)).ravel()       # active plane ids
-    n_active = max(len(planes), 1)
+    n_steps = max(len(planes), 1)
+    # A rule with zero active planes still launches one (masked) step so
+    # the grid is non-empty; the valid flag keeps its occupancy read out
+    # of tf (v_inc = 0, match = 0 — pinned against block_scan_reference).
+    step_valid = np.ones(n_steps, np.int32)
     if len(planes) == 0:
         planes = np.array([0])
+        step_valid[0] = 0
 
-    meta = np.zeros((3, max(t * f, t)), np.int32)
-    meta[0, :n_active] = planes
-    meta[1, :n_active] = planes // f                      # term of each plane
-    meta[2, :t] = (np.asarray(required) & np.asarray(term_present)).astype(np.int32)
+    meta = np.zeros((4, max(t * f, t)), np.int32)
+    meta[0, :n_steps] = planes
+    meta[1, :n_steps] = planes // f                       # term of each plane
+    meta[2, :n_steps] = step_valid
+    meta[3, :t] = (np.asarray(required) & np.asarray(term_present)).astype(np.int32)
 
     occ2 = occ.reshape(nb, t * f, w)
 
-    kernel = functools.partial(_kernel, t=t, n_active=n_active)
+    kernel = functools.partial(_kernel, t=t, n_active=n_steps)
     grid_spec = pltpu.PrefetchScalarGridSpec(
         num_scalar_prefetch=1,
-        grid=(nb, n_active),
+        grid=(nb, n_steps),
         in_specs=[
             # stream exactly the active plane for this grid step
             pl.BlockSpec((1, 1, w), lambda b, p, m: (b, m[0, p], 0)),
@@ -115,3 +148,125 @@ def block_scan_pruned_pallas(
         name="block_scan_pruned",
     )(jnp.asarray(meta), occ2)
     return match, counts[:, 0], counts[:, 1]
+
+
+# --------------------------------------------------------- chunked variant
+META_ROWS = 4          # plane id / term id / step valid / required per term
+META_BP_COL = -1       # meta[:, 0, -1] holds the lane's block start
+
+
+def build_rule_meta(
+    allowed: jnp.ndarray,       # (B, T, F) bool — TRACED rule mask
+    required: jnp.ndarray,      # (B, T) bool
+    term_present: jnp.ndarray,  # (B, T) bool
+    block_start: jnp.ndarray,   # (B,) int32 — first block of the chunk
+) -> jnp.ndarray:
+    """Scalar-prefetch meta for ``block_scan_pruned_chunk`` (traced).
+
+    Active planes (allowed ∧ present, flattened t*F+f) are listed first
+    via a stable argsort; the P - n_active padding steps repeat the LAST
+    active plane with valid = 0, so the pipeline re-uses the resident
+    VMEM buffer instead of issuing fresh DMAs for them.
+    """
+    b, t, f = allowed.shape
+    p_steps = t * f
+    act = (allowed & term_present[:, :, None]).reshape(b, p_steps)
+    order = jnp.argsort(~act, axis=1, stable=True).astype(jnp.int32)
+    n_active = jnp.sum(act, axis=1).astype(jnp.int32)
+    last = jnp.take_along_axis(order, jnp.maximum(n_active - 1, 0)[:, None], axis=1)
+    steps = jnp.arange(p_steps, dtype=jnp.int32)[None, :]
+    valid = (steps < n_active[:, None]).astype(jnp.int32)
+    plane_ids = jnp.where(valid == 1, order, last)
+
+    ncols = max(p_steps + 1, t + 1, 8)
+    meta = jnp.zeros((b, META_ROWS, ncols), jnp.int32)
+    meta = meta.at[:, 0, :p_steps].set(plane_ids)
+    meta = meta.at[:, 0, ncols - 1].set(block_start.astype(jnp.int32))
+    meta = meta.at[:, 1, :p_steps].set(plane_ids // f)
+    meta = meta.at[:, 2, :p_steps].set(valid)
+    meta = meta.at[:, 3, :t].set((required & term_present).astype(jnp.int32))
+    return meta
+
+
+def _chunk_kernel(meta_ref, occ_ref, match_ref, counts_ref, tf_scr,
+                  *, t: int, p_steps: int):
+    bi = pl.program_id(0)
+    pi = pl.program_id(2)
+
+    @pl.when(pi == 0)
+    def _init():
+        tf_scr[...] = jnp.zeros_like(tf_scr)
+
+    term = meta_ref[bi, 1, pi]
+    valid = meta_ref[bi, 2, pi].astype(jnp.uint32)
+    plane = occ_ref[0, 0]                               # (1, W) current plane
+    row = tf_scr[term]
+    tf_scr[term] = row | (plane[0] * valid)
+
+    @pl.when(pi == p_steps - 1)
+    def _finalize():
+        tf = tf_scr[...]                                # (t, W)
+        full = jnp.uint32(0xFFFFFFFF)
+        req = meta_ref[bi, 3, :t].astype(jnp.uint32)
+        conj = tf | (full * (jnp.uint32(1) - req))[:, None]
+        match = reduce_and(conj, (0,))
+        any_req = (jnp.sum(req) > 0).astype(jnp.uint32)
+        match = match * any_req
+        match_ref[0, 0] = match
+        v_inc = jnp.sum(jax.lax.population_count(tf).astype(jnp.int32))
+        n_match = jnp.sum(jax.lax.population_count(match).astype(jnp.int32))
+        counts_ref[0, 0, 0] = v_inc
+        counts_ref[0, 0, 1] = n_match
+
+
+def block_scan_pruned_chunk(
+    occ: jnp.ndarray,            # (B, n_blocks, T*F, W) uint32
+    meta: jnp.ndarray,           # (B, META_ROWS, ncols) int32 — build_rule_meta
+    *,
+    chunk: int,
+    n_terms: int,
+    interpret: bool | None = None,
+):
+    """Evaluate each lane's (traced) rule over ``chunk`` consecutive
+    blocks starting at the lane's block start.
+
+    Returns (match (B, chunk, W) uint32, v_inc (B, chunk) int32,
+    n_match (B, chunk) int32).  Blocks past n_blocks-1 are clamped to
+    the last block — callers mask them (core/scan_backends.py masks by
+    the stopping condition, which includes block_ptr < n_blocks).
+    """
+    interpret = INTERPRET if interpret is None else interpret
+    b, nb, tf, w = occ.shape
+    t = n_terms
+    p_steps = tf
+    ncols = meta.shape[-1]
+
+    def occ_map(bi, c, p, m):
+        blk = jnp.minimum(m[bi, 0, ncols - 1] + c, nb - 1)
+        return (bi, blk, m[bi, 0, p], 0)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(b, chunk, p_steps),
+        in_specs=[pl.BlockSpec((1, 1, 1, w), occ_map)],
+        out_specs=[
+            pl.BlockSpec((1, 1, w), lambda bi, c, p, m: (bi, c, 0)),
+            pl.BlockSpec((1, 1, 8), lambda bi, c, p, m: (bi, c, 0)),
+        ],
+        scratch_shapes=[pltpu.VMEM((t, w), jnp.uint32)],
+    )
+    kernel = functools.partial(_chunk_kernel, t=t, p_steps=p_steps)
+    match, counts = pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=[
+            jax.ShapeDtypeStruct((b, chunk, w), jnp.uint32),
+            jax.ShapeDtypeStruct((b, chunk, 8), jnp.int32),
+        ],
+        compiler_params=tpu_compiler_params(
+            dimension_semantics=("arbitrary", "arbitrary", "arbitrary"),
+        ),
+        interpret=interpret,
+        name="block_scan_pruned_chunk",
+    )(meta, occ)
+    return match, counts[..., 0], counts[..., 1]

@@ -501,7 +501,8 @@ def _build_websearch(arch: ArchDef, shape_name: str, mesh, reduced: bool) -> Cel
     if spec.kind == "serve_websearch":
         def local_serve(qt, bins, occ, scores, tp):
             final = unified_rollout(env_cfg, ruleset, bins, TabularQPolicy(qt),
-                                    qcfg.t_max, occ, scores, tp).final_state
+                                    qcfg.t_max, occ, scores, tp,
+                                    backend=wcfg.backend).final_state
             if mesh is None:
                 return final.cand, final.u, final.cand_cnt
             shard = jax.lax.axis_index("model")
@@ -535,7 +536,8 @@ def _build_websearch(arch: ArchDef, shape_name: str, mesh, reduced: bool) -> Cel
 
     def local_train(qt, bins, occ, scores, tp, prod_r, rng):
         q_new, metrics = train_batch(env_cfg, qcfg, ruleset, bins, qt, occ,
-                                     scores, tp, prod_r, jnp.float32(0.1), rng)
+                                     scores, tp, prod_r, jnp.float32(0.1), rng,
+                                     backend=wcfg.backend)
         if mesh is not None:
             q_new = jax.lax.pmean(q_new, "model")
             q_new = jax.lax.pmean(q_new, dp)

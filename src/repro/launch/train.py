@@ -39,6 +39,7 @@ def train_policy_cmd(args) -> None:
         querylog=QueryLogConfig(n_queries=args.n_queries, seed=0),
         block_docs=args.block_docs, p_bins=args.p_bins,
         u_budget=args.u_budget, l1_steps=300,
+        backend=args.backend,
     ))
     print(f"[build] {sys_.index.n_docs} docs, {sys_.log.n_queries} queries, "
           f"{sys_.index.n_blocks} blocks ({sys_.build_time:.1f}s)")
@@ -146,6 +147,9 @@ def main() -> None:
     p.add_argument("--batch", type=int, default=48)
     p.add_argument("--ckpt-dir", default="results/ckpt_policy")
     p.add_argument("--out", default="results/train_policy.json")
+    p.add_argument("--backend", default="xla",
+                   help="index-scan backend for training/eval rollouts "
+                        "(see repro.core.scan_backends.available_backends)")
     p.set_defaults(fn=train_policy_cmd)
 
     p = sub.add_parser("lm")

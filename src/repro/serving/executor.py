@@ -13,11 +13,13 @@ structure, and publishing a new snapshot through a ``PolicyStore``
 never retraces; in steady state the compile count is
 ``len(BucketConfig.buckets()) × n_policy_structures``.
 
-The rollout inner loop is a *backend* chosen at construction:
-``"xla"`` is the unified_rollout scan; ``"pallas_block_scan"`` is the
-registered stub for the plane-pruned block-scan kernel
-(kernels/block_scan/block_scan_pruned.py) — the switch point the
-ROADMAP's multi-backend item needs.
+The rollout inner loop is a *backend* chosen at construction and baked
+into the AOT compile key: any name registered in the core scan-backend
+registry (``repro.core.scan_backends`` — ``"xla"`` block-at-a-time
+scanning, ``"pallas_block_scan"`` chunked plane-pruned Pallas, both
+bit-identical) runs through ``unified_rollout(..., backend=...)``;
+serving-only rollout strategies can additionally be registered here
+with ``register_rollout_backend``.
 
 Sharding here is the logical split of the paper's multi-machine index:
 the block axis is cut into ``n_shards`` equal slices, each running its
@@ -36,17 +38,24 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from functools import partial
+
 from repro.core.rollout import unified_rollout
+from repro.core.scan_backends import available_backends as scan_backends
 from repro.core.telescope import l1_prune, merge_shard_candidates
 from repro.index.corpus import N_FIELDS
 from repro.policies import Policy
 
-__all__ = ["ShardedExecutor", "available_backends", "register_rollout_backend"]
+__all__ = ["ShardedExecutor", "available_backends",
+           "register_rollout_backend", "resolve_rollout_backend"]
 
 
 # ------------------------------------------------------------------ backends
-# A backend runs one policy rollout over one index shard slice:
+# A rollout backend runs one policy rollout over one index shard slice:
 #   backend(cfg, ruleset, bins, policy, t_max, occ, scores, tp) -> EnvState
+# Every core scan backend (repro.core.scan_backends) is automatically a
+# rollout backend via unified_rollout(..., backend=name); this registry
+# holds serving-only overrides/extensions.
 ROLLOUT_BACKENDS: Dict[str, Callable] = {}
 
 
@@ -58,24 +67,25 @@ def register_rollout_backend(name: str):
 
 
 def available_backends() -> Tuple[str, ...]:
-    return tuple(sorted(ROLLOUT_BACKENDS))
+    """Serving-selectable rollout backends: the core scan-backend
+    registry plus any serving-level registrations."""
+    return tuple(sorted(set(ROLLOUT_BACKENDS) | set(scan_backends())))
 
 
-@register_rollout_backend("xla")
-def _xla_rollout(cfg, ruleset, bins, policy, t_max, occ, scores, tp):
+def _scan_backend_rollout(name, cfg, ruleset, bins, policy, t_max, occ,
+                          scores, tp):
     return unified_rollout(cfg, ruleset, bins, policy, t_max,
-                           occ, scores, tp).final_state
+                           occ, scores, tp, backend=name).final_state
 
 
-@register_rollout_backend("pallas_block_scan")
-def _pallas_block_scan_rollout(cfg, ruleset, bins, policy, t_max, occ,
-                               scores, tp):
-    raise NotImplementedError(
-        "the 'pallas_block_scan' serving backend is a registered stub: it "
-        "will drive the plane-pruned Pallas block-scan kernel "
-        "(repro/kernels/block_scan/block_scan_pruned.py) through the "
-        "unified rollout's execute_rule inner loop. Use backend='xla' "
-        "until it lands.")
+def resolve_rollout_backend(name: str) -> Callable:
+    if name in ROLLOUT_BACKENDS:
+        return ROLLOUT_BACKENDS[name]
+    if name in scan_backends():
+        return partial(_scan_backend_rollout, name)
+    raise ValueError(
+        f"unknown rollout backend {name!r}; available: "
+        f"{available_backends()}")
 
 
 class ShardedExecutor:
@@ -86,15 +96,11 @@ class ShardedExecutor:
         nb = system.env_cfg.n_blocks
         if n_shards < 1 or nb % n_shards:
             raise ValueError(f"n_shards={n_shards} must divide n_blocks={nb}")
-        if backend not in ROLLOUT_BACKENDS:
-            raise ValueError(
-                f"unknown rollout backend {backend!r}; available: "
-                f"{available_backends()}")
         self.system = system
         self.n_shards = n_shards
         self.keep = keep
         self.backend = backend
-        self._backend_fn = ROLLOUT_BACKENDS[backend]
+        self._backend_fn = resolve_rollout_backend(backend)
         self.blocks_per_shard = nb // n_shards
         self.docs_per_shard = self.blocks_per_shard * system.env_cfg.block_docs
         # Each shard scans its slice under the full per-machine u budget.
@@ -160,7 +166,9 @@ class ShardedExecutor:
                 f"expected a repro.policies.Policy, got {type(policy).__name__}; "
                 "raw Q-table arrays are no longer accepted — wrap with "
                 "TabularQPolicy(q)")
-        key = (bucket, self._policy_key(policy))
+        # The backend is part of the compile key: each scan strategy
+        # lowers to a distinct executable even at equal bucket/policy.
+        key = (bucket, self.backend, self._policy_key(policy))
         exe = self._compiled.get(key)
         if exe is None:
             exe = self._jit.lower(*self._abstract_args(bucket, policy)).compile()

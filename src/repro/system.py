@@ -49,6 +49,9 @@ class SystemConfig:
     l1_steps: int = 300
     gamma: float = 1.0              # paper: 0 < γ ≤ 1 (undiscounted default)
     seed: int = 0
+    # Index-scan strategy for every rollout this system runs (training,
+    # baselines, evaluation) — a core/scan_backends.py registry name.
+    backend: str = "xla"
 
 
 class RetrievalSystem:
@@ -147,7 +150,8 @@ class RetrievalSystem:
         """Batched static-plan execution via the unified rollout; returns
         (final_state, trajectory with (B, L) leaves)."""
         return plan_rollout(self.env_cfg, self.ruleset, plan,
-                            occ, scores, term_present)
+                            occ, scores, term_present,
+                            backend=self.cfg.backend)
 
     def run_baseline(self, query_ids: Sequence[int], cat: int):
         occ, scores, term_present = self.batch_inputs(query_ids)
@@ -158,7 +162,7 @@ class RetrievalSystem:
     def production_step_rewards(self, traj) -> jnp.ndarray:
         """Per-step r_agent of the production plan (Eq. 4's subtrahend)."""
         u = jnp.maximum(traj["u"], 1).astype(jnp.float32)          # (B?, L) — scan stacks on axis 0
-        # batched_run_plan vmaps over queries: traj leaves are (B, L)
+        # plan_rollout vmaps over queries: traj leaves are (B, L)
         v = traj["v"].astype(jnp.float32)
         m = jnp.clip(jnp.minimum(v, self.env_cfg.n_top), 1, self.env_cfg.n_top)
         return traj["topn_sum"] / (m * u)
@@ -212,6 +216,7 @@ class RetrievalSystem:
             q, metrics = train_batch(
                 self.env_cfg, self.qcfg, self.ruleset, self.bins, q,
                 occ, scores, term_present, prod_r, jnp.float32(eps), sub,
+                backend=self.cfg.backend,
             )
             history.append({k: float(v) for k, v in metrics.items()})
             if log_every and (it % log_every == 0):
@@ -250,6 +255,7 @@ class RetrievalSystem:
         pol_res = unified_rollout(
             self.env_cfg, self.ruleset, self.bins, TabularQPolicy(q),
             self.qcfg.t_max, occ, scores, term_present,
+            backend=self.cfg.backend,
         )
         pol_final, actions = pol_res.final_state, pol_res.transitions["a"]
 

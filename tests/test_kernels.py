@@ -187,3 +187,69 @@ def test_block_scan_pruned_vs_ref(n_terms, fields):
     assert (np.asarray(m1) == np.asarray(m2)).all()
     assert (np.asarray(v1) == np.asarray(v2)).all()
     assert (np.asarray(c1) == np.asarray(c2)).all()
+
+
+@pytest.mark.parametrize(
+    "allowed_rows,required,present",
+    [
+        # zero ACTIVE planes: the padding grid step must not leak plane
+        # (0, 0)'s occupancy into tf (v_inc = 0, match = 0)
+        ((), (True, False, False, False), (True, True, True, True)),
+        # allowed planes but term_present all false — also zero active
+        ((0, 1, 2, 3), (True, True, True, True), (False,) * 4),
+        # zero REQUIRED terms: match empties (any_req) but v_inc still
+        # counts term hits among the planes the rule paid u to inspect
+        ((0, 1), (False, False, False, False), (True, True, True, True)),
+    ],
+)
+def test_block_scan_pruned_degenerate_rules_match_reference(
+        allowed_rows, required, present):
+    """Degenerate-rule semantics are pinned against block_scan_reference
+    (intended: v follows u — inspected planes count term hits whether or
+    not the conjunction can match; zero inspected planes count nothing)."""
+    from repro.kernels.block_scan.block_scan_pruned import block_scan_pruned_pallas
+
+    rng = np.random.default_rng(3)
+    occ = jnp.asarray(rng.integers(0, 2**32, (6, 4, 4, 16), dtype=np.uint32))
+    allowed = np.zeros((4, 4), bool)
+    for t in allowed_rows:
+        allowed[t, :] = True
+    required = np.asarray(required)
+    present = np.asarray(present)
+    m1, v1, c1 = block_scan_pruned_pallas(occ, allowed, required, present)
+    m2, v2, c2 = block_scan_reference(
+        occ, jnp.asarray(allowed), jnp.asarray(required), jnp.asarray(present))
+    assert (np.asarray(m1) == np.asarray(m2)).all()
+    assert (np.asarray(v1) == np.asarray(v2)).all()
+    assert (np.asarray(c1) == np.asarray(c2)).all()
+
+
+def test_block_scan_pruned_chunk_vs_ref():
+    """The chunked traced-rule kernel (serving backend path) against the
+    full-scan oracle: per-lane rules, block-start offsets, end-of-index
+    clamping."""
+    from repro.kernels.block_scan.block_scan_pruned import (
+        block_scan_pruned_chunk, build_rule_meta,
+    )
+
+    rng = np.random.default_rng(9)
+    b, nb, t, f, w, chunk = 3, 8, 4, 4, 16, 4
+    occ = jnp.asarray(rng.integers(0, 2**32, (b, nb, t, f, w), dtype=np.uint32))
+    allowed = jnp.asarray(rng.random((b, t, f)) < 0.5)
+    required = jnp.asarray(rng.random((b, t)) < 0.6)
+    present = jnp.asarray(rng.random((b, t)) < 0.8)
+    allowed = allowed.at[2].set(False)            # zero-active lane
+    bp = jnp.asarray([0, 3, 6], jnp.int32)        # lane 2 runs off the end
+
+    meta = build_rule_meta(allowed, required, present, bp)
+    m, v, c = block_scan_pruned_chunk(
+        occ.reshape(b, nb, t * f, w), meta, chunk=chunk, n_terms=t)
+    for lane in range(b):
+        for j in range(chunk):
+            blk = min(int(bp[lane]) + j, nb - 1)
+            mr, vr, cr = block_scan_reference(
+                occ[lane, blk][None], allowed[lane], required[lane],
+                present[lane])
+            assert (np.asarray(m[lane, j]) == np.asarray(mr[0])).all()
+            assert int(v[lane, j]) == int(vr[0])
+            assert int(c[lane, j]) == int(cr[0])

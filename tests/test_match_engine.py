@@ -6,7 +6,7 @@ import pytest
 from hypothesis import given, settings, strategies as st
 
 from repro.core.environment import EnvConfig, env_reset, env_step, execute_rule
-from repro.core.match_plan import batched_run_plan, make_plan
+from repro.core.match_plan import make_plan, plan_rollout
 from repro.core.match_rules import block_cost, default_rule_library, scan_block
 from repro.core.reward import r_agent, step_reward
 from repro.index.blocks import unpack_bits
@@ -135,7 +135,7 @@ def test_plan_executor_trajectory(env_inputs):
     sys_, occ, scores, tp = env_inputs
     cfg = sys_.env_cfg
     plan = sys_.plans["CAT1"]
-    final, traj = batched_run_plan(cfg, sys_.ruleset, plan, occ, scores, tp)
+    final, traj = plan_rollout(cfg, sys_.ruleset, plan, occ, scores, tp)
     u = np.asarray(traj["u"])
     assert u.shape == (occ.shape[0], plan.length)
     assert (np.diff(u, axis=1) >= 0).all()             # u is cumulative

@@ -1,10 +1,9 @@
 """Unified Policy API: parity with the legacy rollout loops, the
-PolicyStore contract, serving integration, and deprecation shims.
+PolicyStore contract, and serving integration.
 
-The legacy loops (pre-refactor ``run_plan`` / ``greedy_rollout``) are
-reimplemented verbatim here as oracles, so the parity claims hold
-against the original semantics, not against the shims (which route
-through the unified engine themselves).
+The legacy loops (pre-refactor ``run_plan`` / ``greedy_rollout``,
+removed after their deprecation cycle) are reimplemented verbatim here
+as oracles, so the parity claims hold against the original semantics.
 """
 import dataclasses
 from functools import partial
@@ -16,8 +15,6 @@ import pytest
 from jax import lax
 
 from repro.core.environment import env_reset, env_step, execute_rule
-from repro.core.match_plan import batched_run_plan, run_plan
-from repro.core.qlearning import greedy_rollout, rollout
 from repro.core.rollout import unified_rollout
 from repro.core.state_bins import bin_index
 from repro.data.querylog import CAT1, CAT2
@@ -25,7 +22,9 @@ from repro.policies import (
     EpsilonGreedy, PolicySnapshot, PolicyStore, StalePolicyError,
     StaticPlanPolicy, TabularQPolicy,
 )
-from repro.serving import EngineConfig, ServeEngine, available_backends
+from repro.serving import (
+    EngineConfig, ServeEngine, available_backends, register_rollout_backend,
+)
 from repro.serving.executor import ShardedExecutor
 
 
@@ -186,43 +185,17 @@ def test_unified_rollout_returns_both_products(inputs, trained_q):
         assert res.trajectory[k].shape == (t, b), k
 
 
-# -------------------------------------------------------- deprecation shims
-def test_run_plan_shim_warns_and_matches(inputs):
-    sys_, (occ, scores, tp) = inputs
-    plan = sys_.plans["CAT2"]
-    leg_fin, leg_traj = _legacy_run_plan(sys_.env_cfg, sys_.ruleset, plan,
-                                         occ[0], scores[0], tp[0])
-    with pytest.warns(DeprecationWarning):
-        fin, traj = run_plan(sys_.env_cfg, sys_.ruleset, plan,
-                             occ[0], scores[0], tp[0])
-    for k in leg_traj:
-        np.testing.assert_array_equal(np.asarray(leg_traj[k]),
-                                      np.asarray(traj[k]), err_msg=k)
-    _assert_states_equal(leg_fin, fin)
-    with pytest.warns(DeprecationWarning):
-        batched_run_plan(sys_.env_cfg, sys_.ruleset, plan, occ, scores, tp)
+# --------------------------------------------------- removed legacy shims
+def test_deprecated_shims_are_gone():
+    """The one-release deprecation cycle is over: the legacy loop names
+    must no longer exist (their verbatim oracles live in this file)."""
+    from repro.core import match_plan, qlearning
 
-
-def test_greedy_rollout_shim_warns_and_matches(inputs, trained_q):
-    sys_, (occ, scores, tp) = inputs
-    leg_fin, leg_actions = _legacy_greedy_rollout(
-        sys_.env_cfg, sys_.qcfg, sys_.ruleset, sys_.bins, trained_q,
-        occ, scores, tp)
-    with pytest.warns(DeprecationWarning):
-        fin, actions = greedy_rollout(sys_.env_cfg, sys_.qcfg, sys_.ruleset,
-                                      sys_.bins, trained_q, occ, scores, tp)
-    np.testing.assert_array_equal(np.asarray(leg_actions), np.asarray(actions))
-    _assert_states_equal(leg_fin, fin)
-
-
-def test_rollout_shim_warns(inputs, trained_q):
-    sys_, (occ, scores, tp) = inputs
-    prod_r = jnp.zeros((occ.shape[0], 4), jnp.float32)
-    with pytest.warns(DeprecationWarning):
-        final, trans = rollout(sys_.env_cfg, sys_.qcfg, sys_.ruleset,
-                               sys_.bins, trained_q, occ, scores, tp,
-                               prod_r, jnp.float32(0.3), jax.random.key(0))
-    assert trans["a"].shape == (sys_.qcfg.t_max, occ.shape[0])
+    for mod, name in ((match_plan, "run_plan"),
+                      (match_plan, "batched_run_plan"),
+                      (qlearning, "rollout"),
+                      (qlearning, "greedy_rollout")):
+        assert not hasattr(mod, name), f"{mod.__name__}.{name} still exists"
 
 
 # ------------------------------------------------------------- PolicyStore
@@ -332,10 +305,18 @@ def test_backend_registry(tiny_system):
         ShardedExecutor(tiny_system, backend="no_such_backend")
 
 
-def test_pallas_backend_is_stub(tiny_system, trained_q):
-    exe = ShardedExecutor(tiny_system, backend="pallas_block_scan")
-    with pytest.raises(NotImplementedError, match="pallas_block_scan"):
-        exe.compiled_for(4, TabularQPolicy(trained_q))
+def test_pallas_backend_serves_end_to_end(tiny_system, trained_q):
+    """`pallas_block_scan` is a real serving backend now: same responses
+    as the xla executor, bit-for-bit (interpret mode on CPU)."""
+    pol = TabularQPolicy(trained_q)
+    exe_x = ShardedExecutor(tiny_system, backend="xla")
+    exe_p = ShardedExecutor(tiny_system, backend="pallas_block_scan")
+    qids = np.arange(4)
+    occ, scores, tp = tiny_system.batch_inputs(qids)
+    out_x = exe_x.execute(pol, occ, scores, tp)
+    out_p = exe_p.execute(pol, occ, scores, tp)
+    for a, b, name in zip(out_x, out_p, ("ids", "scores", "u", "cand_cnt")):
+        np.testing.assert_array_equal(a, b, err_msg=name)
 
 
 def test_pinned_engine_refuses_stale_cache_hits(tiny_system, trained_q):
@@ -358,14 +339,25 @@ def test_pinned_engine_refuses_stale_cache_hits(tiny_system, trained_q):
 
 
 def test_failed_batch_requeues_requests(tiny_system, trained_q):
-    """A batch that fails mid-drain (here: the stub backend) must not
-    lose admitted requests — they go back in the queue."""
-    pol = TabularQPolicy(trained_q)
-    engine = ServeEngine(tiny_system, {CAT1: pol, CAT2: pol}, EngineConfig(
-        min_bucket=4, max_bucket=4, cache_capacity=0,
-        backend="pallas_block_scan"))
-    rid = engine.submit(0)
-    with pytest.raises(NotImplementedError):
-        engine.flush()
-    assert engine.batcher.pending() == 1     # request survived the failure
-    assert engine.take_response(rid) is None
+    """A batch that fails mid-drain (here: a purpose-built failing
+    serving backend) must not lose admitted requests — they go back in
+    the queue."""
+
+    from repro.serving import executor as executor_mod
+
+    @register_rollout_backend("_test_boom")
+    def _boom(cfg, ruleset, bins, policy, t_max, occ, scores, tp):
+        raise RuntimeError("backend boom")
+
+    try:
+        pol = TabularQPolicy(trained_q)
+        engine = ServeEngine(tiny_system, {CAT1: pol, CAT2: pol}, EngineConfig(
+            min_bucket=4, max_bucket=4, cache_capacity=0,
+            backend="_test_boom"))
+        rid = engine.submit(0)
+        with pytest.raises(RuntimeError, match="backend boom"):
+            engine.flush()
+        assert engine.batcher.pending() == 1  # request survived the failure
+        assert engine.take_response(rid) is None
+    finally:
+        executor_mod.ROLLOUT_BACKENDS.pop("_test_boom", None)

@@ -5,9 +5,11 @@ import numpy as np
 import pytest
 from hypothesis import given, settings, strategies as st
 
-from repro.core.qlearning import QConfig, init_q, td_update, train_batch, greedy_rollout
+from repro.core.qlearning import QConfig, init_q, td_update, train_batch
+from repro.core.rollout import unified_rollout
 from repro.core.state_bins import bin_index, fit_bins
 from repro.data.querylog import CAT1, CAT2
+from repro.policies import TabularQPolicy
 
 
 # ------------------------------------------------------------- state bins
@@ -87,7 +89,14 @@ def test_greedy_rollout_deterministic(tiny_system):
     q = init_q(sys_.qcfg)
     qids = np.where(sys_.log.category == CAT1)[0][:8]
     occ, scores, tp = sys_.batch_inputs(qids)
-    f1, a1 = greedy_rollout(sys_.env_cfg, sys_.qcfg, sys_.ruleset, sys_.bins, q, occ, scores, tp)
-    f2, a2 = greedy_rollout(sys_.env_cfg, sys_.qcfg, sys_.ruleset, sys_.bins, q, occ, scores, tp)
+
+    def greedy():
+        res = unified_rollout(sys_.env_cfg, sys_.ruleset, sys_.bins,
+                              TabularQPolicy(q), sys_.qcfg.t_max,
+                              occ, scores, tp)
+        return res.final_state, res.transitions["a"]
+
+    f1, a1 = greedy()
+    f2, a2 = greedy()
     assert (np.asarray(a1) == np.asarray(a2)).all()
     assert (np.asarray(f1.u) == np.asarray(f2.u)).all()

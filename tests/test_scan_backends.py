@@ -1,0 +1,285 @@
+"""Scan-backend parity matrix: the chunked plane-pruned Pallas backend
+(interpret mode on CPU) must reproduce the "xla" reference backend's
+final EnvState BIT-FOR-BIT — shallow and deep rules, mid-chunk Δu/Δv
+quota crossings, u_budget exhaustion, reset-before plans, continuation
+from a non-fresh state — plus registry behaviour and per-backend
+executor compile keys."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.environment import EnvConfig, env_reset
+from repro.core.match_rules import default_rule_library
+from repro.core.rollout import unified_rollout
+from repro.core.scan_backends import (
+    PallasBlockScanBackend, ScanBackend, available_backends,
+    get_scan_backend, register_scan_backend,
+)
+from repro.data.querylog import CAT1
+from repro.policies import StaticPlanPolicy, TabularQPolicy
+from repro.serving.executor import ShardedExecutor
+
+STATE_FIELDS = ("block_ptr", "u", "v", "matched", "cand", "cand_cnt",
+                "topn", "done")
+
+B, NB, D, T, F = 4, 8, 64, 4, 4
+W = D // 32
+
+
+def _assert_states_equal(a, b, msg=""):
+    for f in STATE_FIELDS:
+        np.testing.assert_array_equal(
+            np.asarray(getattr(a, f)), np.asarray(getattr(b, f)),
+            err_msg=f"{msg}:{f}")
+
+
+@pytest.fixture(scope="module")
+def cfg():
+    return EnvConfig(n_blocks=NB, block_docs=D, k_rules=6,
+                     max_candidates=48, n_top=5, u_budget=4096)
+
+
+@pytest.fixture(scope="module")
+def inputs():
+    rng = np.random.default_rng(7)
+    # AND two random draws so per-block v increments are moderate and
+    # Δv quota crossings land mid-chunk instead of on block 0.
+    occ = jnp.asarray(
+        rng.integers(0, 2**32, (B, NB, T, F, W), dtype=np.uint32)
+        & rng.integers(0, 2**32, (B, NB, T, F, W), dtype=np.uint32))
+    scores = jnp.asarray(rng.normal(size=(B, NB * D)).astype(np.float32))
+    tp = jnp.asarray(np.ones((B, T), bool))
+    return occ, scores, tp
+
+
+def _batch_state(cfg):
+    return jax.vmap(lambda _: env_reset(cfg))(jnp.arange(B))
+
+
+def _rule(allowed_planes, required_terms):
+    """(T, F) allowed from a plane list + (T,) required, batched to B."""
+    allowed = np.zeros((T, F), bool)
+    for t, f in allowed_planes:
+        allowed[t, f] = True
+    required = np.zeros(T, bool)
+    required[list(required_terms)] = True
+    return (jnp.broadcast_to(jnp.asarray(allowed), (B, T, F)),
+            jnp.broadcast_to(jnp.asarray(required), (B, T)))
+
+
+ALL_PLANES = [(t, f) for t in range(T) for f in range(F)]
+
+# name -> (allowed planes, required terms, du_quota, dv_quota)
+RULE_CASES = {
+    # shallow 2-plane rule: exactly 2 active planes of 16
+    "shallow_2plane": ([(0, 1), (0, 3)], [0], 1000, 10**6),
+    # deep rule streaming the full T*F tile
+    "deep_full": (ALL_PLANES, range(T), 1000, 10**6),
+    # deep rule whose Δu quota (40) crosses at block 2.5 with u_inc=16:
+    # 3 of the default chunk of 4 blocks scanned — mid-chunk masking
+    "mid_chunk_du": (ALL_PLANES, range(T), 40, 10**6),
+    # Δv-quota crossing mid-chunk (v accumulates ~tens per block)
+    "mid_chunk_dv": (ALL_PLANES, range(T), 1000, 150),
+    # no required terms: match must stay empty, v still accumulates
+    "no_required": (ALL_PLANES[:4], [], 1000, 10**6),
+    # rule inspects nothing: u_inc = 0, scan runs to end of index
+    "zero_active": ([], [0], 1000, 10**6),
+}
+
+
+@pytest.mark.parametrize("case", sorted(RULE_CASES))
+def test_run_rule_parity(cfg, inputs, case):
+    occ, scores, tp = inputs
+    planes, req_terms, du, dv = RULE_CASES[case]
+    allowed, required = _rule(planes, req_terms)
+    du_q = jnp.full((B,), du, jnp.int32)
+    dv_q = jnp.full((B,), dv, jnp.int32)
+    state0 = _batch_state(cfg)
+
+    xla = get_scan_backend("xla")
+    pal = get_scan_backend("pallas_block_scan")
+    sx = xla.run_rule(cfg, occ, scores, tp, state0, allowed, required,
+                      du_q, dv_q)
+    sp = pal.run_rule(cfg, occ, scores, tp, state0, allowed, required,
+                      du_q, dv_q)
+    _assert_states_equal(sx, sp, case)
+    if case == "mid_chunk_du":
+        # the crossing really is mid-chunk (3 of 4 speculated blocks)
+        assert (np.asarray(sx.block_ptr) == 3).all()
+    if case == "no_required":
+        assert (np.asarray(sx.cand_cnt) == 0).all()
+        assert (np.asarray(sx.v) > 0).all()
+    if case == "zero_active":
+        assert (np.asarray(sx.u) == 0).all()
+        assert (np.asarray(sx.block_ptr) == NB).all()
+
+
+def test_run_rule_parity_from_midway_state(cfg, inputs):
+    """Continuation from a non-fresh state: dedup against matched bits
+    and candidate-buffer append positions must line up."""
+    occ, scores, tp = inputs
+    xla = get_scan_backend("xla")
+    pal = get_scan_backend("pallas_block_scan")
+
+    a1, r1 = _rule([(t, f) for t in range(T) for f in (1, 3)], range(T))
+    q = jnp.full((B,), 1000, jnp.int32)
+    state1 = xla.run_rule(cfg, occ, scores, tp, _batch_state(cfg), a1, r1,
+                          jnp.full((B,), 48, jnp.int32), q)
+    # rewind for a second pass over the head of the index (reset-before)
+    state1 = dataclasses.replace(state1,
+                                 block_ptr=jnp.zeros((B,), jnp.int32))
+    a2, r2 = _rule(ALL_PLANES, range(2))
+    sx = xla.run_rule(cfg, occ, scores, tp, state1, a2, r2, q, q)
+    sp = pal.run_rule(cfg, occ, scores, tp, state1, a2, r2, q, q)
+    _assert_states_equal(sx, sp, "midway")
+    assert (np.asarray(sx.cand_cnt) > 0).all()
+
+
+def test_run_rule_parity_u_budget_exhaustion(cfg, inputs):
+    """Episode budget fires mid-rule: with u_inc=16 and u_budget=40 the
+    loop must stop after block 2 (u=32 < 40, then 48 blocks the cond)."""
+    occ, scores, tp = inputs
+    small = dataclasses.replace(cfg, u_budget=40)
+    allowed, required = _rule(ALL_PLANES, range(T))
+    q = jnp.full((B,), 10**6, jnp.int32)
+    sx = get_scan_backend("xla").run_rule(
+        small, occ, scores, tp, _batch_state(small), allowed, required, q, q)
+    sp = get_scan_backend("pallas_block_scan").run_rule(
+        small, occ, scores, tp, _batch_state(small), allowed, required, q, q)
+    _assert_states_equal(sx, sp, "u_budget")
+    assert (np.asarray(sx.u) == 48).all()      # 3 blocks, then cond fails
+    assert (np.asarray(sx.block_ptr) == 3).all()
+
+
+def test_run_rule_parity_per_lane_rules(cfg, inputs):
+    """Lanes carry DIFFERENT rules/quotas: the batch-level chunk loop
+    must not couple them (idle lanes mask to a no-op)."""
+    occ, scores, tp = inputs
+    ax, _ = _rule(ALL_PLANES, range(T))
+    allowed = ax.at[1].set(False).at[1, 0, 1].set(True).at[1, 0, 3].set(True)
+    required = jnp.asarray(np.tile(np.eye(T, dtype=bool)[0], (B, 1)))
+    du_q = jnp.asarray([16, 1000, 40, 0], jnp.int32)   # lane 3: no-op quota
+    dv_q = jnp.full((B,), 10**6, jnp.int32)
+    state0 = _batch_state(cfg)
+    sx = get_scan_backend("xla").run_rule(
+        cfg, occ, scores, tp, state0, allowed, required, du_q, dv_q)
+    sp = get_scan_backend("pallas_block_scan").run_rule(
+        cfg, occ, scores, tp, state0, allowed, required, du_q, dv_q)
+    _assert_states_equal(sx, sp, "per_lane")
+    assert int(np.asarray(sx.block_ptr)[3]) == 0       # lane 3 untouched
+
+
+@pytest.mark.parametrize("chunk", [1, 3, 8, 32])
+def test_chunk_size_invariance(cfg, inputs, chunk):
+    """The final state is independent of the speculation depth C
+    (including C=1 ≡ block-at-a-time and C > n_blocks)."""
+    occ, scores, tp = inputs
+    allowed, required = _rule(ALL_PLANES, range(T))
+    du_q = jnp.full((B,), 40, jnp.int32)
+    dv_q = jnp.full((B,), 10**6, jnp.int32)
+    sx = get_scan_backend("xla").run_rule(
+        cfg, occ, scores, tp, _batch_state(cfg), allowed, required,
+        du_q, dv_q)
+    sp = PallasBlockScanBackend(chunk=chunk).run_rule(
+        cfg, occ, scores, tp, _batch_state(cfg), allowed, required,
+        du_q, dv_q)
+    _assert_states_equal(sx, sp, f"chunk={chunk}")
+
+
+# ------------------------------------------------------- rollout level
+@pytest.fixture(scope="module")
+def ruleset():
+    return default_rule_library(du_scale=2, dv_scale=8)
+
+
+def test_static_plan_rollout_parity(cfg, inputs, ruleset):
+    """Full plan rollout (CAT1 includes a reset-before entry) across
+    backends through unified_rollout — transitions and trajectory too."""
+    from repro.core.match_plan import production_plans
+
+    occ, scores, tp = inputs
+    plan = production_plans(ruleset)["CAT1"]
+    policy = StaticPlanPolicy(plan, cfg.n_actions)
+    rx = unified_rollout(cfg, ruleset, None, policy, plan.length,
+                         occ, scores, tp, backend="xla")
+    rp = unified_rollout(cfg, ruleset, None, policy, plan.length,
+                         occ, scores, tp, backend="pallas_block_scan")
+    _assert_states_equal(rx.final_state, rp.final_state, "plan")
+    for k in rx.trajectory:
+        np.testing.assert_array_equal(np.asarray(rx.trajectory[k]),
+                                      np.asarray(rp.trajectory[k]),
+                                      err_msg=k)
+    for k in rx.transitions:
+        np.testing.assert_array_equal(np.asarray(rx.transitions[k]),
+                                      np.asarray(rp.transitions[k]),
+                                      err_msg=k)
+
+
+def test_tabular_rollout_parity(cfg, inputs, ruleset):
+    """Greedy Q rollout across backends: a fixed random Q-table selects
+    a varied action stream (rules, resets, stops) per step."""
+    from repro.core.state_bins import fit_bins
+
+    occ, scores, tp = inputs
+    rng = np.random.default_rng(11)
+    # A random multi-row Q-table over coarse (u, v) bins yields a varied
+    # greedy action stream (different rules / resets / stops per step).
+    bins = fit_bins(np.linspace(0, 200, 64), np.linspace(0, 4000, 64), p=16)
+    q = jnp.asarray(rng.normal(size=(bins.p, cfg.n_actions)).astype(np.float32))
+    rx = unified_rollout(cfg, ruleset, bins, TabularQPolicy(q), 6,
+                         occ, scores, tp, backend="xla")
+    rp = unified_rollout(cfg, ruleset, bins, TabularQPolicy(q), 6,
+                         occ, scores, tp, backend="pallas_block_scan")
+    _assert_states_equal(rx.final_state, rp.final_state, "tabular")
+    np.testing.assert_array_equal(np.asarray(rx.transitions["a"]),
+                                  np.asarray(rp.transitions["a"]))
+
+
+# ---------------------------------------------------------- registry
+def test_registry_contents_and_errors():
+    names = available_backends()
+    assert "xla" in names and "pallas_block_scan" in names
+    with pytest.raises(KeyError, match="available"):
+        get_scan_backend("no_such_backend")
+    with pytest.raises(ValueError, match="no name"):
+        register_scan_backend(ScanBackend())
+
+
+def test_register_custom_backend():
+    class Custom(PallasBlockScanBackend):
+        name = "_test_custom"
+
+    try:
+        register_scan_backend(Custom(chunk=2))
+        assert "_test_custom" in available_backends()
+        assert get_scan_backend("_test_custom").chunk == 2
+    finally:
+        from repro.core import scan_backends as sb
+        sb._SCAN_BACKENDS.pop("_test_custom", None)
+
+
+def test_backend_describe():
+    assert get_scan_backend("pallas_block_scan").describe()["chunk"] > 0
+    assert get_scan_backend("xla").describe()["name"] == "xla"
+
+
+# ------------------------------------------------- executor compile keys
+def test_executor_compile_key_separates_backends(tiny_system):
+    """Same bucket + same policy structure must compile to DISTINCT
+    executables per backend — the backend is part of the AOT key."""
+    pol = tiny_system.plan_policy(CAT1)
+    exe_x = ShardedExecutor(tiny_system, backend="xla")
+    exe_p = ShardedExecutor(tiny_system, backend="pallas_block_scan")
+    exe_x.compiled_for(4, pol)
+    exe_p.compiled_for(4, pol)
+    (kx,) = exe_x._compiled.keys()
+    (kp,) = exe_p._compiled.keys()
+    assert kx[0] == kp[0] == 4
+    assert kx[1] == "xla" and kp[1] == "pallas_block_scan"
+    assert kx != kp
+    # cache hit on re-request, no recompilation
+    exe_p.compiled_for(4, pol)
+    assert exe_p.compile_count == 1
