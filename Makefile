@@ -1,7 +1,7 @@
 PYTHON ?= python
 export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH),)
 
-.PHONY: check compile test serve-bench bench serve example
+.PHONY: check compile test serve-bench cluster-bench cluster-smoke bench serve example
 
 # CI gate: byte-compile everything, then the tier-1 suite
 check: compile test
@@ -16,6 +16,14 @@ test:
 # Engine vs. naive-loop serving benchmark (QPS, p99, retrace count)
 serve-bench:
 	$(PYTHON) -m benchmarks.serve_bench --fast
+
+# Replica scaling / routing / shedding benchmark (docs/cluster.md)
+cluster-bench:
+	$(PYTHON) -m benchmarks.cluster_bench --fast --replicas 1,2
+
+# CI smoke: 2 replicas, tiny corpus, 2 publish cycles, zero dropped
+cluster-smoke:
+	$(PYTHON) -m repro.launch.cluster --smoke
 
 # Full benchmark sweep (kernels, plan executor, serving)
 bench:

@@ -21,6 +21,10 @@ def main() -> None:
                     default=True,
                     help="run the serving engine benchmark "
                          "(--no-serve-bench to skip)")
+    ap.add_argument("--cluster-bench", action=argparse.BooleanOptionalAction,
+                    default=False,
+                    help="run the online-learning cluster benchmark "
+                         "(replica scaling / routing / shedding)")
     args = ap.parse_args()
 
     from benchmarks._results import record
@@ -67,6 +71,15 @@ def main() -> None:
         serve_bench.main(fast=not args.full)
     else:
         print("\n(serving engine benchmark skipped: --no-serve-bench)")
+
+    if args.cluster_bench:
+        print("\n== online-learning cluster (replicas / routing / shedding) ==")
+        from benchmarks import cluster_bench
+        cluster_bench.main(fast=not args.full,
+                           replicas_list=(1, 2) if not args.full else (1, 2, 4))
+    else:
+        print("\n(cluster benchmark skipped: pass --cluster-bench, "
+              "or `make cluster-bench`)")
 
     # Table 1 / Figure 2
     if args.full:

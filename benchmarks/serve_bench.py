@@ -68,25 +68,18 @@ def engine_serve_batches(engine, batches):
         engine.serve(qids)     # submit + flush + claim responses
 
 
-def bytes_streamed_per_query(sys_, policies, qids, backend: str,
-                             chunk: int = 4) -> float:
-    """Mean HBM bytes a scan backend streams per query under a PER-LANE
-    model, derived from the rollout's per-step Δu and each chosen rule's
-    active-plane count (the backends are bit-identical, so one xla
-    rollout prices both).  "xla" streams the full T·F·W tile per block;
-    the pruned backend streams n_active·W per block, rounded up to its
-    speculation chunk C.  This is a lower bound on real traffic: both
-    backends keep streaming for already-stopped lanes until the whole
-    batch's loop exits, and the engine pads batches to bucket size —
-    that batch-coupled overhead is shared by both and not counted here."""
+def scan_pricing(sys_, policies, qids):
+    """Per-lane scan-depth accounting shared by every backend's byte
+    model: one xla rollout (the backends are bit-identical, so one
+    rollout prices all) yielding, per category mask, the per-step
+    scanned-block counts and active-plane counts."""
     from repro.core.rollout import unified_rollout
     from repro.data.querylog import CAT1, CAT2
 
     qids = np.asarray(qids)
-    total = np.zeros(len(qids))
-    w = sys_.env_cfg.words_per_block
     allowed = np.asarray(sys_.ruleset.allowed)          # (k, T, F)
-    k, t, f = allowed.shape
+    k = allowed.shape[0]
+    out = []
     for cat in (CAT1, CAT2):
         m = sys_.log.category[qids] == cat
         if not m.any():
@@ -102,6 +95,25 @@ def bytes_streamed_per_query(sys_, policies, qids, backend: str,
         rule = np.clip(a, 0, k - 1)
         n_active = (allowed[rule] & tpn[None, :, :, None]).sum(axis=(2, 3))
         blocks = np.where(n_active > 0, du // np.maximum(n_active, 1), 0)
+        out.append((m, blocks, n_active))
+    return qids, out
+
+
+def bytes_streamed_per_query(pricing, sys_, backend: str,
+                             chunk: int = 4) -> float:
+    """Mean HBM bytes a scan backend streams per query under a PER-LANE
+    model over a shared :func:`scan_pricing` result.  "xla" streams the
+    full T·F·W tile per block; the pruned backend streams n_active·W
+    per block, rounded up to its speculation chunk C.  This is a lower
+    bound on real traffic: both backends keep streaming for
+    already-stopped lanes until the whole batch's loop exits, and the
+    engine pads batches to bucket size — that batch-coupled overhead is
+    shared by both and not counted here."""
+    qids, per_cat = pricing
+    total = np.zeros(len(qids))
+    w = sys_.env_cfg.words_per_block
+    _, t, f = np.asarray(sys_.ruleset.allowed).shape
+    for m, blocks, n_active in per_cat:
         if backend == "pallas_block_scan":
             launched = np.ceil(blocks / chunk) * chunk * (blocks > 0)
             bytes_ = launched * n_active * w * 4
@@ -119,6 +131,8 @@ def backend_sweep(sys_, policies, batches, backends):
 
     batch = len(batches[0])
     bucket = 1 << (batch - 1).bit_length()
+    # One rollout prices every backend's byte model (they're bit-equal).
+    pricing = scan_pricing(sys_, policies, np.concatenate(batches[1:]))
     out = {}
     for name in backends:
         engine = ServeEngine(sys_, policies, EngineConfig(
@@ -137,8 +151,7 @@ def backend_sweep(sys_, policies, batches, backends):
             "mean_u": s["mean_u"],
             "p99_u": s["p99_u"],
             "bytes_per_query": bytes_streamed_per_query(
-                sys_, policies, np.concatenate(batches[1:]), name,
-                chunk=DEFAULT_CHUNK_BLOCKS),
+                pricing, sys_, name, chunk=DEFAULT_CHUNK_BLOCKS),
         }
     return out
 
@@ -215,6 +228,8 @@ def main(fast: bool = False,
         "engine_latency_p50_ms": summary["latency_p50_ms"],
         "engine_latency_p99_ms": summary["latency_p99_ms"],
         "engine_mean_u": summary["mean_u"],
+        "engine_peak_queue_depth": summary["peak_queue_depth"],
+        "engine_peak_inflight": summary["peak_inflight"],
         "speedup": t_naive / t_engine,
     }
     for k, v in out.items():

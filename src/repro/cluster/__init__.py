@@ -1,0 +1,21 @@
+"""Online learning cluster (docs/cluster.md).
+
+A background `TrainerLoop` publishes versioned policy snapshots into a
+shared `PolicyStore` while a `ReplicaSet` of N `ServeEngine` replicas
+serves continuously — queue-aware/cache-affinity routing in front,
+u-budget admission control (explicit `Shed` results) at the door,
+per-response policy-version-lag accounting throughout.
+"""
+from .admission import AdmissionController, Shed, UCostEstimator
+from .cluster import ClusterConfig, ReplicaSet
+from .replica import ClusterTicket, Replica
+from .router import (QueueAwareRouter, RoundRobinRouter, Router, make_router,
+                     stable_query_hash)
+from .trainer import TrainerConfig, TrainerLoop, candidate_recall, probe_recall
+
+__all__ = [
+    "AdmissionController", "ClusterConfig", "ClusterTicket",
+    "QueueAwareRouter", "Replica", "ReplicaSet", "RoundRobinRouter",
+    "Router", "Shed", "TrainerConfig", "TrainerLoop", "UCostEstimator",
+    "candidate_recall", "make_router", "probe_recall", "stable_query_hash",
+]

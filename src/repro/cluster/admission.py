@@ -1,0 +1,149 @@
+"""u-budget admission control: estimate a query's index cost, shed when hot.
+
+The paper prices query evaluation in u — posting-plane block reads —
+and shows it linear in machine time, so u is the honest unit for load
+control too: a fleet saturates when the *sum of u being evaluated*
+exceeds what the index machines stream, not when some request counter
+does.  The :class:`AdmissionController` therefore keeps a reservation
+ledger in u: every admitted query reserves its *estimated* cost, every
+completion releases it (and feeds the actual u back into the
+estimator), and a submit that would push the reserved total past the
+fleet budget is rejected with an explicit :class:`Shed` result instead
+of being queued into a latency collapse.
+
+Estimates come from the query's *pre-execution* features — the same
+ones the paper's query categorizer uses (category, term document
+frequencies): rare-term CAT1 queries force deep scans, head-df CAT2
+queries satisfy their quotas early.  :class:`UCostEstimator` buckets
+queries by (category, df-decile) and tracks an EMA of observed u per
+bucket, seeded with a configurable prior so cold buckets are priced
+pessimistically rather than admitted for free.
+"""
+from __future__ import annotations
+
+import dataclasses
+import threading
+from typing import Optional, Tuple
+
+import numpy as np
+
+__all__ = ["Shed", "UCostEstimator", "AdmissionController"]
+
+
+@dataclasses.dataclass(frozen=True)
+class Shed:
+    """Explicit load-shed result (the non-response a caller can act on)."""
+    qid: int
+    category: int
+    est_u: float
+    reason: str
+
+
+class UCostEstimator:
+    """(category, df-decile) -> EMA of observed u, with a prior.
+
+    The df feature is the mean body-field document frequency of the
+    query's terms as a fraction of the corpus (exactly the signal
+    ``data.querylog.classify_query`` categorizes on); bucket edges are
+    quantiles of that feature over the whole query log, so buckets are
+    equal-mass.
+    """
+
+    def __init__(self, system, n_df_bins: int = 8, ema: float = 0.25,
+                 prior_u: Optional[float] = None):
+        log, index = system.log, system.index
+        df_body = index.df[:, 2].astype(np.float64)       # body field
+        mean_df = np.zeros(log.n_queries)
+        for qi in range(log.n_queries):
+            ts = log.terms[qi, : log.n_terms[qi]]
+            mean_df[qi] = df_body[ts].mean() if len(ts) else 0.0
+        self._df_frac = mean_df / max(index.n_docs, 1)
+        qs = np.linspace(0, 1, n_df_bins + 1)[1:-1]
+        self._edges = np.quantile(self._df_frac, qs)
+        self._category = log.category
+        n_cats = int(self._category.max()) + 1
+        if prior_u is None:
+            # Half the episode budget: pessimistic enough that a cold
+            # fleet sheds under a thundering herd, cheap to correct.
+            prior_u = system.cfg.u_budget / 2
+        self.prior_u = float(prior_u)
+        self.ema = float(ema)
+        self._table = np.full((n_cats, n_df_bins), self.prior_u)
+        self._seen = np.zeros((n_cats, n_df_bins), dtype=np.int64)
+        self._lock = threading.Lock()
+
+    def features(self, qid: int) -> Tuple[int, int]:
+        cat = int(self._category[qid])
+        df_bin = int(np.searchsorted(self._edges, self._df_frac[qid]))
+        return cat, df_bin
+
+    def estimate(self, qid: int) -> float:
+        cat, df_bin = self.features(qid)
+        return float(self._table[cat, df_bin])
+
+    def observe(self, qid: int, u: float) -> None:
+        cat, df_bin = self.features(qid)
+        with self._lock:
+            if self._seen[cat, df_bin] == 0:
+                self._table[cat, df_bin] = float(u)   # drop the prior
+            else:
+                self._table[cat, df_bin] += self.ema * (
+                    float(u) - self._table[cat, df_bin])
+            self._seen[cat, df_bin] += 1
+
+    def describe(self) -> dict:
+        return {
+            "n_df_bins": self._table.shape[1],
+            "prior_u": self.prior_u,
+            "buckets_seen": int((self._seen > 0).sum()),
+            "table": self._table.round(1).tolist(),
+        }
+
+
+class AdmissionController:
+    """Fleet-wide u reservation ledger with shedding.
+
+    ``try_admit`` reserves the query's estimated u and returns it; when
+    the reservation would exceed ``u_inflight_budget`` it returns
+    ``None`` (the caller builds the :class:`Shed`).  A query whose
+    estimate alone exceeds the budget is still admitted when the fleet
+    is idle — otherwise it could never run at all.  ``release`` returns
+    the reservation and, given the actual u, improves the estimator.
+    """
+
+    def __init__(self, estimator: UCostEstimator,
+                 u_inflight_budget: float = float("inf")):
+        if u_inflight_budget <= 0:
+            raise ValueError("u_inflight_budget must be > 0")
+        self.estimator = estimator
+        self.u_inflight_budget = float(u_inflight_budget)
+        self._lock = threading.Lock()
+        self.reserved_u = 0.0
+        self.admitted = 0
+        self.shed = 0
+
+    def try_admit(self, qid: int) -> Optional[float]:
+        est = self.estimator.estimate(qid)
+        with self._lock:
+            if self.reserved_u > 0 and self.reserved_u + est > self.u_inflight_budget:
+                self.shed += 1
+                return None
+            self.reserved_u += est
+            self.admitted += 1
+            return est
+
+    def release(self, est_u: float, actual_u: Optional[float] = None,
+                qid: Optional[int] = None) -> None:
+        with self._lock:
+            self.reserved_u = max(0.0, self.reserved_u - est_u)
+        if actual_u is not None and qid is not None:
+            self.estimator.observe(qid, actual_u)
+
+    def stats(self) -> dict:
+        with self._lock:
+            return {
+                "u_inflight_budget": self.u_inflight_budget,
+                "reserved_u": self.reserved_u,
+                "admitted": self.admitted,
+                "shed": self.shed,
+            }

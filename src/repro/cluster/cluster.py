@@ -1,0 +1,222 @@
+"""`ReplicaSet`: the online-learning cluster front door.
+
+Topology (docs/cluster.md has the full diagram):
+
+    TrainerLoop ──publish──► PolicyStore ◄──snapshot── Replica 0..N-1
+                                                        ▲
+    submit ─► AdmissionController ─► Router ─► inbox ───┘
+              (u-budget shed)        (affinity + depth spill)
+
+One `RetrievalSystem` (the index is process-shared and read-only) backs
+N `ServeEngine` replicas, each with its own worker thread, micro-batch
+queues, and result cache.  `submit` estimates the query's u-cost from
+its category/df features, sheds with an explicit `Shed` when the
+fleet's reserved u is past budget, and otherwise routes by cache
+affinity + queue depth.  Completions release the u reservation, feed
+the actual u back into the estimator, and record the response's policy
+version lag (head version minus serving version — bounded by the
+store's staleness check, surfaced in `stats()`).
+"""
+from __future__ import annotations
+
+import dataclasses
+import threading
+from collections import OrderedDict, deque
+from typing import Deque, List, Optional, Sequence, Union
+
+import numpy as np
+
+from repro.policies import PolicyStore
+from repro.serving import EngineConfig
+from repro.serving.cache import canonical_query_key
+from repro.serving.engine import ServeResponse
+
+from repro.serving.telemetry import pct as _pct
+
+from .admission import AdmissionController, Shed, UCostEstimator
+from .replica import ClusterTicket, Replica
+from .router import make_router, stable_query_hash
+
+__all__ = ["ClusterConfig", "ReplicaSet"]
+
+Result = Union[ServeResponse, Shed]
+
+
+@dataclasses.dataclass(frozen=True)
+class ClusterConfig:
+    n_replicas: int = 2
+    routing: str = "queue_aware"          # or "round_robin"
+    spill_margin: int = 4                 # depth gap before spilling
+    u_inflight_budget: float = float("inf")   # fleet u budget (inf = no shed)
+    prior_u: Optional[float] = None       # cold-bucket u estimate
+    n_df_bins: int = 8
+    window: int = 65536                   # lag/latency sample window
+    affinity_table: int = 65536           # key -> cache-owner LRU entries
+
+
+class ReplicaSet:
+    """N replicas + router + admission over one system and store."""
+
+    def __init__(self, system, store: PolicyStore,
+                 cfg: ClusterConfig = ClusterConfig(),
+                 engine_cfg: EngineConfig = EngineConfig()):
+        if cfg.n_replicas < 1:
+            raise ValueError("n_replicas must be >= 1")
+        self.system = system
+        self.store = store
+        self.cfg = cfg
+        self.router = make_router(cfg.routing, spill_margin=cfg.spill_margin)
+        self.admission = AdmissionController(
+            UCostEstimator(system, n_df_bins=cfg.n_df_bins,
+                           prior_u=cfg.prior_u),
+            u_inflight_budget=cfg.u_inflight_budget)
+        self.replicas: List[Replica] = [
+            Replica(i, system, store, engine_cfg,
+                    on_complete=self._on_complete)
+            for i in range(cfg.n_replicas)
+        ]
+        self._lock = threading.Lock()
+        # key -> replica whose result cache owns it (LRU-bounded);
+        # repeats route back there regardless of depth — a hit is
+        # nearly free, a balanced miss elsewhere costs a rollout.
+        self._key_owner: "OrderedDict" = OrderedDict()
+        self._lags: Deque[int] = deque(maxlen=cfg.window)
+        self._latencies: Deque[float] = deque(maxlen=cfg.window)
+        self.n_submitted = 0
+        self.n_responses = 0
+        self.n_shed = 0
+        self._started = False
+
+    # ------------------------------------------------------------ control
+    def start(self) -> "ReplicaSet":
+        for r in self.replicas:
+            r.start()
+        self._started = True
+        return self
+
+    def stop(self, drain: bool = True) -> None:
+        for r in self.replicas:
+            r.stop(drain=drain)
+        self._started = False
+
+    def __enter__(self) -> "ReplicaSet":
+        return self.start()
+
+    def __exit__(self, *exc) -> None:
+        self.stop(drain=True)
+
+    def warmup(self) -> int:
+        """Pre-compile every replica's executables (serially, before the
+        worker threads race the compiler); returns total compiles."""
+        return sum(r.engine.warmup() for r in self.replicas)
+
+    # ------------------------------------------------------------- submit
+    def submit(self, qid: int) -> ClusterTicket:
+        """Route one query; always returns a ticket that completes with
+        either a ServeResponse or an explicit Shed — never drops."""
+        qid = int(qid)
+        cat = int(self.system.log.category[qid])
+        key = canonical_query_key(self.system.log.terms[qid], cat)
+        ticket = ClusterTicket(qid, cat, cache_key=key)
+        with self._lock:
+            self.n_submitted += 1
+        est = self.admission.try_admit(qid)
+        if est is None:
+            with self._lock:
+                self.n_shed += 1
+            ticket.est_u = self.admission.estimator.estimate(qid)
+            ticket.complete(Shed(qid, cat, ticket.est_u, "u_budget_hot"))
+            return ticket
+        ticket.est_u = est
+        with self._lock:
+            owner = self._key_owner.get(key)
+        # Sticky routing only pays while the owner's result cache still
+        # holds the key (the repeat is ~free there); once evicted, the
+        # request must load-balance like any other miss — pinning
+        # evicted keys to a busy owner is exactly how tails grow.
+        if owner is not None and not self.replicas[owner].engine.cache.contains(key):
+            owner = None
+        # The sticky path (the common case under a hot head) never
+        # consults depths, so skip the per-replica gauge sweep there;
+        # routers only use len(depths) when an owner is given.
+        depths = ([0] * len(self.replicas) if owner is not None
+                  else [r.depth() for r in self.replicas])
+        idx = self.router.pick(stable_query_hash(key), depths, owner)
+        with self._lock:
+            self._key_owner[key] = idx
+            self._key_owner.move_to_end(key)
+            while len(self._key_owner) > self.cfg.affinity_table:
+                self._key_owner.popitem(last=False)
+        self.replicas[idx].enqueue(ticket)
+        return ticket
+
+    def serve(self, qids: Sequence[int],
+              timeout_s: float = 120.0) -> List[Result]:
+        """Synchronous driver: submit a stream, wait for every ticket,
+        return results (ServeResponse | Shed) in submission order."""
+        if not self._started:
+            raise RuntimeError("ReplicaSet not started (use start() or `with`)")
+        tickets = [self.submit(q) for q in qids]
+        out = []
+        for t in tickets:
+            res = t.result(timeout=timeout_s)
+            if res is None:
+                raise TimeoutError(
+                    f"qid {t.qid} not served within {timeout_s}s "
+                    f"(replica {t.replica})")
+            out.append(res)
+        return out
+
+    # --------------------------------------------------------- completion
+    def _on_complete(self, ticket: ClusterTicket, result: Result) -> None:
+        if isinstance(result, ServeResponse):
+            self.admission.release(ticket.est_u, actual_u=result.u,
+                                   qid=ticket.qid)
+            lag = max(0, self.store.version - result.policy_version)
+            with self._lock:
+                self.n_responses += 1
+                self._lags.append(lag)
+                self._latencies.append(ticket.latency_s)
+        else:  # shed inside the replica (queue full / shutdown / error)
+            self.admission.release(ticket.est_u)
+            with self._lock:
+                self.n_shed += 1
+
+    # -------------------------------------------------------------- stats
+    def version_lag(self) -> dict:
+        """Current per-replica lag vs the store head, plus the response
+        window's observed lag distribution."""
+        head = self.store.version
+        current = [max(0, head - r.policy_version) for r in self.replicas]
+        with self._lock:
+            lags = list(self._lags)
+        return {
+            "head_version": head,
+            "replica_versions": [r.policy_version for r in self.replicas],
+            "current_max": max(current) if current else 0,
+            "observed_max": max(lags) if lags else 0,
+            "observed_mean": float(np.mean(lags)) if lags else 0.0,
+        }
+
+    def stats(self) -> dict:
+        with self._lock:
+            lat = list(self._latencies)
+            n_sub, n_resp, n_shed = (self.n_submitted, self.n_responses,
+                                     self.n_shed)
+        lag = self.version_lag()
+        return {
+            "n_replicas": len(self.replicas),
+            "n_submitted": n_sub,
+            "n_responses": n_resp,
+            "n_shed": n_shed,
+            "shed_rate": n_shed / n_sub if n_sub else 0.0,
+            "latency_p50_ms": _pct(lat, 0.50) * 1e3,
+            "latency_p99_ms": _pct(lat, 0.99) * 1e3,
+            "version_lag_observed_max": lag["observed_max"],
+            "version_lag_observed_mean": lag["observed_mean"],
+            "version_lag_current_max": lag["current_max"],
+            "head_version": lag["head_version"],
+            "router": self.router.stats(),
+            "admission": self.admission.stats(),
+            "replicas": [r.summary() for r in self.replicas],
+        }

@@ -1,0 +1,268 @@
+"""One serving replica: a `ServeEngine` owned by a worker thread.
+
+`ServeEngine` is single-threaded by design (submit/flush/take_response
+mutate the batcher and cache without locks), so the replica gives each
+engine exactly one driving thread and a thread-safe inbox in front of
+it.  The worker drains the inbox into the engine, flushes when the
+inbox runs dry (the latency path) and steps full buckets otherwise
+(the throughput path), then fulfils cluster tickets from the engine's
+completed responses.  Policy hot-swaps need no extra plumbing: the
+engine refreshes to the store head on every submit/drain, so replicas
+adopt new snapshots independently — the fleet may briefly serve mixed
+versions, bounded by the store's staleness check.
+
+A failed micro-batch is retried (the engine re-queues admitted
+requests, FIFO preserved); after ``max_consecutive_failures`` the
+replica fails its outstanding tickets with an explicit
+:class:`~repro.cluster.admission.Shed` rather than dropping them.
+"""
+from __future__ import annotations
+
+import threading
+from collections import deque
+from typing import Callable, Dict, Optional, Union
+
+from repro.policies import StalePolicyError
+from repro.serving import AdmissionError, EngineConfig, ServeEngine
+from repro.serving.engine import ServeResponse
+from repro.serving.telemetry import Telemetry
+
+from .admission import Shed
+
+__all__ = ["ClusterTicket", "Replica"]
+
+Result = Union[ServeResponse, Shed]
+
+
+class ClusterTicket:
+    """Cluster-level future for one submitted query."""
+
+    def __init__(self, qid: int, category: int, est_u: float = 0.0,
+                 cache_key=None):
+        self.qid = qid
+        self.category = category
+        self.est_u = est_u
+        self.cache_key = cache_key
+        self.replica: Optional[int] = None
+        self.t_submit = Telemetry.now()
+        self.t_done: Optional[float] = None
+        self._event = threading.Event()
+        self._result: Optional[Result] = None
+        self._inbox_work = 0          # 1 while counted as a likely miss
+
+    def complete(self, result: Result) -> None:
+        self.t_done = Telemetry.now()
+        self._result = result
+        self._event.set()
+
+    def done(self) -> bool:
+        return self._event.is_set()
+
+    def result(self, timeout: Optional[float] = None) -> Optional[Result]:
+        """The ServeResponse or Shed; None only on timeout."""
+        if not self._event.wait(timeout):
+            return None
+        return self._result
+
+    @property
+    def shed(self) -> bool:
+        return isinstance(self._result, Shed)
+
+    @property
+    def latency_s(self) -> float:
+        if self.t_done is None:
+            raise RuntimeError("ticket not completed yet")
+        return self.t_done - self.t_submit
+
+
+class Replica:
+    def __init__(self, idx: int, system, store,
+                 engine_cfg: EngineConfig = EngineConfig(),
+                 on_complete: Optional[Callable[[ClusterTicket, Result], None]] = None,
+                 max_consecutive_failures: int = 3,
+                 poll_s: float = 0.005):
+        self.idx = idx
+        self.engine = ServeEngine(system, store, engine_cfg)
+        self.on_complete = on_complete
+        self.max_consecutive_failures = max_consecutive_failures
+        self.poll_s = poll_s
+        self._inbox: deque = deque()
+        self._inbox_work = 0          # likely-miss tickets in the inbox
+        self._cond = threading.Condition()
+        self._rid2ticket: Dict[int, ClusterTicket] = {}
+        self._stopping = False
+        self._abandon = False         # stop(drain=False): shed, don't serve
+        self._thread: Optional[threading.Thread] = None
+        self.n_enqueued = 0
+        self.n_completed = 0
+
+    # ------------------------------------------------------------- control
+    def start(self) -> "Replica":
+        if self._thread is not None:
+            raise RuntimeError(f"replica {self.idx} already started")
+        self._thread = threading.Thread(
+            target=self._run, name=f"replica-{self.idx}", daemon=True)
+        self._thread.start()
+        return self
+
+    def stop(self, drain: bool = True) -> None:
+        """Stop the worker; with ``drain`` (default) everything already
+        enqueued is served first, otherwise pending tickets are failed
+        with an explicit Shed."""
+        with self._cond:
+            self._stopping = True
+            self._abandon = not drain
+            if not drain or self._thread is None:
+                # no worker will ever drain these: shed, don't strand
+                while self._inbox:
+                    t = self._inbox.popleft()
+                    self._inbox_work -= t._inbox_work
+                    t._inbox_work = 0
+                    self._finish(t, Shed(t.qid, t.category, t.est_u,
+                                         "replica_shutdown"))
+            self._cond.notify_all()
+        if self._thread is not None:
+            self._thread.join()
+
+    # -------------------------------------------------------------- ingest
+    def enqueue(self, ticket: ClusterTicket) -> None:
+        ticket.replica = self.idx
+        # Work-weighted depth accounting: a ticket whose key is already
+        # in this replica's result cache costs ~nothing (it completes
+        # inline at submit), so only likely misses count toward the
+        # router's load signal.
+        likely_hit = (ticket.cache_key is not None
+                      and self.engine.cache.contains(ticket.cache_key))
+        with self._cond:
+            if self._stopping:
+                self._finish(ticket, Shed(ticket.qid, ticket.category,
+                                          ticket.est_u, "replica_shutdown"))
+                return
+            if not likely_hit:
+                ticket._inbox_work = 1
+                self._inbox_work += 1
+            self._inbox.append(ticket)
+            self.n_enqueued += 1
+            self._cond.notify()
+
+    def depth(self) -> int:
+        """Router load signal in units of WORK, not requests: likely
+        cache misses waiting in the inbox, plus everything queued or
+        executing in the engine (queued engine requests are misses by
+        construction — hits complete inline at submit).  Safe to call
+        from the router thread: ``inflight`` is a plain int and
+        ``queue_depth`` snapshots the batcher's queues before
+        counting."""
+        return self._inbox_work + self.engine.queue_depth + self.engine.inflight
+
+    @property
+    def policy_version(self) -> int:
+        return self.engine.policy_version
+
+    def summary(self) -> dict:
+        out = self.engine.summary()
+        out.update(replica=self.idx, n_enqueued=self.n_enqueued,
+                   n_completed=self.n_completed, depth=self.depth())
+        return out
+
+    # -------------------------------------------------------------- worker
+    def _take_inbox(self):
+        """Wait for work.  Returns (tickets, exit) — tickets may be
+        empty on a timeout wake-up (used to re-try engine-queued work)."""
+        with self._cond:
+            if not self._inbox and (self._abandon or not self._rid2ticket):
+                if self._stopping:
+                    return [], True
+                self._cond.wait(timeout=self.poll_s)
+            tickets = list(self._inbox)
+            self._inbox.clear()
+            for t in tickets:
+                self._inbox_work -= t._inbox_work
+                t._inbox_work = 0
+        return tickets, False
+
+    def _submit_one(self, ticket: ClusterTicket) -> None:
+        try:
+            rid = self.engine.submit(ticket.qid)
+        except AdmissionError:
+            self._finish(ticket, Shed(ticket.qid, ticket.category,
+                                      ticket.est_u, "replica_queue_full"))
+            return
+        except StalePolicyError:
+            # A publish raced between the submit-time refresh and the
+            # staleness check; put the ticket back and retry after the
+            # next refresh.
+            with self._cond:
+                ticket._inbox_work = 1
+                self._inbox_work += 1
+                self._inbox.appendleft(ticket)
+            return
+        except Exception as e:                    # noqa: BLE001
+            # Any other submit failure must not kill the worker thread
+            # (enqueue would keep feeding an undrained inbox): fail the
+            # one ticket explicitly and keep serving.
+            self._finish(ticket, Shed(ticket.qid, ticket.category,
+                                      ticket.est_u,
+                                      f"replica_error:{type(e).__name__}"))
+            return
+        self._rid2ticket[rid] = ticket
+        resp = self.engine.take_response(rid)     # cache hits are inline
+        if resp is not None:
+            self._finish(self._rid2ticket.pop(rid), resp)
+
+    def _collect(self) -> None:
+        for rid in list(self._rid2ticket):
+            resp = self.engine.take_response(rid)
+            if resp is not None:
+                self._finish(self._rid2ticket.pop(rid), resp)
+
+    def _finish(self, ticket: ClusterTicket, result: Result) -> None:
+        ticket.complete(result)
+        self.n_completed += 1
+        if self.on_complete is not None:
+            self.on_complete(ticket, result)
+
+    def _fail_outstanding(self, reason: str) -> None:
+        rids = list(self._rid2ticket)
+        # Also cancel them inside the engine: a failed batch was
+        # requeued there, and leaving it would retry the same poisoned
+        # FIFO-front batch forever (or, for transient failures, later
+        # produce responses nobody claims).
+        self.engine.cancel(rids)
+        for rid in rids:
+            t = self._rid2ticket.pop(rid)
+            self._finish(t, Shed(t.qid, t.category, t.est_u, reason))
+
+    def _run(self) -> None:
+        failures = 0
+        while True:
+            tickets, exit_ = self._take_inbox()
+            if exit_:
+                if self._rid2ticket:
+                    # stop(drain=False): work already inside the engine
+                    # is abandoned with an explicit Shed, not served —
+                    # a fast shutdown must not wait out rollouts.
+                    self._fail_outstanding("replica_shutdown")
+                break
+            for t in tickets:
+                self._submit_one(t)
+            try:
+                with self._cond:
+                    inbox_empty = not self._inbox
+                if inbox_empty:
+                    self.engine.flush()           # latency path
+                else:
+                    self.engine.step()            # full buckets only
+                failures = 0
+            except StalePolicyError:
+                # A publish raced the drain past the staleness bound;
+                # the engine re-queued the batch and the next submit /
+                # flush serves it from the refreshed head.
+                continue
+            except Exception as e:                # noqa: BLE001
+                failures += 1
+                if failures >= self.max_consecutive_failures:
+                    self._fail_outstanding(f"replica_error:{type(e).__name__}")
+                    failures = 0
+                continue
+            self._collect()

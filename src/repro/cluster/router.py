@@ -1,0 +1,120 @@
+"""Query routing across serving replicas.
+
+Round-robin is the strawman: it ignores both load (a replica stuck
+behind an expensive CAT1 micro-batch keeps receiving its share while
+neighbours idle) and locality (a hot navigational query lands on every
+replica, paying one result-cache miss per replica instead of one per
+fleet).  :class:`QueueAwareRouter` fixes both: a key the cluster has
+routed before goes straight back to the replica whose result cache
+owns it — the repeat is nearly free there — while a first-seen key
+starts at its hash-preferred replica and spills to the least-loaded
+one when the preferred depth (queued + inflight, the ``ServeEngine``
+gauges) exceeds the minimum by more than ``spill_margin``.
+"""
+from __future__ import annotations
+
+import itertools
+import threading
+import zlib
+from typing import Optional, Sequence
+
+__all__ = ["stable_query_hash", "Router", "RoundRobinRouter",
+           "QueueAwareRouter", "make_router"]
+
+
+def stable_query_hash(key) -> int:
+    """Process-independent hash of a canonical query key (cache
+    affinity must survive restarts and not depend on PYTHONHASHSEED)."""
+    return zlib.crc32(repr(key).encode())
+
+
+class Router:
+    """Protocol: pick a replica index for a request.
+
+    ``pick(key_hash, depths, owner)`` sees the request's stable
+    query-key hash, a per-replica depth snapshot, and — when the
+    cluster has routed this key before — the replica whose result cache
+    owns it.  Implementations must be thread-safe (the cluster may be
+    fed from several submitter threads).
+    """
+
+    name: str = ""
+
+    def pick(self, key_hash: int, depths: Sequence[int],
+             owner: Optional[int] = None) -> int:
+        raise NotImplementedError
+
+    def stats(self) -> dict:
+        return {"router": self.name}
+
+
+class RoundRobinRouter(Router):
+    name = "round_robin"
+
+    def __init__(self):
+        self._counter = itertools.count()
+
+    def pick(self, key_hash: int, depths: Sequence[int],
+             owner: Optional[int] = None) -> int:
+        return next(self._counter) % len(depths)
+
+
+class QueueAwareRouter(Router):
+    """Cache-owner-sticky, depth-balanced routing.
+
+    A key already routed somewhere goes back to that replica regardless
+    of depth — its result cache makes the repeat nearly free, while a
+    "balanced" miss elsewhere costs a full rollout.  First-seen keys
+    start from their hash-preferred replica and spill to the
+    least-loaded one when the preferred queue is ``spill_margin``
+    deeper; the cluster then records the pick as the key's owner.
+    """
+
+    name = "queue_aware"
+
+    def __init__(self, spill_margin: int = 4):
+        if spill_margin < 0:
+            raise ValueError("spill_margin must be >= 0")
+        self.spill_margin = spill_margin
+        self._lock = threading.Lock()
+        self.affinity_picks = 0
+        self.sticky_picks = 0
+        self.spills = 0
+
+    def pick(self, key_hash: int, depths: Sequence[int],
+             owner: Optional[int] = None) -> int:
+        n = len(depths)
+        if owner is not None and 0 <= owner < n:
+            with self._lock:
+                self.sticky_picks += 1
+            return owner
+        pref = key_hash % n
+        best = min(range(n), key=depths.__getitem__)
+        if depths[pref] - depths[best] > self.spill_margin:
+            with self._lock:
+                self.spills += 1
+            return best
+        with self._lock:
+            self.affinity_picks += 1
+        return pref
+
+    def stats(self) -> dict:
+        total = self.affinity_picks + self.sticky_picks + self.spills
+        return {
+            "router": self.name,
+            "spill_margin": self.spill_margin,
+            "affinity_picks": self.affinity_picks,
+            "sticky_picks": self.sticky_picks,
+            "spills": self.spills,
+            "spill_rate": self.spills / total if total else 0.0,
+        }
+
+
+def make_router(name: str, spill_margin: int = 4) -> Router:
+    if name == "round_robin":
+        return RoundRobinRouter()
+    if name == "queue_aware":
+        return QueueAwareRouter(spill_margin=spill_margin)
+    raise ValueError(
+        f"unknown routing policy {name!r}; available: "
+        "('queue_aware', 'round_robin')")

@@ -1,0 +1,203 @@
+"""Background trainer feeding a `PolicyStore` while replicas serve.
+
+The paper's planner is trained *online*: Bing keeps learning the MDP
+policy against live traffic while the index serves it.  This loop is
+that trainer: per-category tabular Q-learning epochs
+(`RetrievalSystem.policy_train_step`, the same `train_batch` unit as
+offline training) run on a background thread, and every
+``publish_every`` epochs a fresh `{category: TabularQPolicy}` snapshot
+is published into the shared store — the replicas hot-swap to it at
+their next drain.
+
+Publishes are **eval-gated** by default (the standard online-promotion
+pattern): each candidate Q-table is scored on a fixed probe set with
+the serving-path recall proxy (`probe_recall` — rollout + L1 prune,
+bit-identical to what a 1-shard engine serves), and the snapshot always
+carries the best scorer so far.  A version bump therefore never
+regresses candidate quality on the probe set — the monotonicity the
+online-learning demo asserts — while the cadence stays fixed (a
+rejected candidate re-publishes the incumbent).
+"""
+from __future__ import annotations
+
+import dataclasses
+import threading
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import jax
+import numpy as np
+
+from repro.core.qlearning import init_q, linear_epsilon
+from repro.core.rollout import unified_rollout
+from repro.core.telescope import l1_prune
+from repro.data.querylog import CAT1, CAT2
+from repro.policies import Policy, PolicyStore, TabularQPolicy
+
+__all__ = ["TrainerConfig", "TrainerLoop", "candidate_recall", "probe_recall"]
+
+
+def candidate_recall(doc_ids: np.ndarray, judged_ids: np.ndarray,
+                     judged_gains: np.ndarray) -> np.ndarray:
+    """Per-query recall proxy: fraction of positively judged docs
+    (gain > 0) present in the returned candidate ids.  ``doc_ids`` is
+    (B, keep) with -1 padding; judged arrays are the query log's."""
+    out = np.zeros(doc_ids.shape[0])
+    keep = doc_ids.shape[1]
+    for i in range(doc_ids.shape[0]):
+        pos = judged_ids[i][(judged_ids[i] >= 0) & (judged_gains[i] > 0)]
+        if len(pos) == 0:
+            out[i] = 1.0
+            continue
+        got = np.intersect1d(doc_ids[i][doc_ids[i] >= 0], pos).size
+        out[i] = got / min(len(pos), keep)
+    return out
+
+
+def probe_recall(system, policy: Policy, qids: Sequence[int],
+                 keep: int = 100) -> float:
+    """Mean candidate recall of ``policy`` on fixed probe queries via
+    the serving path (rollout → L1 prune) — for a 1-shard engine with
+    the same ``keep`` this is bit-identical to served responses
+    (`tests/test_serving.py::test_engine_matches_direct_rollout`), so a
+    gate decision here is exactly a statement about serving quality."""
+    qids = np.asarray(qids)
+    occ, scores, tp = system.batch_inputs(qids)
+    t_max = policy.horizon or system.qcfg.t_max
+    fin = unified_rollout(system.env_cfg, system.ruleset, system.bins,
+                          policy, t_max, occ, scores, tp,
+                          backend=system.cfg.backend).final_state
+    ids, _ = l1_prune(scores, fin.cand, keep=keep)
+    return float(candidate_recall(np.asarray(ids),
+                                  system.log.judged_ids[qids],
+                                  system.log.judged_gains[qids]).mean())
+
+
+@dataclasses.dataclass(frozen=True)
+class TrainerConfig:
+    iters: int = 60               # total training epochs
+    publish_every: int = 20       # epochs between publishes
+    batch: int = 32               # queries per training batch
+    eps_start: float = 0.5
+    eps_end: float = 0.05
+    seed: int = 0
+    gate: bool = True             # eval-gated promotion (monotone probe score)
+    probe_queries: int = 32       # probe-set size per category
+    keep: int = 100               # L1 prune depth for probe scoring
+    publish_initial: bool = True  # publish v1 before any training
+
+
+class TrainerLoop:
+    """Runs ``cfg.iters`` epochs on a daemon thread, publishing every
+    ``publish_every`` epochs (plus the initial snapshot), so a full run
+    publishes ``publish_initial + iters // publish_every`` versions."""
+
+    def __init__(self, system, store: PolicyStore,
+                 cats: Sequence[int] = (CAT1, CAT2),
+                 cfg: TrainerConfig = TrainerConfig()):
+        assert system.bins is not None, "fit_state_bins() first"
+        self.system = system
+        self.store = store
+        self.cats = tuple(cats)
+        self.cfg = cfg
+        rng = np.random.default_rng(cfg.seed)
+        self._rng = rng
+        self._key = jax.random.key(cfg.seed)
+        self._qids_all = {c: np.where(system.log.category == c)[0]
+                          for c in self.cats}
+        self._q = {c: init_q(system.qcfg) for c in self.cats}
+        self._best_q = dict(self._q)
+        self._best_score: Dict[int, float] = {c: -np.inf for c in self.cats}
+        self.probe_qids = {c: self._qids_all[c][: cfg.probe_queries]
+                           for c in self.cats}
+        self.history: List[dict] = []     # one row per publish
+        self.epochs_done = 0
+        self._stop = threading.Event()
+        self._thread: Optional[threading.Thread] = None
+        self.error: Optional[BaseException] = None
+
+    # ------------------------------------------------------------ publish
+    def _gate(self) -> Tuple[Dict[int, Policy], Dict[int, float]]:
+        """Score current Q-tables on the probe sets; promote improvers."""
+        scores = {}
+        for c in self.cats:
+            if self.cfg.gate:
+                s = probe_recall(self.system, TabularQPolicy(self._q[c]),
+                                 self.probe_qids[c], keep=self.cfg.keep)
+                if s >= self._best_score[c]:
+                    self._best_score[c] = s
+                    self._best_q[c] = self._q[c]
+                scores[c] = self._best_score[c]
+            else:
+                self._best_q[c] = self._q[c]
+                scores[c] = float("nan")
+        return ({c: TabularQPolicy(self._best_q[c]) for c in self.cats},
+                scores)
+
+    def publish_now(self) -> int:
+        """Gate + publish the current tables immediately (e.g. to get
+        v1 up before replicas construct); returns the version."""
+        policies, scores = self._gate()
+        version = self.store.publish(policies)
+        self.history.append({
+            "version": version,
+            "epoch": self.epochs_done,
+            "probe_recall": {c: scores[c] for c in self.cats},
+        })
+        return version
+
+    # -------------------------------------------------------------- train
+    def _epoch(self, it: int) -> None:
+        eps = linear_epsilon(it, self.cfg.iters, self.cfg.eps_start,
+                             self.cfg.eps_end)
+        for c in self.cats:
+            qids = self.system.sample_train_qids(c, self.cfg.batch, self._rng)
+            self._key, sub = jax.random.split(self._key)
+            self._q[c], _ = self.system.policy_train_step(
+                c, self._q[c], sub, eps, qids)
+        self.epochs_done += 1
+
+    def _run(self) -> None:
+        try:
+            if self.cfg.publish_initial:
+                self.publish_now()
+            for it in range(self.cfg.iters):
+                if self._stop.is_set():
+                    return
+                self._epoch(it)
+                if (it + 1) % self.cfg.publish_every == 0:
+                    self.publish_now()
+        except BaseException as e:          # noqa: BLE001 — surfaced in join()
+            self.error = e
+
+    # ------------------------------------------------------------ control
+    @property
+    def versions_published(self) -> List[int]:
+        return [row["version"] for row in self.history]
+
+    @property
+    def alive(self) -> bool:
+        return self._thread is not None and self._thread.is_alive()
+
+    def start(self) -> "TrainerLoop":
+        if self._thread is not None:
+            raise RuntimeError("trainer already started")
+        self._thread = threading.Thread(target=self._run, name="trainer",
+                                        daemon=True)
+        self._thread.start()
+        return self
+
+    def run_to_completion(self) -> "TrainerLoop":
+        """Synchronous variant (tests, CLI without --serve)."""
+        self._run()
+        if self.error is not None:
+            raise self.error
+        return self
+
+    def stop(self) -> None:
+        self._stop.set()
+
+    def join(self, timeout: Optional[float] = None) -> None:
+        if self._thread is not None:
+            self._thread.join(timeout)
+        if self.error is not None:
+            raise self.error

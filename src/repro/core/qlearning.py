@@ -21,7 +21,14 @@ import jax.numpy as jnp
 
 from .rollout import unified_rollout
 
-__all__ = ["QConfig", "init_q", "td_update", "train_batch"]
+__all__ = ["QConfig", "init_q", "linear_epsilon", "td_update", "train_batch"]
+
+
+def linear_epsilon(it: int, iters: int, eps_start: float,
+                   eps_end: float) -> float:
+    """The linear ε anneal shared by the offline trainer
+    (``RetrievalSystem.train_policy``) and the online ``TrainerLoop``."""
+    return eps_start + (eps_end - eps_start) * it / max(iters - 1, 1)
 
 
 @dataclasses.dataclass(frozen=True)

@@ -54,6 +54,7 @@ from typing import Dict, Tuple
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 from jax import lax
 
 from repro.index.blocks import WORD_BITS
@@ -67,10 +68,12 @@ from .match_rules import block_cost, scan_block
 __all__ = [
     "ScanBackend", "XlaScanBackend", "PallasBlockScanBackend",
     "register_scan_backend", "get_scan_backend", "available_backends",
-    "xla_run_rule", "DEFAULT_CHUNK_BLOCKS",
+    "xla_run_rule", "adaptive_chunk_blocks", "DEFAULT_CHUNK_BLOCKS",
+    "MAX_ADAPTIVE_CHUNK",
 ]
 
 DEFAULT_CHUNK_BLOCKS = 4
+MAX_ADAPTIVE_CHUNK = 32
 
 
 class ScanBackend:
@@ -224,6 +227,37 @@ class XlaScanBackend(ScanBackend):
 
 
 # ------------------------------------------- "pallas_block_scan" (chunked)
+def adaptive_chunk_blocks(n_blocks: int, du_quota, u_inc,
+                          u_budget: int) -> int:
+    """Pick a speculation depth C from the rule's quota and plane count.
+
+    A rule's expected scan length is ``du_quota / planes_read`` blocks:
+    deep rules (many active planes) cross their Δu quota in a few
+    blocks, so a large C wastes up to C-1 blocks of bandwidth past the
+    crossing; shallow sweeps (few planes) run far, so a small C pays
+    launch overhead per handful of blocks.  C is sized for the
+    longest-running lane of the batch (the lanes that would otherwise
+    need the most chunk launches), clamped to [1, min(n_blocks,
+    MAX_ADAPTIVE_CHUNK)].
+
+    The estimate needs CONCRETE quota/plane values: under a jit trace
+    (where the policy picks rules dynamically and quotas are tracers)
+    it falls back to :data:`DEFAULT_CHUNK_BLOCKS` — shapes baked into
+    the kernel grid cannot depend on traced values."""
+    try:
+        du = np.asarray(du_quota, dtype=np.float64)
+        planes = np.asarray(u_inc, dtype=np.float64)
+    except jax.errors.TracerArrayConversionError:
+        return DEFAULT_CHUNK_BLOCKS
+    # A lane also stops at the episode budget / end of index, whichever
+    # comes first; zero-plane rules cost nothing and sweep to the end.
+    blocks = np.where(planes > 0,
+                      np.minimum(du, u_budget) / np.maximum(planes, 1.0),
+                      n_blocks)
+    c = int(np.ceil(np.max(blocks, initial=1.0)))
+    return int(np.clip(c, 1, min(n_blocks, MAX_ADAPTIVE_CHUNK)))
+
+
 def _apply_chunk(
     cfg: EnvConfig,
     chunk: int,
@@ -289,28 +323,43 @@ class PallasBlockScanBackend(ScanBackend):
     ``chunk`` is the speculation depth C: blocks evaluated per kernel
     launch.  Larger C amortizes launch overhead and deepens the DMA
     pipeline but wastes up to C-1 blocks of bandwidth past the quota
-    crossing.  ``interpret=None`` follows ``kernels.common.INTERPRET``
-    (interpret mode on CPU, compiled on TPU).
+    crossing.  ``chunk=None`` picks C adaptively per rule from its
+    quota/plane count (:func:`adaptive_chunk_blocks`): deep rules get a
+    small C, shallow sweeps a large one — falling back to
+    :data:`DEFAULT_CHUNK_BLOCKS` when quotas are traced.  The final
+    state is C-invariant either way (pinned by
+    ``tests/test_scan_backends.py::test_chunk_size_invariance``).
+    ``interpret=None`` follows ``kernels.common.INTERPRET`` (interpret
+    mode on CPU, compiled on TPU).
     """
 
     name = "pallas_block_scan"
 
-    def __init__(self, chunk: int = DEFAULT_CHUNK_BLOCKS,
+    def __init__(self, chunk: int | None = DEFAULT_CHUNK_BLOCKS,
                  interpret: bool | None = None):
         self.chunk = chunk
         self.interpret = interpret
+        self.last_chunk: int | None = None   # introspection/tests
 
     def describe(self) -> dict:
-        return dict(super().describe(), chunk=self.chunk)
+        return dict(super().describe(),
+                    chunk="adaptive" if self.chunk is None else self.chunk)
 
     def run_rule(self, cfg, occ, scores, term_present, state,
                  allowed, required, du_quota, dv_quota) -> EnvState:
         b, nb, t, f, w = occ.shape
-        chunk = max(1, min(self.chunk, nb))
-        occ2 = occ.reshape(b, nb, t * f, w)
-        # Batched block_cost: planes the rule reads per block, per lane.
+        # Batched block_cost: planes the rule reads per block, per lane
+        # — also the adaptive chunk heuristic's denominator.
         u_inc = jnp.sum(allowed & term_present[:, :, None], axis=(1, 2),
                         dtype=jnp.int32)                           # (B,)
+        if self.chunk is None:
+            chunk = adaptive_chunk_blocks(nb, du_quota, u_inc,
+                                          cfg.u_budget)
+        else:
+            chunk = self.chunk
+        chunk = max(1, min(chunk, nb))
+        self.last_chunk = chunk
+        occ2 = occ.reshape(b, nb, t * f, w)
         u0, v0 = state.u, state.v
         # The rule is loop-invariant: build the plane-ordering meta once
         # and only refresh the block-start column per chunk iteration.

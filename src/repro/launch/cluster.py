@@ -1,0 +1,142 @@
+"""Online-learning cluster driver: trainer-fed replica set CLI.
+
+Builds the retrieval system, starts a `TrainerLoop` publishing policy
+snapshots into a shared `PolicyStore`, and serves a random query stream
+through a `ReplicaSet` (queue-aware routing + u-budget admission) while
+training runs — the paper's serve-while-training deployment in one
+process.
+
+    PYTHONPATH=src python -m repro.launch.cluster --replicas 2 \
+        --publish-every 10 --backend xla
+
+``--smoke`` is the CI gate: tiny corpus, 2 replicas, 2 publish cycles,
+and a hard assertion that every submitted query completed with either a
+response or an explicit Shed — zero dropped.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import time
+from pathlib import Path
+
+import numpy as np
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--replicas", type=int, default=2)
+    ap.add_argument("--publish-every", type=int, default=10,
+                    help="training epochs between snapshot publishes")
+    ap.add_argument("--iters", type=int, default=30,
+                    help="total training epochs")
+    ap.add_argument("--train-batch", type=int, default=32)
+    ap.add_argument("--backend", default="xla",
+                    help="index-scan backend (training AND serving)")
+    ap.add_argument("--routing", default="queue_aware",
+                    choices=["queue_aware", "round_robin"])
+    ap.add_argument("--staleness-bound", type=int, default=2)
+    ap.add_argument("--u-budget-inflight", type=float, default=float("inf"),
+                    help="fleet admission budget in u (inf disables shedding)")
+    ap.add_argument("--n-docs", type=int, default=4096)
+    ap.add_argument("--n-queries", type=int, default=400)
+    ap.add_argument("--batch", type=int, default=24,
+                    help="queries per serving wave")
+    ap.add_argument("--min-bucket", type=int, default=8)
+    ap.add_argument("--max-bucket", type=int, default=32)
+    ap.add_argument("--cache", type=int, default=512)
+    ap.add_argument("--out", default="results/cluster.json")
+    ap.add_argument("--smoke", action="store_true",
+                    help="CI gate: tiny sizes + zero-dropped assertion")
+    args = ap.parse_args()
+
+    if args.smoke:
+        args.replicas = 2
+        args.n_docs, args.n_queries = 2048, 200
+        args.iters, args.publish_every = 8, 4      # exactly 2 publish cycles
+        args.train_batch, args.batch = 16, 16
+
+    from repro.cluster import (ClusterConfig, ReplicaSet, Shed,
+                               TrainerConfig, TrainerLoop)
+    from repro.data.querylog import QueryLogConfig
+    from repro.index.corpus import CorpusConfig
+    from repro.policies import PolicyStore
+    from repro.serving import EngineConfig
+    from repro.system import RetrievalSystem, SystemConfig
+
+    sys_ = RetrievalSystem(SystemConfig(
+        corpus=CorpusConfig(n_docs=args.n_docs, vocab_size=1024, seed=0),
+        querylog=QueryLogConfig(n_queries=args.n_queries, seed=0),
+        block_docs=256, p_bins=512, u_budget=1024,
+        l1_steps=150 if not args.smoke else 80,
+        backend=args.backend,
+    ))
+    sys_.fit_l1(n_queries=96)
+    sys_.fit_state_bins(n_queries=64)
+    print(f"[build] {sys_.index.n_docs} docs / {sys_.log.n_queries} queries "
+          f"/ {sys_.index.n_blocks} blocks ({sys_.build_time:.1f}s)")
+
+    store = PolicyStore(staleness_bound=args.staleness_bound)
+    trainer = TrainerLoop(sys_, store, cfg=TrainerConfig(
+        iters=args.iters, publish_every=args.publish_every,
+        batch=args.train_batch, publish_initial=False))
+    trainer.publish_now()                 # v1 up before replicas construct
+    cluster = ReplicaSet(sys_, store, ClusterConfig(
+        n_replicas=args.replicas, routing=args.routing,
+        u_inflight_budget=args.u_budget_inflight),
+        EngineConfig(min_bucket=args.min_bucket, max_bucket=args.max_bucket,
+                     cache_capacity=args.cache, backend=args.backend))
+    cluster.warmup()
+
+    rng = np.random.default_rng(0)
+    results, t0 = [], time.time()
+    with cluster:
+        trainer.start()
+        waves = 0
+        while trainer.alive or waves == 0:
+            qids = rng.integers(0, sys_.log.n_queries, size=args.batch)
+            results.extend(cluster.serve(qids))
+            waves += 1
+        trainer.join()
+        # final wave on the last published version
+        results.extend(cluster.serve(
+            rng.integers(0, sys_.log.n_queries, size=args.batch)))
+        waves += 1
+    wall = time.time() - t0
+
+    stats = cluster.stats()
+    n_shed = sum(isinstance(r, Shed) for r in results)
+    out = {
+        "waves": waves,
+        "wall_s": wall,
+        "qps": len(results) / wall,
+        "versions_published": trainer.versions_published,
+        "probe_recall_per_version": [row["probe_recall"]
+                                     for row in trainer.history],
+        "n_results": len(results),
+        "n_shed": n_shed,
+        "cluster": stats,
+    }
+    print(f"[serve] {len(results)} results over {waves} waves "
+          f"({out['qps']:.1f} qps), {n_shed} shed, "
+          f"versions {trainer.versions_published}, "
+          f"version_lag_max={stats['version_lag_observed_max']}")
+
+    if args.smoke:
+        assert len(trainer.versions_published) >= 3, \
+            f"expected >= 3 publishes (v1 + 2 cycles), got {trainer.versions_published}"
+        assert stats["n_submitted"] == stats["n_responses"] + stats["n_shed"], \
+            "dropped queries: submitted != responses + shed"
+        assert len(results) == stats["n_submitted"], "lost tickets"
+        assert stats["version_lag_observed_max"] <= args.staleness_bound, \
+            "served a snapshot beyond the staleness bound"
+        print("[smoke] OK: zero dropped non-shed queries, "
+              f"{len(trainer.versions_published)} versions, "
+              f"lag <= {args.staleness_bound}")
+
+    Path(args.out).parent.mkdir(parents=True, exist_ok=True)
+    Path(args.out).write_text(json.dumps(out, indent=1, default=str))
+
+
+if __name__ == "__main__":
+    main()

@@ -10,7 +10,12 @@ ancient policy.
 
 Thread-safe: ``publish`` may be called from a trainer thread while
 engine replicas ``snapshot``/``validate`` concurrently.  Snapshots are
-immutable (the category→policy dict is copied on publish).
+immutable (the category→policy dict is copied on publish), so a reader
+can never observe a torn snapshot: the mapping is fully built before
+the head pointer moves.  Subscriber delivery is per-subscriber
+serialized and version-monotone — a callback registered mid-publish
+observes either the old or the new version first, never both out of
+order and never the same version twice.
 """
 from __future__ import annotations
 
@@ -52,6 +57,32 @@ def _validate_policies(policies: Dict[int, Policy]) -> None:
                 "MatchPlan with StaticPlanPolicy(plan, n_actions)).")
 
 
+class _Subscriber:
+    """One registered callback with per-subscriber delivery state.
+
+    ``deliver`` serializes invocations of the callback (two concurrent
+    publishers never run it at once) and enforces version monotonicity:
+    a snapshot at or below the last delivered version is dropped.  This
+    closes the subscribe-under-concurrent-publish race where the
+    initial replay of the current snapshot could land *after* a newer
+    publish already notified the callback, delivering versions out of
+    order."""
+
+    __slots__ = ("callback", "_lock", "_last_version")
+
+    def __init__(self, callback: Callable[[PolicySnapshot], None]):
+        self.callback = callback
+        self._lock = threading.Lock()
+        self._last_version = 0
+
+    def deliver(self, snap: PolicySnapshot) -> None:
+        with self._lock:
+            if snap.version <= self._last_version:
+                return
+            self._last_version = snap.version
+            self.callback(snap)
+
+
 class PolicyStore:
     def __init__(self, staleness_bound: int = 1):
         if staleness_bound < 0:
@@ -59,7 +90,7 @@ class PolicyStore:
         self.staleness_bound = staleness_bound
         self._lock = threading.Lock()
         self._snapshot: Optional[PolicySnapshot] = None
-        self._subscribers: List[Callable[[PolicySnapshot], None]] = []
+        self._subscribers: List[_Subscriber] = []
 
     # ------------------------------------------------------------ publish
     def publish(self, policies: Dict[int, Policy]) -> int:
@@ -71,8 +102,8 @@ class PolicyStore:
             snap = PolicySnapshot(version, MappingProxyType(dict(policies)))
             self._snapshot = snap
             subscribers = list(self._subscribers)
-        for cb in subscribers:
-            cb(snap)
+        for sub in subscribers:
+            sub.deliver(snap)
         return version
 
     # ----------------------------------------------------------- consume
@@ -91,17 +122,25 @@ class PolicyStore:
     def subscribe(self, callback: Callable[[PolicySnapshot], None]) -> Callable[[], None]:
         """Register ``callback(snapshot)`` for future publishes (and
         immediately for the current snapshot, if any).  Returns an
-        unsubscribe function."""
+        unsubscribe function.
+
+        Safe under concurrent ``publish``: the callback observes a
+        strictly increasing version sequence whose first element is the
+        snapshot current at registration *or any later one* — never an
+        older version after a newer, never a duplicate."""
+        sub = _Subscriber(callback)
         with self._lock:
-            self._subscribers.append(callback)
+            self._subscribers.append(sub)
             snap = self._snapshot
         if snap is not None:
-            callback(snap)
+            # Replay outside the store lock; _Subscriber.deliver drops
+            # it if a concurrent publish already delivered a newer one.
+            sub.deliver(snap)
 
         def unsubscribe() -> None:
             with self._lock:
-                if callback in self._subscribers:
-                    self._subscribers.remove(callback)
+                if sub in self._subscribers:
+                    self._subscribers.remove(sub)
         return unsubscribe
 
     def staleness(self, version: int) -> int:

@@ -97,10 +97,28 @@ class ShapeBucketBatcher:
         for req in reversed(reqs):
             self._queues.setdefault(req.category, deque()).appendleft(req)
 
+    def remove(self, request_ids) -> int:
+        """Drop queued requests by id (cancellation — e.g. a caller
+        giving up on a repeatedly failing batch); returns the count."""
+        request_ids = set(request_ids)
+        n = 0
+        for q in self._queues.values():
+            kept = [r for r in q if r.request_id not in request_ids]
+            n += len(q) - len(kept)
+            q.clear()
+            q.extend(kept)
+        return n
+
     def pending(self, category: Optional[int] = None) -> int:
         if category is not None:
             return len(self._queues.get(category, ()))
-        return sum(len(q) for q in self._queues.values())
+        # list() snapshots the values atomically under the GIL (single
+        # C-level call, no bytecode boundary), so this stays safe when
+        # a router thread polls while the owning thread enqueues a
+        # first-of-its-category request (which inserts a dict key); a
+        # plain generator over .values() can raise "dictionary changed
+        # size during iteration" there.
+        return sum(len(q) for q in list(self._queues.values()))
 
     def categories(self) -> List[int]:
         return [c for c, q in self._queues.items() if q]

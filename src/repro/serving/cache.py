@@ -49,6 +49,13 @@ class LRUResultCache:
         self.misses += 1
         return None
 
+    def contains(self, key: Hashable) -> bool:
+        """Membership probe without touching LRU order or hit/miss
+        stats (used by the cluster router's cache-owner check; safe to
+        call from another thread — a stale answer only misroutes one
+        request, it cannot corrupt the dict under the GIL)."""
+        return self.capacity > 0 and key in self._entries
+
     def put(self, key: Hashable, value: Any) -> None:
         if self.capacity <= 0:
             return

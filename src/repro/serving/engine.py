@@ -65,6 +65,7 @@ class ServeResponse:
     cand_cnt: int
     cached: bool
     latency_s: float
+    policy_version: int = 0    # snapshot version that produced the result
 
 
 @dataclasses.dataclass
@@ -100,6 +101,10 @@ class ServeEngine:
                                         keep=cfg.keep, backend=cfg.backend)
         self.telemetry = Telemetry()
         self._next_id = 0
+        # Requests drained from the queue and currently executing; with
+        # queue_depth this is the load signal a cross-replica router
+        # balances on.
+        self._inflight = 0
         # Responses wait here until take_response(); bounded so callers
         # that fire-and-forget don't leak result arrays forever.
         self._completed: Dict[int, ServeResponse] = {}
@@ -108,6 +113,17 @@ class ServeEngine:
         self._completed[resp.request_id] = resp
         while len(self._completed) > self.cfg.max_completed:
             self._completed.pop(next(iter(self._completed)))
+
+    # ------------------------------------------------------------- gauges
+    @property
+    def queue_depth(self) -> int:
+        """Requests admitted but not yet drained into a micro-batch."""
+        return self.batcher.pending()
+
+    @property
+    def inflight(self) -> int:
+        """Real lanes of the micro-batch currently executing (0 idle)."""
+        return self._inflight
 
     # ---------------------------------------------------------- policies
     @property
@@ -174,27 +190,38 @@ class ServeEngine:
         hit = self.cache.get(key)
         if hit is not None:
             t1 = Telemetry.now()
+            # The cache is flushed on every version change, so a hit
+            # always embodies the currently pinned snapshot.
             self._complete(ServeResponse(
                 request_id=rid, qid=int(qid), category=cat,
                 doc_ids=hit.doc_ids, scores=hit.scores, u=hit.u,
-                cand_cnt=hit.cand_cnt, cached=True, latency_s=t1 - t0))
+                cand_cnt=hit.cand_cnt, cached=True, latency_s=t1 - t0,
+                policy_version=self._snapshot.version))
             self.telemetry.record_request(category=cat, latency_s=t1 - t0,
                                           u=hit.u, cached=True, t_done=t1)
             return rid
         self.batcher.enqueue(PendingRequest(
             request_id=rid, qid=int(qid), category=cat, cache_key=key,
             t_submit=t0))
+        self.telemetry.observe_gauges(self.queue_depth, self._inflight)
         return rid
 
     # ------------------------------------------------------------- batch
     def _execute_batch(self, mb: MicroBatch) -> None:
         t0 = Telemetry.now()
-        qids = mb.padded_qids()
-        occ, scores, tp = self.system.batch_inputs(qids)
-        t1 = Telemetry.now()
-        ids, sc, u, cnt = self.executor.execute(
-            self._policy_for(mb.category), occ, scores, tp)
-        t2 = Telemetry.now()
+        self._inflight = mb.n_real
+        self.telemetry.observe_gauges(self.queue_depth, self._inflight)
+        try:
+            qids = mb.padded_qids()
+            occ, scores, tp = self.system.batch_inputs(qids)
+            t1 = Telemetry.now()
+            ids, sc, u, cnt = self.executor.execute(
+                self._policy_for(mb.category), occ, scores, tp)
+            t2 = Telemetry.now()
+        finally:
+            self._inflight = 0
+            self.telemetry.observe_gauges(self.queue_depth, 0)
+        version = self._snapshot.version
         self.telemetry.record_batch(category=mb.category, bucket=mb.bucket,
                                     n_real=mb.n_real, t_inputs_s=t1 - t0,
                                     t_execute_s=t2 - t1)
@@ -209,7 +236,7 @@ class ServeEngine:
                 request_id=req.request_id, qid=req.qid,
                 category=mb.category, doc_ids=result.doc_ids,
                 scores=result.scores, u=result.u, cand_cnt=result.cand_cnt,
-                cached=False, latency_s=latency))
+                cached=False, latency_s=latency, policy_version=version))
             self.telemetry.record_request(category=mb.category,
                                           latency_s=latency, u=result.u,
                                           cached=False, t_done=t2)
@@ -248,6 +275,15 @@ class ServeEngine:
     # ----------------------------------------------------------- respond
     def take_response(self, request_id: int) -> Optional[ServeResponse]:
         return self._completed.pop(request_id, None)
+
+    def cancel(self, request_ids) -> int:
+        """Abandon admitted requests: drop them from the pending queues
+        (including requeued failed batches) and discard any unclaimed
+        responses.  Returns how many were still queued."""
+        request_ids = list(request_ids)
+        for rid in request_ids:
+            self._completed.pop(rid, None)
+        return self.batcher.remove(request_ids)
 
     def serve(self, qids: Sequence[int]) -> List[ServeResponse]:
         """Synchronous driver: submit a stream, flush, return responses

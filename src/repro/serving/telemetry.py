@@ -19,11 +19,16 @@ from typing import Deque, Dict, Optional
 
 import numpy as np
 
-__all__ = ["Telemetry"]
+__all__ = ["Telemetry", "pct"]
 
 
-def _pct(xs: np.ndarray, q: float) -> float:
+def pct(xs, q: float) -> float:
+    """Quantile with the empty-input-is-zero policy every serving
+    surface (engine summary, cluster stats, benches) shares."""
     return float(np.quantile(xs, q)) if len(xs) else 0.0
+
+
+_pct = pct
 
 
 class Telemetry:
@@ -33,6 +38,12 @@ class Telemetry:
         self.total_requests = 0
         self.total_cached = 0
         self.rejected = 0
+        # Load gauges (current + lifetime peak), fed by the engine on
+        # every enqueue/drain — the router's balancing signal.
+        self.queue_depth = 0
+        self.inflight = 0
+        self.peak_queue_depth = 0
+        self.peak_inflight = 0
         self._t_start: Optional[float] = None
         self._t_last: Optional[float] = None
 
@@ -73,6 +84,12 @@ class Telemetry:
     def record_rejection(self) -> None:
         self.rejected += 1
 
+    def observe_gauges(self, queue_depth: int, inflight: int) -> None:
+        self.queue_depth = int(queue_depth)
+        self.inflight = int(inflight)
+        self.peak_queue_depth = max(self.peak_queue_depth, self.queue_depth)
+        self.peak_inflight = max(self.peak_inflight, self.inflight)
+
     # ------------------------------------------------------------ summary
     def summary(self, compile_count: int = 0) -> Dict[str, float]:
         lat = np.array([r["latency_s"] for r in self.requests], np.float64)
@@ -97,4 +114,8 @@ class Telemetry:
             "p99_u": _pct(us, 0.99),
             "padding_overhead": (padded / lanes) if lanes else 0.0,
             "compile_count": int(compile_count),
+            "queue_depth": self.queue_depth,
+            "inflight": self.inflight,
+            "peak_queue_depth": self.peak_queue_depth,
+            "peak_inflight": self.peak_inflight,
         }

@@ -18,7 +18,7 @@ import numpy as np
 from repro.core.environment import EnvConfig
 from repro.core.match_plan import MatchPlan, plan_rollout, production_plans
 from repro.core.match_rules import RuleSet, default_rule_library
-from repro.core.qlearning import QConfig, init_q, train_batch
+from repro.core.qlearning import QConfig, init_q, linear_epsilon, train_batch
 from repro.core.reward import r_agent
 from repro.core.rollout import unified_rollout
 from repro.core.state_bins import StateBins, fit_bins
@@ -187,6 +187,32 @@ class RetrievalSystem:
         return self.bins
 
     # -------------------------------------------------------------- training
+    def sample_train_qids(self, cat: int, batch: int,
+                          rng: np.random.Generator) -> np.ndarray:
+        """One training batch of query ids for a category (with
+        replacement — shared by the offline and online trainers)."""
+        qids_all = np.where(self.log.category == cat)[0]
+        return rng.choice(qids_all, size=min(batch, len(qids_all)),
+                          replace=True)
+
+    def policy_train_step(self, cat: int, q: jnp.ndarray, key, eps: float,
+                          qids: Sequence[int]):
+        """One ε-greedy Q-learning iteration on a batch of query ids:
+        production-plan rollout for Eq. 4's reward baseline, then
+        ``train_batch``.  Returns (q, metrics).  This is the unit an
+        online trainer loop (src/repro/cluster/trainer.py) interleaves
+        with snapshot publishes."""
+        assert self.bins is not None, "fit_state_bins() first"
+        occ, scores, term_present = self.batch_inputs(qids)
+        plan = self.plan_for_category(cat)
+        _, traj = self._run_plan_batch(plan, occ, scores, term_present)
+        prod_r = self.production_step_rewards(traj)
+        return train_batch(
+            self.env_cfg, self.qcfg, self.ruleset, self.bins, q,
+            occ, scores, term_present, prod_r, jnp.float32(eps), key,
+            backend=self.cfg.backend,
+        )
+
     def train_policy(
         self,
         cat: int,
@@ -201,23 +227,14 @@ class RetrievalSystem:
         policies per category)."""
         assert self.bins is not None, "fit_state_bins() first"
         rng_np = np.random.default_rng(seed)
-        qids_all = np.where(self.log.category == cat)[0]
         q = init_q(self.qcfg)
         key = jax.random.key(seed)
         history = []
         for it in range(iters):
-            qids = rng_np.choice(qids_all, size=min(batch, len(qids_all)), replace=True)
-            occ, scores, term_present = self.batch_inputs(qids)
-            plan = self.plan_for_category(cat)
-            _, traj = self._run_plan_batch(plan, occ, scores, term_present)
-            prod_r = self.production_step_rewards(traj)
-            eps = eps_start + (eps_end - eps_start) * it / max(iters - 1, 1)
+            qids = self.sample_train_qids(cat, batch, rng_np)
+            eps = linear_epsilon(it, iters, eps_start, eps_end)
             key, sub = jax.random.split(key)
-            q, metrics = train_batch(
-                self.env_cfg, self.qcfg, self.ruleset, self.bins, q,
-                occ, scores, term_present, prod_r, jnp.float32(eps), sub,
-                backend=self.cfg.backend,
-            )
+            q, metrics = self.policy_train_step(cat, q, sub, eps, qids)
             history.append({k: float(v) for k, v in metrics.items()})
             if log_every and (it % log_every == 0):
                 print(f"[cat{cat}] iter {it:4d} eps {eps:.2f} " +

@@ -1,0 +1,251 @@
+"""Online-learning cluster: router/admission units, replica-set parity
+vs the direct rollout, explicit shedding, trainer publish gating, and
+the full serve-while-training loop."""
+import threading
+import time
+
+import numpy as np
+import pytest
+
+from repro.cluster import (
+    AdmissionController, ClusterConfig, QueueAwareRouter, Replica,
+    ReplicaSet, RoundRobinRouter, Shed, TrainerConfig, TrainerLoop,
+    UCostEstimator, candidate_recall, make_router, stable_query_hash,
+)
+from repro.data.querylog import CAT1, CAT2
+from repro.policies import PolicyStore, TabularQPolicy
+from repro.serving import EngineConfig
+
+from test_serving import _direct
+
+
+@pytest.fixture(scope="module")
+def trained(tiny_system):
+    policies = {cat: TabularQPolicy(tiny_system.train_policy(cat, iters=10,
+                                                             batch=16)[0])
+                for cat in (CAT1, CAT2)}
+    return tiny_system, policies
+
+
+def _store(policies, staleness_bound=2):
+    store = PolicyStore(staleness_bound=staleness_bound)
+    store.publish(dict(policies))
+    return store
+
+
+# ------------------------------------------------------------------ router
+def test_queue_aware_router_affinity_and_spill():
+    r = QueueAwareRouter(spill_margin=4)
+    depths = [0, 0, 0, 0]
+    h = stable_query_hash((1, (3, 5, 9)))
+    pref = h % 4
+    assert r.pick(h, depths) == pref                  # balanced: affinity
+    depths = [10, 10, 10, 10]
+    depths[pref] = 14
+    assert r.pick(h, depths) == pref                  # gap == margin: stay
+    depths[pref] = 15                                 # gap > margin: spill
+    spilled = r.pick(h, depths)
+    assert spilled != pref and depths[spilled] == 10
+    assert r.stats()["spills"] == 1
+    assert r.stats()["affinity_picks"] == 2
+    # a known cache owner wins regardless of depth (a hit is ~free)
+    assert r.pick(h, [100, 0, 0, 0], owner=0) == 0
+    assert r.stats()["sticky_picks"] == 1
+
+
+def test_round_robin_router_cycles():
+    r = RoundRobinRouter()
+    picks = [r.pick(123, [0, 0, 0]) for _ in range(6)]
+    assert picks == [0, 1, 2, 0, 1, 2]
+
+
+def test_stable_query_hash_deterministic():
+    key = (1, (3, 5, 9))
+    assert stable_query_hash(key) == stable_query_hash((1, (3, 5, 9)))
+    assert stable_query_hash(key) != stable_query_hash((0, (3, 5, 9)))
+
+
+def test_make_router_errors():
+    assert make_router("round_robin").name == "round_robin"
+    with pytest.raises(ValueError, match="routing"):
+        make_router("no_such_routing")
+
+
+# --------------------------------------------------------------- admission
+def test_ucost_estimator_prior_then_observation(tiny_system):
+    est = UCostEstimator(tiny_system, prior_u=100.0)
+    assert est.estimate(0) == 100.0                   # cold: prior
+    est.observe(0, 40.0)
+    assert est.estimate(0) == 40.0                    # first sample replaces
+    est.observe(0, 80.0)
+    assert 40.0 < est.estimate(0) < 80.0              # EMA thereafter
+    cat, df_bin = est.features(0)
+    assert cat == int(tiny_system.log.category[0])
+    assert 0 <= df_bin < 8
+
+
+def test_admission_controller_budget_and_shed(tiny_system):
+    est = UCostEstimator(tiny_system, prior_u=100.0)
+    adm = AdmissionController(est, u_inflight_budget=250.0)
+    e1 = adm.try_admit(0)
+    e2 = adm.try_admit(1)
+    assert e1 == e2 == 100.0
+    assert adm.try_admit(2) is None                   # 300 > 250: shed
+    assert adm.stats()["shed"] == 1
+    adm.release(e1)
+    assert adm.try_admit(2) == 100.0                  # freed: admit again
+    # actual-u completion feeds the estimator
+    adm.release(e2, actual_u=20.0, qid=1)
+    assert est.estimate(1) == 20.0
+
+
+def test_admission_oversized_query_admitted_when_idle(tiny_system):
+    adm = AdmissionController(UCostEstimator(tiny_system, prior_u=500.0),
+                              u_inflight_budget=250.0)
+    assert adm.try_admit(0) == 500.0                  # idle fleet: let it run
+    assert adm.try_admit(1) is None                   # but only alone
+
+
+# ------------------------------------------------------------- replica set
+def test_replica_set_matches_direct_rollout(trained):
+    """Non-shed responses through N replicas are bit-identical to the
+    single-host reference path, whatever replica served them."""
+    sys_, policies = trained
+    cluster = ReplicaSet(sys_, _store(policies),
+                         ClusterConfig(n_replicas=2),
+                         EngineConfig(min_bucket=8, max_bucket=8,
+                                      cache_capacity=0))
+    rng = np.random.default_rng(4)
+    qids = rng.integers(0, sys_.log.n_queries, size=24)
+    with cluster:
+        results = cluster.serve(qids)
+    ids, sc, u = _direct(sys_, policies, qids)
+    assert not any(isinstance(r, Shed) for r in results)
+    for lane, r in enumerate(results):
+        assert r.qid == qids[lane]
+        np.testing.assert_array_equal(r.doc_ids, ids[lane])
+        np.testing.assert_allclose(r.scores, sc[lane], rtol=1e-6)
+        assert r.u == u[lane]
+        assert r.policy_version == 1
+    stats = cluster.stats()
+    assert stats["n_submitted"] == stats["n_responses"] == len(qids)
+    assert stats["shed_rate"] == 0.0
+    assert stats["version_lag_observed_max"] == 0
+
+
+def test_cluster_sheds_explicitly_under_tight_budget(trained):
+    sys_, policies = trained
+    cluster = ReplicaSet(
+        sys_, _store(policies),
+        ClusterConfig(n_replicas=2, u_inflight_budget=1.0, prior_u=50.0),
+        EngineConfig(min_bucket=8, max_bucket=8, cache_capacity=0))
+    qids = np.arange(16)
+    with cluster:
+        results = cluster.serve(qids)
+    sheds = [r for r in results if isinstance(r, Shed)]
+    served = [r for r in results if not isinstance(r, Shed)]
+    # budget admits ~one query at a time; the rest shed explicitly
+    assert sheds and served
+    assert all(s.reason == "u_budget_hot" for s in sheds)
+    assert all(s.est_u > 0 for s in sheds)
+    stats = cluster.stats()
+    assert stats["n_shed"] == len(sheds)
+    assert stats["n_submitted"] == stats["n_responses"] + stats["n_shed"]
+
+
+def test_cache_affinity_routes_repeats_to_one_replica(trained):
+    """Repeats of one hot query stay on its preferred replica and hit
+    its result cache; the fleet pays exactly one rollout for them."""
+    sys_, policies = trained
+    # wide spill margin: this test isolates affinity (rapid same-key
+    # submits would otherwise trip the depth spill, by design)
+    cluster = ReplicaSet(sys_, _store(policies),
+                         ClusterConfig(n_replicas=2, routing="queue_aware",
+                                       spill_margin=64),
+                         EngineConfig(min_bucket=8, max_bucket=8,
+                                      cache_capacity=64))
+    qid = int(np.where(sys_.log.category == CAT1)[0][0])
+    with cluster:
+        (first,) = cluster.serve([qid])          # prime the affinity cache
+        results = cluster.serve([qid] * 11)
+    assert not first.cached
+    assert not any(isinstance(r, Shed) for r in results)
+    assert all(r.cached for r in results)        # one rollout fleet-wide
+    np.testing.assert_array_equal(results[0].doc_ids, first.doc_ids)
+    summaries = cluster.stats()["replicas"]
+    assert sorted(s["n_requests"] for s in summaries) == [0, 12]
+
+
+def test_replica_shutdown_sheds_pending_tickets(trained):
+    sys_, policies = trained
+    replica = Replica(0, sys_, _store(policies),
+                      EngineConfig(min_bucket=8, max_bucket=8))
+    from repro.cluster.replica import ClusterTicket
+    t1 = ClusterTicket(0, int(sys_.log.category[0]))
+    replica.enqueue(t1)                    # never started: stays in inbox
+    replica.stop(drain=False)
+    assert t1.done() and t1.shed
+    assert t1.result().reason == "replica_shutdown"
+    t2 = ClusterTicket(1, int(sys_.log.category[1]))
+    replica.enqueue(t2)                    # post-stop enqueue: immediate shed
+    assert t2.done() and t2.shed
+
+
+# ----------------------------------------------------------------- trainer
+def test_trainer_loop_publishes_gated_versions(tiny_system):
+    store = PolicyStore(staleness_bound=2)
+    trainer = TrainerLoop(tiny_system, store, cfg=TrainerConfig(
+        iters=4, publish_every=2, batch=8, probe_queries=8, seed=3))
+    trainer.run_to_completion()
+    assert trainer.versions_published == [1, 2, 3]
+    assert store.version == 3
+    for cat in (CAT1, CAT2):
+        scores = [row["probe_recall"][cat] for row in trainer.history]
+        assert all(b >= a for a, b in zip(scores, scores[1:])), scores
+    # the published policy IS the gate's best (same object)
+    snap = store.snapshot()
+    assert set(snap.policies) == {CAT1, CAT2}
+
+
+def test_candidate_recall_proxy():
+    doc_ids = np.array([[3, 7, -1], [1, 2, 9]])
+    judged = np.array([[3, 5, -1], [4, 6, -1]])
+    gains = np.array([[2, 1, 0], [0, 3, 0]])
+    rec = candidate_recall(doc_ids, judged, gains)
+    assert rec[0] == 0.5                  # found 3, missed 5
+    assert rec[1] == 0.0                  # missed 6 (4 has gain 0)
+
+
+def test_serve_while_training(trained):
+    """The full loop: trainer publishes while the fleet serves; nothing
+    drops, every response's version is within the staleness bound."""
+    sys_, _ = trained
+    bound = 2
+    store = PolicyStore(staleness_bound=bound)
+    trainer = TrainerLoop(sys_, store, cfg=TrainerConfig(
+        iters=4, publish_every=2, batch=8, probe_queries=8,
+        publish_initial=False))
+    trainer.publish_now()
+    cluster = ReplicaSet(sys_, store, ClusterConfig(n_replicas=2),
+                         EngineConfig(min_bucket=8, max_bucket=8,
+                                      cache_capacity=128))
+    rng = np.random.default_rng(0)
+    results = []
+    with cluster:
+        trainer.start()
+        while trainer.alive:
+            results.extend(cluster.serve(
+                rng.integers(0, sys_.log.n_queries, size=8)))
+        trainer.join()
+        results.extend(cluster.serve(
+            rng.integers(0, sys_.log.n_queries, size=8)))
+    assert len(trainer.versions_published) == 3
+    served = [r for r in results if not isinstance(r, Shed)]
+    assert served and not any(isinstance(r, Shed) for r in results)
+    stats = cluster.stats()
+    assert stats["n_submitted"] == stats["n_responses"] + stats["n_shed"]
+    assert stats["n_submitted"] == len(results)
+    assert stats["version_lag_observed_max"] <= bound
+    assert {r.policy_version for r in served} <= {1, 2, 3}
+    # the last wave ran after the final publish: head version was served
+    assert max(r.policy_version for r in served) == 3

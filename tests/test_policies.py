@@ -252,6 +252,59 @@ def test_snapshot_policies_read_only(trained_q):
         store.snapshot().policies[CAT2] = TabularQPolicy(trained_q)
 
 
+def test_store_subscribe_under_concurrent_publish_stress():
+    """Threaded stress: publishers racing subscribers.  Every subscriber
+    must observe (a) strictly increasing versions — a callback
+    registered mid-publish sees the old or the new version first, never
+    out of order or twice — and (b) never a torn snapshot: both
+    categories of a snapshot always come from the same publish."""
+    import threading
+
+    store = PolicyStore(staleness_bound=10**9)
+    n_publishers, n_pubs, n_subscribers = 3, 25, 8
+    tag_by_version = {}                      # version -> publish tag
+    tag_lock = threading.Lock()
+    observed = [[] for _ in range(n_subscribers)]   # (version, tag0, tag1)
+
+    def snap_tags(snap):
+        return (float(np.asarray(snap.policies[CAT1].q)[0, 0]),
+                float(np.asarray(snap.policies[CAT2].q)[0, 0]))
+
+    def publisher(pid):
+        for i in range(n_pubs):
+            tag = float(pid * 1000 + i)
+            q = jnp.full((2, 3), tag, jnp.float32)
+            pols = {CAT1: TabularQPolicy(q), CAT2: TabularQPolicy(q)}
+            with tag_lock:
+                # publish inside the tag lock so version -> tag is exact
+                version = store.publish(pols)
+                tag_by_version[version] = tag
+        return None
+
+    def subscriber(sid):
+        def cb(snap):
+            observed[sid].append((snap.version, *snap_tags(snap)))
+        store.subscribe(cb)
+
+    threads = [threading.Thread(target=publisher, args=(p,))
+               for p in range(n_publishers)]
+    threads += [threading.Thread(target=subscriber, args=(s,))
+                for s in range(n_subscribers)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    assert store.version == n_publishers * n_pubs
+    for sid, seq in enumerate(observed):
+        versions = [v for v, _, _ in seq]
+        assert versions == sorted(set(versions)), \
+            f"subscriber {sid}: out-of-order/duplicate delivery {versions}"
+        for v, t0, t1 in seq:
+            assert t0 == t1, f"torn snapshot at v{v}: {t0} != {t1}"
+            assert tag_by_version[v] == t0, \
+                f"v{v} delivered tag {t0}, published {tag_by_version[v]}"
+
+
 # ------------------------------------------------------ serving integration
 def test_engine_rejects_raw_ndarray(tiny_system, trained_q):
     with pytest.raises(TypeError, match="TabularQPolicy"):

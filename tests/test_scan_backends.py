@@ -189,6 +189,64 @@ def test_chunk_size_invariance(cfg, inputs, chunk):
     _assert_states_equal(sx, sp, f"chunk={chunk}")
 
 
+# -------------------------------------------------- adaptive speculation
+def test_adaptive_chunk_blocks_heuristic():
+    """Deep rules (many planes, quota crossed early) get a small C;
+    shallow sweeps a large one; tracers fall back to the static
+    default (kernel shapes cannot depend on traced quotas)."""
+    from repro.core.scan_backends import (
+        DEFAULT_CHUNK_BLOCKS, MAX_ADAPTIVE_CHUNK, adaptive_chunk_blocks,
+    )
+
+    deep = adaptive_chunk_blocks(64, jnp.full((4,), 40, jnp.int32),
+                                 jnp.full((4,), 16, jnp.int32), 4096)
+    assert deep == 3                      # ceil(40 / 16)
+    shallow = adaptive_chunk_blocks(64, jnp.full((4,), 1000, jnp.int32),
+                                    jnp.full((4,), 2, jnp.int32), 4096)
+    assert shallow == MAX_ADAPTIVE_CHUNK  # 500 blocks, clamped
+    assert adaptive_chunk_blocks(8, jnp.full((4,), 1000, jnp.int32),
+                                 jnp.full((4,), 2, jnp.int32), 4096) == 8
+    # u_budget caps the scan even when the quota is huge
+    assert adaptive_chunk_blocks(64, jnp.full((4,), 10**6, jnp.int32),
+                                 jnp.full((4,), 16, jnp.int32), 80) == 5
+    # zero-plane rules sweep to the end of the (clamped) index
+    assert adaptive_chunk_blocks(16, jnp.full((4,), 40, jnp.int32),
+                                 jnp.zeros((4,), jnp.int32), 4096) == 16
+
+    seen = []
+
+    def traced(du):
+        seen.append(adaptive_chunk_blocks(
+            64, du, jnp.full((4,), 16, jnp.int32), 4096))
+        return du
+
+    jax.jit(traced)(jnp.full((4,), 40, jnp.int32))
+    assert seen[0] == DEFAULT_CHUNK_BLOCKS
+
+
+@pytest.mark.parametrize("case", ["mid_chunk_du", "shallow_2plane"])
+def test_adaptive_chunk_parity(cfg, inputs, case):
+    """chunk=None picks C per rule (deep -> small, shallow -> large)
+    and stays bit-identical to the xla reference."""
+    occ, scores, tp = inputs
+    planes, req_terms, du, dv = RULE_CASES[case]
+    allowed, required = _rule(planes, req_terms)
+    du_q = jnp.full((B,), du, jnp.int32)
+    dv_q = jnp.full((B,), dv, jnp.int32)
+    sx = get_scan_backend("xla").run_rule(
+        cfg, occ, scores, tp, _batch_state(cfg), allowed, required,
+        du_q, dv_q)
+    adaptive = PallasBlockScanBackend(chunk=None)
+    sp = adaptive.run_rule(cfg, occ, scores, tp, _batch_state(cfg),
+                           allowed, required, du_q, dv_q)
+    _assert_states_equal(sx, sp, f"adaptive:{case}")
+    if case == "mid_chunk_du":       # 16 planes, Δu quota 40 -> C=3
+        assert adaptive.last_chunk == 3
+    else:                            # 2 planes, huge quota -> full sweep
+        assert adaptive.last_chunk == NB
+    assert adaptive.describe()["chunk"] == "adaptive"
+
+
 # ------------------------------------------------------- rollout level
 @pytest.fixture(scope="module")
 def ruleset():

@@ -1,15 +1,19 @@
 """Serving engine: bucket sizing/padding invariants, cache parity,
 end-to-end parity vs. direct rollout, shards, admission, telemetry."""
+import threading
+import time
+
 import numpy as np
 import pytest
 
 from repro.core.rollout import unified_rollout
 from repro.core.telescope import l1_prune
 from repro.data.querylog import CAT1, CAT2
-from repro.policies import TabularQPolicy
+from repro.policies import PolicyStore, TabularQPolicy
 from repro.serving import (
     AdmissionError, BucketConfig, EngineConfig, ServeEngine, bucket_size_for,
 )
+from repro.serving.cache import canonical_query_key
 
 
 # -------------------------------------------------------------- bucketing
@@ -190,7 +194,79 @@ def test_summary_shape(trained):
     s = engine.summary()
     for k in ("n_requests", "qps", "latency_p50_ms", "latency_p99_ms",
               "mean_u", "p99_u", "cache_hit_rate", "compile_count",
-              "padding_overhead"):
+              "padding_overhead", "queue_depth", "inflight",
+              "peak_queue_depth", "peak_inflight"):
         assert k in s
     assert s["n_requests"] == 4
     assert s["mean_u"] > 0
+
+
+def test_queue_depth_and_inflight_gauges(trained):
+    """The router's load signals: queue_depth counts admitted-not-yet-
+    drained requests, inflight the executing micro-batch's real lanes;
+    peaks survive in the summary."""
+    sys_, policies = trained
+    engine = ServeEngine(sys_, policies, EngineConfig(
+        min_bucket=8, max_bucket=8, cache_capacity=0))
+    qids = np.where(sys_.log.category == CAT1)[0][:5]
+    for q in qids:
+        engine.submit(int(q))
+    assert engine.queue_depth == 5 and engine.inflight == 0
+    engine.flush()
+    assert engine.queue_depth == 0 and engine.inflight == 0
+    s = engine.summary()
+    assert s["peak_queue_depth"] == 5
+    assert s["peak_inflight"] == 5          # observed mid-execution
+    assert s["queue_depth"] == 0 and s["inflight"] == 0
+
+
+# ------------------------------------------------ concurrent hot swap
+def test_cache_flush_on_hot_swap_under_concurrent_submit(trained):
+    """A publisher thread hot-swaps snapshots while the engine thread
+    keeps serving a hot query set.  Every cached response must have
+    been produced by a fill at the SAME policy version — a stale entry
+    surviving a version change would surface as a hit at a version
+    with no prior fill, or with different doc ids."""
+    sys_, policies = trained
+    store = PolicyStore(staleness_bound=10**9)
+    store.publish(dict(policies))
+    engine = ServeEngine(sys_, store, EngineConfig(
+        min_bucket=8, max_bucket=8, cache_capacity=256))
+    hot = np.where(sys_.log.category == CAT2)[0][:8]
+    stop = threading.Event()
+    published = [1]
+
+    def publisher():
+        for _ in range(5):
+            time.sleep(0.05)
+            published.append(store.publish(dict(policies)))
+        stop.set()
+
+    fills = {}                       # (cache_key, version) -> doc_ids
+    hit_versions = set()
+
+    def record_wave():
+        for r in engine.serve(hot):
+            key = (canonical_query_key(sys_.log.terms[r.qid],
+                                       r.category), r.policy_version)
+            if r.cached:
+                assert key in fills, \
+                    f"cache hit at v{r.policy_version} without a fill"
+                np.testing.assert_array_equal(r.doc_ids, fills[key])
+                hit_versions.add(r.policy_version)
+            else:
+                fills[key] = r.doc_ids
+
+    thread = threading.Thread(target=publisher)
+    thread.start()
+    try:
+        while not stop.is_set():
+            record_wave()
+    finally:
+        thread.join()
+    record_wave()                    # fill (or hit) at the final version
+    record_wave()                    # guaranteed hits at the final version
+    assert published[-1] == 6
+    # the loop really exercised post-swap cache hits, not just v1
+    assert len({v for _, v in fills}) >= 2
+    assert max(hit_versions, default=1) >= 2
