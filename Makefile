@@ -1,7 +1,7 @@
 PYTHON ?= python
 export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH),)
 
-.PHONY: check compile test serve-bench cluster-bench cluster-smoke bench serve example
+.PHONY: check compile test serve-bench cluster-bench cluster-smoke degrade-bench bench serve example
 
 # CI gate: byte-compile everything, then the tier-1 suite
 check: compile test
@@ -21,9 +21,16 @@ serve-bench:
 cluster-bench:
 	$(PYTHON) -m benchmarks.cluster_bench --fast --replicas 1,2
 
-# CI smoke: 2 replicas, tiny corpus, 2 publish cycles, zero dropped
+# CI smoke: 2 replicas, tiny corpus, 2 publish cycles, zero dropped,
+# trainer fed from the served-traffic tap, and a burst the ladder must
+# absorb with SHALLOW service instead of hard SHEDs
 cluster-smoke:
 	$(PYTHON) -m repro.launch.cluster --smoke
+
+# Graceful-degradation sweep: ladder vs binary shedding across offered
+# loads (p99 / served fraction / recall incl. SHALLOW / level mix)
+degrade-bench:
+	$(PYTHON) -m benchmarks.cluster_bench --fast --replicas 2 --degradation-only
 
 # Full benchmark sweep (kernels, plan executor, serving)
 bench:

@@ -1,6 +1,7 @@
-"""Cluster benchmark: replica scaling, routing policies, online shedding.
+"""Cluster benchmark: replica scaling, routing policies, online shedding,
+and the graceful-degradation ladder.
 
-Three sections, one results file (shared benchmarks/_results schema):
+Four sections, one results file (shared benchmarks/_results schema):
 
 1. **Routing × replicas** — an open-loop stream whose navigational
    head is LARGER than one replica's result cache but fits the fleet's
@@ -17,9 +18,19 @@ Three sections, one results file (shared benchmarks/_results schema):
    version_lag (observed per response) and hot-swap behaviour.
 3. **Admission** — same fleet with a tight u budget: records shed_rate
    and that all non-shed queries complete.
+4. **Degradation** — an offered-load sweep (descending pacing down to a
+   full burst) against one finite u budget, ladder vs binary shedding:
+   per load it records p99, served fraction, candidate recall of the
+   served set (SHALLOW-served recall broken out, not silently dropped),
+   and the FULL/SHALLOW/CACHED_ONLY/SHED mix.  The ladder must serve a
+   >= fraction at every load and strictly more at the burst, while its
+   FULL-level responses stay bit-identical to a plain single-engine
+   serve of the same queries (degradation never perturbs undegraded
+   traffic).
 
     PYTHONPATH=src python -m benchmarks.cluster_bench --replicas 1,2,4
     PYTHONPATH=src python -m benchmarks.cluster_bench --fast
+    PYTHONPATH=src python -m benchmarks.cluster_bench --fast --degradation-only
 """
 from __future__ import annotations
 
@@ -103,18 +114,20 @@ def config_metrics(cluster, results, tickets, wall) -> dict:
 
 
 def fresh_cluster(sys_, policies, *, replicas, routing, bucket, cache,
-                  u_budget=float("inf"), staleness_bound=2):
+                  u_budget=float("inf"), staleness_bound=2, ladder=True,
+                  fallbacks=None, prior_shallow_u=None):
     from repro.cluster import ClusterConfig, ReplicaSet
     from repro.policies import PolicyStore
     from repro.serving import EngineConfig
 
     store = PolicyStore(staleness_bound=staleness_bound)
-    store.publish(dict(policies))
+    store.publish(dict(policies), fallbacks=fallbacks)
     # Sticky owners should roughly track what the fleet's caches still
     # hold: bound the affinity table to the fleet cache capacity so
     # long-evicted tail keys fall back to depth-balanced routing.
     cluster = ReplicaSet(sys_, store, ClusterConfig(
         n_replicas=replicas, routing=routing, u_inflight_budget=u_budget,
+        ladder=ladder, prior_shallow_u=prior_shallow_u,
         affinity_table=max(1, cache) * replicas),
         EngineConfig(min_bucket=bucket, max_bucket=bucket,
                      cache_capacity=cache))
@@ -122,8 +135,121 @@ def fresh_cluster(sys_, policies, *, replicas, routing, bucket, cache,
     return cluster, store
 
 
+# ------------------------------------------------------------- degradation
+def _recall(sys_, responses):
+    """Mean candidate recall of a response set (None when empty)."""
+    from repro.cluster import candidate_recall
+
+    if not responses:
+        return None
+    ids = np.stack([r.doc_ids for r in responses])
+    qs = np.asarray([r.qid for r in responses])
+    return float(candidate_recall(ids, sys_.log.judged_ids[qs],
+                                  sys_.log.judged_gains[qs]).mean())
+
+
+def run_degradation(sys_, policies, *, n_rep, bucket, cache, volume,
+                    pacing_ms_list=(4.0, 1.0, 0.0)) -> dict:
+    """Offered-load sweep at one finite u budget, ladder vs binary."""
+    from repro.cluster import ServiceLevel, Shed
+    from repro.policies import PolicyStore
+    from repro.serving import EngineConfig, ServeEngine
+    from repro.serving.telemetry import pct
+
+    fallbacks = sys_.fallback_policies()
+    shallow_cap = min(sys_.shallow_u_cap(c) for c in fallbacks)
+    stream = skewed_stream(sys_.log, volume, seed=23)
+    warm_stream = np.concatenate([head_once(sys_.log),
+                                  skewed_stream(sys_.log, volume // 4,
+                                                seed=29)])
+    # The budget is sized from the LEARNED full-cost estimates after
+    # the first warm pass — a few concurrent FULL rollouts per replica
+    # saturate it, so a no-pacing burst genuinely pressures the ledger
+    # (a static budget either never binds or binds the warm pass too).
+    budget = None
+    section = {"n_replicas": n_rep, "loads": {}}
+    full_parity_checked = 0
+    for pacing_ms in pacing_ms_list:
+        row = {}
+        for mode in ("ladder", "binary"):
+            cluster, _ = fresh_cluster(
+                sys_, policies, replicas=n_rep, routing="queue_aware",
+                bucket=bucket, cache=cache, ladder=(mode == "ladder"),
+                fallbacks=fallbacks, prior_shallow_u=float(shallow_cap))
+            cluster.start()
+            # warm at an open ledger (places owners / fills caches so
+            # the CACHED_ONLY rung is real), then tighten the budget
+            drive(cluster, warm_stream, pacing_ms / 1e3)
+            if budget is None:
+                est = cluster.admission.estimator
+                est_med = float(np.median(
+                    [est.estimate(int(q)) for q in stream]))
+                budget = max(4.0 * est_med * n_rep, 8.0 * shallow_cap)
+                section["u_inflight_budget"] = budget
+                section["est_med_full"] = est_med
+            cluster.admission.u_inflight_budget = budget
+            res, tk, wall = drive(cluster, stream, pacing_ms / 1e3)
+            cluster.stop(drain=True)
+            served = [r for r in res if not isinstance(r, Shed)]
+            lat = [t.latency_s for t, r in zip(tk, res)
+                   if not isinstance(r, Shed)]
+            shallow = [r for r in served if r.level == ServiceLevel.SHALLOW]
+            row[mode] = {
+                "wall_s": wall,
+                "qps": len(res) / wall,
+                "latency_p50_ms": pct(lat, 0.50) * 1e3,
+                "latency_p99_ms": pct(lat, 0.99) * 1e3,
+                "served_fraction": len(served) / len(res),
+                "mix": {l.name: sum(t.level == l for t in tk)
+                        for l in ServiceLevel},
+                "recall_served": _recall(sys_, served),
+                "recall_shallow": _recall(sys_, shallow),
+                "n_shallow": len(shallow),
+                "admission": cluster.stats()["admission"],
+            }
+            if mode == "ladder" and pacing_ms == pacing_ms_list[0]:
+                # FULL-level responses must be bit-identical to a plain
+                # single-engine serve (the pre-ladder reference path).
+                # Checked at the LIGHTEST load, where FULL rollouts
+                # dominate — at the burst the watermark throttles FULL
+                # grants and the sample could be empty, making the
+                # check vacuous.
+                sample = [r for r in served
+                          if r.level == ServiceLevel.FULL and not r.cached
+                          ][:16]
+                assert sample, "no non-cached FULL responses to verify"
+                ref_store = PolicyStore(staleness_bound=2)
+                ref_store.publish(dict(policies))
+                ref = ServeEngine(sys_, ref_store, EngineConfig(
+                    min_bucket=bucket, max_bucket=bucket, cache_capacity=0))
+                for r, rr in zip(sample, ref.serve([r.qid for r in sample])):
+                    np.testing.assert_array_equal(r.doc_ids, rr.doc_ids)
+                    assert r.u == rr.u, f"FULL u diverged for qid {r.qid}"
+                full_parity_checked = len(sample)
+        # the ladder never serves less than binary shedding
+        assert row["ladder"]["served_fraction"] >= \
+            row["binary"]["served_fraction"], row
+        key = f"pacing_{pacing_ms:g}ms"
+        section["loads"][key] = row
+        for mode in ("ladder", "binary"):
+            m = row[mode]
+            print(f"cluster_bench.degradation.{key}.{mode}."
+                  f"served_fraction,{m['served_fraction']:.3f}")
+            print(f"cluster_bench.degradation.{key}.{mode}."
+                  f"p99_ms,{m['latency_p99_ms']:.2f}")
+        print(f"cluster_bench.degradation.{key}.ladder.mix,"
+              f"{row['ladder']['mix']}")
+    # at the burst (heaviest load) the ladder strictly wins
+    burst = section["loads"][f"pacing_{pacing_ms_list[-1]:g}ms"]
+    assert burst["ladder"]["served_fraction"] > \
+        burst["binary"]["served_fraction"], burst
+    section["full_parity_checked"] = full_parity_checked
+    return section
+
+
 def main(fast: bool = False, replicas_list=(1, 2, 4),
-         pacing_ms: float = 8.0, repeats: int = 3) -> dict:
+         pacing_ms: float = 8.0, repeats: int = 3,
+         degradation_only: bool = False) -> dict:
     from benchmarks.serve_bench import build_system
     from repro.cluster import TrainerConfig, TrainerLoop
 
@@ -151,6 +277,20 @@ def main(fast: bool = False, replicas_list=(1, 2, 4),
 
     out = {"volume": volume, "pacing_ms": pacing_ms, "repeats": repeats,
            "configs": {}}
+
+    if degradation_only:
+        out["degradation"] = run_degradation(
+            sys_, policies, n_rep=max(replicas_list), bucket=bucket,
+            cache=cache, volume=volume,
+            pacing_ms_list=(4.0, 0.0) if fast else (4.0, 1.0, 0.0))
+        from benchmarks._results import record
+        record("cluster_bench_degradation",
+               config={"fast": fast, "n_docs": n_docs,
+                       "n_queries": n_queries,
+                       "replicas": max(replicas_list), "volume": volume,
+                       "bucket": bucket},
+               metrics=out["degradation"])
+        return out
 
     # ------------------------------------------- 1. routing x replicas
     # p99 on an oversubscribed CPU box is noisy, so the routers are
@@ -229,6 +369,11 @@ def main(fast: bool = False, replicas_list=(1, 2, 4),
     out["admission"] = m
     print(f"cluster_bench.admission.shed_rate,{m['shed_rate']:.3f}")
 
+    # ------------------------------------------------ 4. degradation
+    out["degradation"] = run_degradation(
+        sys_, policies, n_rep=n_rep, bucket=bucket, cache=cache,
+        volume=volume, pacing_ms_list=(4.0, 0.0) if fast else (4.0, 1.0, 0.0))
+
     from benchmarks._results import record
     record("cluster_bench",
            config={"fast": fast, "n_docs": n_docs, "n_queries": n_queries,
@@ -246,7 +391,11 @@ if __name__ == "__main__":
     ap.add_argument("--pacing-ms", type=float, default=8.0)
     ap.add_argument("--repeats", type=int, default=3,
                     help="timed runs per config (median p99 reported)")
+    ap.add_argument("--degradation-only", action="store_true",
+                    help="run only the ladder-vs-binary degradation sweep "
+                         "(make degrade-bench)")
     a = ap.parse_args()
     main(fast=a.fast,
          replicas_list=tuple(int(x) for x in a.replicas.split(",")),
-         pacing_ms=a.pacing_ms, repeats=a.repeats)
+         pacing_ms=a.pacing_ms, repeats=a.repeats,
+         degradation_only=a.degradation_only)

@@ -71,6 +71,7 @@ def main() -> None:
     cluster = ReplicaSet(
         sys_, store, ClusterConfig(n_replicas=2, routing="queue_aware"),
         EngineConfig(min_bucket=8, max_bucket=32, cache_capacity=512))
+    trainer.source = cluster.tap      # train from served traffic, not the log
     cluster.warmup()
 
     rng = np.random.default_rng(0)
@@ -111,6 +112,8 @@ def main() -> None:
     assert len(versions) >= 3, f"expected >= 3 versions, saw {versions}"
     assert stats["n_submitted"] == stats["n_responses"] + stats["n_shed"], \
         "dropped queries"
+    assert trainer.tap_batches > 0 and trainer.log_batches == 0, \
+        "trainer must train from served traffic only"
     assert stats["version_lag_observed_max"] <= STALENESS_BOUND, \
         "served beyond the staleness bound"
     for a, b in zip(recalls, recalls[1:]):

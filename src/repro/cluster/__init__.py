@@ -1,21 +1,28 @@
 """Online learning cluster (docs/cluster.md).
 
-A background `TrainerLoop` publishes versioned policy snapshots into a
-shared `PolicyStore` while a `ReplicaSet` of N `ServeEngine` replicas
-serves continuously — queue-aware/cache-affinity routing in front,
-u-budget admission control (explicit `Shed` results) at the door,
-per-response policy-version-lag accounting throughout.
+A background `TrainerLoop` publishes versioned policy snapshots (live
+policies + their SHALLOW fallbacks, atomically) into a shared
+`PolicyStore` while a `ReplicaSet` of N `ServeEngine` replicas serves
+continuously — queue-aware/cache-affinity routing in front, a
+pressure-tiered admission ladder (FULL → SHALLOW → CACHED_ONLY →
+explicit `Shed`) priced in u at the door, per-response policy-version
+lag accounting throughout, and a `ServedTrafficTap` feeding the
+trainer the queries the fleet actually served.
 """
-from .admission import AdmissionController, Shed, UCostEstimator
+from repro.serving.levels import ServiceLevel
+
+from .admission import Admission, AdmissionController, Shed, UCostEstimator
 from .cluster import ClusterConfig, ReplicaSet
 from .replica import ClusterTicket, Replica
 from .router import (QueueAwareRouter, RoundRobinRouter, Router, make_router,
                      stable_query_hash)
+from .tap import ServedTrafficTap
 from .trainer import TrainerConfig, TrainerLoop, candidate_recall, probe_recall
 
 __all__ = [
-    "AdmissionController", "ClusterConfig", "ClusterTicket",
+    "Admission", "AdmissionController", "ClusterConfig", "ClusterTicket",
     "QueueAwareRouter", "Replica", "ReplicaSet", "RoundRobinRouter",
-    "Router", "Shed", "TrainerConfig", "TrainerLoop", "UCostEstimator",
-    "candidate_recall", "make_router", "probe_recall", "stable_query_hash",
+    "Router", "ServedTrafficTap", "ServiceLevel", "Shed", "TrainerConfig",
+    "TrainerLoop", "UCostEstimator", "candidate_recall", "make_router",
+    "probe_recall", "stable_query_hash",
 ]

@@ -1,33 +1,45 @@
-"""u-budget admission control: estimate a query's index cost, shed when hot.
+"""Pressure-tiered admission: price queries in u, degrade before shedding.
 
 The paper prices query evaluation in u — posting-plane block reads —
 and shows it linear in machine time, so u is the honest unit for load
 control too: a fleet saturates when the *sum of u being evaluated*
 exceeds what the index machines stream, not when some request counter
-does.  The :class:`AdmissionController` therefore keeps a reservation
-ledger in u: every admitted query reserves its *estimated* cost, every
-completion releases it (and feeds the actual u back into the
-estimator), and a submit that would push the reserved total past the
-fleet budget is rejected with an explicit :class:`Shed` result instead
-of being queued into a latency collapse.
+does.  The :class:`AdmissionController` keeps a reservation ledger in
+u, and instead of the binary admit/shed hammer it walks a **service
+ladder** priced from the ledger's headroom (docs/cluster.md):
+
+    FULL         while reservations stay under ``full_watermark`` of
+                 the budget — normal serving, live policy.
+    SHALLOW      while the (much smaller) shallow estimate still fits
+                 the full budget — the snapshot's truncated static
+                 plan, u bounded by its summed Δu quotas.
+    CACHED_ONLY  when not even a shallow rollout fits but some
+                 replica's result cache already holds the key (~zero u).
+    SHED         explicit non-response, the valve of last resort.
 
 Estimates come from the query's *pre-execution* features — the same
 ones the paper's query categorizer uses (category, term document
 frequencies): rare-term CAT1 queries force deep scans, head-df CAT2
 queries satisfy their quotas early.  :class:`UCostEstimator` buckets
 queries by (category, df-decile) and tracks an EMA of observed u per
-bucket, seeded with a configurable prior so cold buckets are priced
-pessimistically rather than admitted for free.
+bucket **per executed service level and per policy snapshot version**:
+every served response feeds its realized u back, so the table is
+learned online from the traffic the fleet actually serves — a new
+policy version starts from the previous version's estimates as its
+prior and re-learns its own costs (a deeper-scanning v7 must not be
+priced with v6's numbers).
 """
 from __future__ import annotations
 
 import dataclasses
 import threading
-from typing import Optional, Tuple
+from typing import Dict, Optional, Tuple
 
 import numpy as np
 
-__all__ = ["Shed", "UCostEstimator", "AdmissionController"]
+from repro.serving.levels import EXECUTED_LEVELS, ServiceLevel
+
+__all__ = ["Admission", "Shed", "UCostEstimator", "AdmissionController"]
 
 
 @dataclasses.dataclass(frozen=True)
@@ -39,18 +51,39 @@ class Shed:
     reason: str
 
 
+@dataclasses.dataclass(frozen=True)
+class Admission:
+    """One ladder decision: the granted level and what it reserved."""
+    level: ServiceLevel
+    est_u: float          # FULL-level estimate at decision time
+    reserved_u: float     # what the ledger now holds for this query
+
+
 class UCostEstimator:
-    """(category, df-decile) -> EMA of observed u, with a prior.
+    """(level, category, df-decile) -> EMA of observed u, versioned per
+    policy snapshot.
 
     The df feature is the mean body-field document frequency of the
     query's terms as a fraction of the corpus (exactly the signal
     ``data.querylog.classify_query`` categorizes on); bucket edges are
     quantiles of that feature over the whole query log, so buckets are
     equal-mass.
+
+    Version semantics: tables are keyed by the policy snapshot version
+    that produced the observation.  A version's table is lazily seeded
+    from the latest earlier version's *values* (so cold buckets inherit
+    a sensible estimate) with its sample counts reset — the first
+    observation under the new policy replaces the inherited value, the
+    way the first observation replaces the configured prior at version
+    0.  ``estimate`` reads the latest version by default, i.e. the
+    policy the fleet is converging onto.  Only the last
+    ``max_versions`` tables are retained.
     """
 
     def __init__(self, system, n_df_bins: int = 8, ema: float = 0.25,
-                 prior_u: Optional[float] = None):
+                 prior_u: Optional[float] = None,
+                 prior_shallow_u: Optional[float] = None,
+                 max_versions: int = 4):
         log, index = system.log, system.index
         df_body = index.df[:, 2].astype(np.float64)       # body field
         mean_df = np.zeros(log.n_queries)
@@ -64,86 +97,225 @@ class UCostEstimator:
         n_cats = int(self._category.max()) + 1
         if prior_u is None:
             # Half the episode budget: pessimistic enough that a cold
-            # fleet sheds under a thundering herd, cheap to correct.
+            # fleet degrades under a thundering herd, cheap to correct.
             prior_u = system.cfg.u_budget / 2
+        if prior_shallow_u is None:
+            # The shallow fallback has a hard cap (summed Δu quotas of
+            # the truncated plan); without one configured, assume a
+            # quarter of the full prior.
+            prior_shallow_u = prior_u / 4
         self.prior_u = float(prior_u)
+        self.prior_shallow_u = float(prior_shallow_u)
         self.ema = float(ema)
-        self._table = np.full((n_cats, n_df_bins), self.prior_u)
-        self._seen = np.zeros((n_cats, n_df_bins), dtype=np.int64)
+        self.max_versions = int(max_versions)
+        self._shape = (len(EXECUTED_LEVELS), n_cats, n_df_bins)
+        self._tables: Dict[int, np.ndarray] = {}
+        self._seen: Dict[int, np.ndarray] = {}
         self._lock = threading.Lock()
+        self._init_version(0)
 
+    # ---------------------------------------------------------- versions
+    def _init_version(self, version: int) -> None:
+        """Create the table for ``version`` (caller holds no lock for
+        version 0; otherwise the estimator lock)."""
+        if self._tables:
+            base = max((v for v in self._tables if v <= version),
+                       default=max(self._tables))
+            table = self._tables[base].copy()
+        else:
+            table = np.empty(self._shape)
+            table[int(ServiceLevel.FULL)] = self.prior_u
+            table[int(ServiceLevel.SHALLOW)] = self.prior_shallow_u
+        self._tables[version] = table
+        self._seen[version] = np.zeros(self._shape, dtype=np.int64)
+        while len(self._tables) > self.max_versions:
+            oldest = min(self._tables)
+            del self._tables[oldest], self._seen[oldest]
+
+    @property
+    def latest_version(self) -> int:
+        return max(self._tables)
+
+    def _resolve(self, version: Optional[int]) -> int:
+        if version is None:
+            return max(self._tables)
+        if version in self._tables:
+            return version
+        # an evicted (or never-observed) version reads its nearest
+        # retained predecessor, falling back to the oldest retained
+        older = [v for v in self._tables if v <= version]
+        return max(older) if older else min(self._tables)
+
+    # ---------------------------------------------------------- features
     def features(self, qid: int) -> Tuple[int, int]:
         cat = int(self._category[qid])
         df_bin = int(np.searchsorted(self._edges, self._df_frac[qid]))
         return cat, df_bin
 
-    def estimate(self, qid: int) -> float:
-        cat, df_bin = self.features(qid)
-        return float(self._table[cat, df_bin])
-
-    def observe(self, qid: int, u: float) -> None:
+    def estimate(self, qid: int,
+                 level: ServiceLevel = ServiceLevel.FULL,
+                 version: Optional[int] = None) -> float:
+        if level not in EXECUTED_LEVELS:
+            raise ValueError(f"no u estimate for non-executed level {level!r}")
         cat, df_bin = self.features(qid)
         with self._lock:
-            if self._seen[cat, df_bin] == 0:
-                self._table[cat, df_bin] = float(u)   # drop the prior
+            return float(self._tables[self._resolve(version)][
+                int(level), cat, df_bin])
+
+    def estimates(self, qid: int,
+                  version: Optional[int] = None) -> Tuple[float, float]:
+        """(FULL, SHALLOW) estimates in one feature lookup and one lock
+        acquisition — the admission hot path prices both rungs."""
+        cat, df_bin = self.features(qid)
+        with self._lock:
+            col = self._tables[self._resolve(version)][:, cat, df_bin]
+            return (float(col[int(ServiceLevel.FULL)]),
+                    float(col[int(ServiceLevel.SHALLOW)]))
+
+    def observe(self, qid: int, u: float,
+                level: ServiceLevel = ServiceLevel.FULL,
+                version: Optional[int] = None) -> None:
+        """Feed one served response's realized u back (online learning
+        from the traffic the fleet actually serves)."""
+        if level not in EXECUTED_LEVELS:
+            return                       # cached/shed responses cost no u
+        cat, df_bin = self.features(qid)
+        with self._lock:
+            if version is None:
+                version = max(self._tables)
+            elif version not in self._tables:
+                if version < min(self._tables):
+                    return               # older than anything retained
+                self._init_version(version)
+            idx = (int(level), cat, df_bin)
+            table, seen = self._tables[version], self._seen[version]
+            if seen[idx] == 0:
+                table[idx] = float(u)    # drop the (inherited) prior
             else:
-                self._table[cat, df_bin] += self.ema * (
-                    float(u) - self._table[cat, df_bin])
-            self._seen[cat, df_bin] += 1
+                table[idx] += self.ema * (float(u) - table[idx])
+            seen[idx] += 1
 
     def describe(self) -> dict:
-        return {
-            "n_df_bins": self._table.shape[1],
-            "prior_u": self.prior_u,
-            "buckets_seen": int((self._seen > 0).sum()),
-            "table": self._table.round(1).tolist(),
-        }
+        with self._lock:
+            latest = max(self._tables)
+            return {
+                "n_df_bins": self._shape[2],
+                "prior_u": self.prior_u,
+                "prior_shallow_u": self.prior_shallow_u,
+                "versions": sorted(self._tables),
+                "buckets_seen": int((self._seen[latest] > 0).sum()),
+                "table": self._tables[latest].round(1).tolist(),
+            }
 
 
 class AdmissionController:
-    """Fleet-wide u reservation ledger with shedding.
+    """Fleet-wide u reservation ledger pricing the service ladder.
 
-    ``try_admit`` reserves the query's estimated u and returns it; when
-    the reservation would exceed ``u_inflight_budget`` it returns
-    ``None`` (the caller builds the :class:`Shed`).  A query whose
-    estimate alone exceeds the budget is still admitted when the fleet
-    is idle — otherwise it could never run at all.  ``release`` returns
-    the reservation and, given the actual u, improves the estimator.
+    ``decide`` walks the ladder against the ledger's headroom and
+    reserves what the granted level will cost; ``release`` returns the
+    reservation and, given the realized u, improves the estimator for
+    the (level, snapshot-version) that produced it.  Two shapes:
+
+    - **ladder** (default): FULL while reservations stay under
+      ``full_watermark * budget`` (so FULL traffic can never starve the
+      degraded tiers of headroom), SHALLOW while the shallow estimate
+      fits the whole budget, CACHED_ONLY when the caller reports a
+      cache entry exists, SHED last.  An idle fleet always grants FULL
+      (otherwise an oversized query could never run at all).
+    - **binary** (``ladder=False``): the pre-ladder behaviour — FULL if
+      the estimate fits, SHED otherwise — kept as the benchmark
+      baseline the degradation sweep compares against.
     """
 
     def __init__(self, estimator: UCostEstimator,
-                 u_inflight_budget: float = float("inf")):
+                 u_inflight_budget: float = float("inf"),
+                 ladder: bool = True,
+                 full_watermark: float = 0.5):
         if u_inflight_budget <= 0:
             raise ValueError("u_inflight_budget must be > 0")
+        if not 0.0 < full_watermark <= 1.0:
+            raise ValueError("full_watermark must be in (0, 1]")
         self.estimator = estimator
         self.u_inflight_budget = float(u_inflight_budget)
+        self.ladder = bool(ladder)
+        self.full_watermark = float(full_watermark)
         self._lock = threading.Lock()
         self.reserved_u = 0.0
         self.admitted = 0
         self.shed = 0
+        self.level_counts: Dict[int, int] = {int(l): 0 for l in ServiceLevel}
 
-    def try_admit(self, qid: int) -> Optional[float]:
-        est = self.estimator.estimate(qid)
+    # -------------------------------------------------------------- decide
+    def decide(self, qid: int, cache_available: bool = False,
+               shallow_available: bool = True) -> Admission:
+        """Price one query against the ledger; reserves the granted
+        level's estimated u and returns the :class:`Admission`.  The
+        caller reports whether some replica's result cache holds the
+        query's key (the CACHED_ONLY rung is only real if it does) and
+        whether the serving snapshot carries a fallback policy for the
+        query's category (no fallback — no SHALLOW rung)."""
+        est_full, est_shallow = self.estimator.estimates(qid)
+        budget = self.u_inflight_budget
         with self._lock:
-            if self.reserved_u > 0 and self.reserved_u + est > self.u_inflight_budget:
+            if not self.ladder:
+                # binary baseline: PR-4 semantics, verbatim
+                if (self.reserved_u > 0
+                        and self.reserved_u + est_full > budget):
+                    level, reserve = ServiceLevel.SHED, 0.0
+                else:
+                    level, reserve = ServiceLevel.FULL, est_full
+            else:
+                # The watermark exists to keep reservation headroom for
+                # the SHALLOW rung; with no fallback for this query the
+                # FULL rung may use the whole budget (capping it there
+                # would make the ladder serve strictly LESS than the
+                # binary controller it replaced).  CACHED_ONLY reserves
+                # nothing, so it needs no protected headroom.
+                full_cap = (self.full_watermark * budget
+                            if shallow_available else budget)
+                if (self.reserved_u == 0
+                        or self.reserved_u + est_full <= full_cap):
+                    # idle fleets always serve FULL; busy fleets only
+                    # while FULL traffic leaves the degraded tiers
+                    # their headroom
+                    level, reserve = ServiceLevel.FULL, est_full
+                elif (shallow_available
+                        and self.reserved_u + est_shallow <= budget):
+                    level, reserve = ServiceLevel.SHALLOW, est_shallow
+                elif cache_available:
+                    level, reserve = ServiceLevel.CACHED_ONLY, 0.0
+                else:
+                    level, reserve = ServiceLevel.SHED, 0.0
+            self.reserved_u += reserve
+            self.level_counts[int(level)] += 1
+            if level == ServiceLevel.SHED:
                 self.shed += 1
-                return None
-            self.reserved_u += est
-            self.admitted += 1
-            return est
+            else:
+                self.admitted += 1
+            return Admission(level=level, est_u=est_full, reserved_u=reserve)
 
-    def release(self, est_u: float, actual_u: Optional[float] = None,
-                qid: Optional[int] = None) -> None:
+    def release(self, reserved_u: float, actual_u: Optional[float] = None,
+                qid: Optional[int] = None,
+                level: ServiceLevel = ServiceLevel.FULL,
+                version: Optional[int] = None) -> None:
+        """Return a reservation; with the realized u (non-cached
+        responses only), feed the estimator for the (level, snapshot
+        version) that served it."""
         with self._lock:
-            self.reserved_u = max(0.0, self.reserved_u - est_u)
+            self.reserved_u = max(0.0, self.reserved_u - reserved_u)
         if actual_u is not None and qid is not None:
-            self.estimator.observe(qid, actual_u)
+            self.estimator.observe(qid, actual_u, level=level,
+                                   version=version)
 
     def stats(self) -> dict:
         with self._lock:
             return {
                 "u_inflight_budget": self.u_inflight_budget,
+                "ladder": self.ladder,
+                "full_watermark": self.full_watermark,
                 "reserved_u": self.reserved_u,
                 "admitted": self.admitted,
                 "shed": self.shed,
+                "levels": {ServiceLevel(k).name: v
+                           for k, v in sorted(self.level_counts.items())},
             }

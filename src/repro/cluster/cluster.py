@@ -2,20 +2,28 @@
 
 Topology (docs/cluster.md has the full diagram):
 
-    TrainerLoop ──publish──► PolicyStore ◄──snapshot── Replica 0..N-1
-                                                        ▲
-    submit ─► AdmissionController ─► Router ─► inbox ───┘
-              (u-budget shed)        (affinity + depth spill)
+    TrainerLoop ◄──sample── ServedTrafficTap ◄──record── completions
+        │ publish (policies + fallbacks)
+        ▼
+    PolicyStore ◄──snapshot── Replica 0..N-1
+                                  ▲
+    submit ─► AdmissionController ─► Router ─► inbox
+              (service ladder:       (affinity + depth spill
+               FULL/SHALLOW/          + owner-saturation spill)
+               CACHED_ONLY/SHED)
 
 One `RetrievalSystem` (the index is process-shared and read-only) backs
 N `ServeEngine` replicas, each with its own worker thread, micro-batch
 queues, and result cache.  `submit` estimates the query's u-cost from
-its category/df features, sheds with an explicit `Shed` when the
-fleet's reserved u is past budget, and otherwise routes by cache
-affinity + queue depth.  Completions release the u reservation, feed
-the actual u back into the estimator, and record the response's policy
-version lag (head version minus serving version — bounded by the
-store's staleness check, surfaced in `stats()`).
+its category/df features and walks the admission ladder against the
+fleet ledger's headroom: FULL while reservations are comfortable,
+SHALLOW (the snapshot's bounded-u fallback plan) under pressure,
+CACHED_ONLY when not even that fits but a replica's cache holds the
+key, and an explicit `Shed` only as the last rung.  Completions
+release the u reservation, feed the realized u back into the
+(per-level, per-snapshot-version) estimator, record the response's
+policy version lag (bounded by the store's staleness check, surfaced
+in `stats()`), and land in the `ServedTrafficTap` the trainer samples.
 """
 from __future__ import annotations
 
@@ -27,7 +35,7 @@ from typing import Deque, List, Optional, Sequence, Union
 import numpy as np
 
 from repro.policies import PolicyStore
-from repro.serving import EngineConfig
+from repro.serving import EngineConfig, ServiceLevel
 from repro.serving.cache import canonical_query_key
 from repro.serving.engine import ServeResponse
 
@@ -36,6 +44,7 @@ from repro.serving.telemetry import pct as _pct
 from .admission import AdmissionController, Shed, UCostEstimator
 from .replica import ClusterTicket, Replica
 from .router import make_router, stable_query_hash
+from .tap import ServedTrafficTap
 
 __all__ = ["ClusterConfig", "ReplicaSet"]
 
@@ -47,11 +56,17 @@ class ClusterConfig:
     n_replicas: int = 2
     routing: str = "queue_aware"          # or "round_robin"
     spill_margin: int = 4                 # depth gap before spilling
+    owner_spill_depth: Optional[int] = 32  # sticky-owner saturation gauge
     u_inflight_budget: float = float("inf")   # fleet u budget (inf = no shed)
-    prior_u: Optional[float] = None       # cold-bucket u estimate
+    ladder: bool = True                   # graceful degradation (False = binary)
+    full_watermark: float = 0.5           # budget fraction FULL may reserve
+    prior_u: Optional[float] = None       # cold-bucket u estimate (FULL)
+    prior_shallow_u: Optional[float] = None   # cold-bucket estimate (SHALLOW)
     n_df_bins: int = 8
     window: int = 65536                   # lag/latency sample window
     affinity_table: int = 65536           # key -> cache-owner LRU entries
+    tap_capacity: int = 8192              # served-traffic window per category
+    tap_degraded_boost: float = 2.0       # tap weight for non-FULL tickets
 
 
 class ReplicaSet:
@@ -65,11 +80,19 @@ class ReplicaSet:
         self.system = system
         self.store = store
         self.cfg = cfg
-        self.router = make_router(cfg.routing, spill_margin=cfg.spill_margin)
+        self.router = make_router(cfg.routing, spill_margin=cfg.spill_margin,
+                                  owner_spill_depth=cfg.owner_spill_depth)
         self.admission = AdmissionController(
             UCostEstimator(system, n_df_bins=cfg.n_df_bins,
-                           prior_u=cfg.prior_u),
-            u_inflight_budget=cfg.u_inflight_budget)
+                           prior_u=cfg.prior_u,
+                           prior_shallow_u=cfg.prior_shallow_u),
+            u_inflight_budget=cfg.u_inflight_budget,
+            ladder=cfg.ladder, full_watermark=cfg.full_watermark)
+        # Every completion (responses AND sheds) is recorded here; a
+        # TrainerLoop pointed at it learns from served traffic instead
+        # of the query log (docs/cluster.md, "trainer tap").
+        self.tap = ServedTrafficTap(capacity=cfg.tap_capacity,
+                                    degraded_boost=cfg.tap_degraded_boost)
         self.replicas: List[Replica] = [
             Replica(i, system, store, engine_cfg,
                     on_complete=self._on_complete)
@@ -112,36 +135,58 @@ class ReplicaSet:
 
     # ------------------------------------------------------------- submit
     def submit(self, qid: int) -> ClusterTicket:
-        """Route one query; always returns a ticket that completes with
-        either a ServeResponse or an explicit Shed — never drops."""
+        """Admit one query down the service ladder and route it; always
+        returns a ticket that completes with either a ServeResponse or
+        an explicit Shed — never drops."""
         qid = int(qid)
         cat = int(self.system.log.category[qid])
         key = canonical_query_key(self.system.log.terms[qid], cat)
         ticket = ClusterTicket(qid, cat, cache_key=key)
         with self._lock:
             self.n_submitted += 1
-        est = self.admission.try_admit(qid)
-        if est is None:
-            with self._lock:
-                self.n_shed += 1
-            ticket.est_u = self.admission.estimator.estimate(qid)
-            ticket.complete(Shed(qid, cat, ticket.est_u, "u_budget_hot"))
-            return ticket
-        ticket.est_u = est
-        with self._lock:
             owner = self._key_owner.get(key)
-        # Sticky routing only pays while the owner's result cache still
-        # holds the key (the repeat is ~free there); once evicted, the
-        # request must load-balance like any other miss — pinning
-        # evicted keys to a busy owner is exactly how tails grow.
+        # Sticky routing (and the CACHED_ONLY rung) only pay while the
+        # owner's result cache still holds the key (the repeat is ~free
+        # there); once evicted, the request must load-balance like any
+        # other miss — pinning evicted keys to a busy owner is exactly
+        # how tails grow.
         if owner is not None and not self.replicas[owner].engine.cache.contains(key):
             owner = None
-        # The sticky path (the common case under a hot head) never
-        # consults depths, so skip the per-replica gauge sweep there;
-        # routers only use len(depths) when an owner is given.
-        depths = ([0] * len(self.replicas) if owner is not None
-                  else [r.depth() for r in self.replicas])
-        idx = self.router.pick(stable_query_hash(key), depths, owner)
+        # The SHALLOW rung is only real if the head snapshot ships a
+        # fallback policy for this category (they travel together).
+        adm = self.admission.decide(
+            qid, cache_available=owner is not None,
+            shallow_available=cat in self.store.snapshot().fallbacks)
+        ticket.est_u = adm.est_u
+        ticket.reserved_u = adm.reserved_u
+        ticket.level = adm.level
+        if adm.level == ServiceLevel.SHED:
+            with self._lock:
+                self.n_shed += 1
+            self.tap.record(qid, cat, ServiceLevel.SHED)
+            ticket.complete(Shed(qid, cat, adm.est_u, "u_budget_hot"))
+            return ticket
+        if adm.level == ServiceLevel.CACHED_ONLY:
+            # only priced when the owner's cache holds the key; route
+            # straight there — no other replica can serve it for ~0 u
+            idx = owner
+        else:
+            # The sticky path (the common case under a hot head) needs
+            # only the owner's gauge, so skip the per-replica sweep
+            # unless the router itself says it will need real depths
+            # (owner absent, or saturated past its spill threshold).
+            if (owner is not None
+                    and not self.router.wants_full_depths(
+                        d_owner := self.replicas[owner].depth())):
+                depths = [0] * len(self.replicas)
+                depths[owner] = d_owner
+            else:
+                depths = [r.depth() for r in self.replicas]
+                if owner is not None:
+                    # keep the router's decision consistent with the
+                    # gauge that just crossed the threshold
+                    depths[owner] = d_owner
+            idx = self.router.pick(stable_query_hash(key), depths, owner)
         with self._lock:
             self._key_owner[key] = idx
             self._key_owner.move_to_end(key)
@@ -170,17 +215,25 @@ class ReplicaSet:
     # --------------------------------------------------------- completion
     def _on_complete(self, ticket: ClusterTicket, result: Result) -> None:
         if isinstance(result, ServeResponse):
-            self.admission.release(ticket.est_u, actual_u=result.u,
-                                   qid=ticket.qid)
+            # Cached responses replay a previous rollout's u — only a
+            # fresh execution is a realized observation the estimator
+            # should learn from (at the level+version that produced it).
+            self.admission.release(
+                ticket.reserved_u,
+                actual_u=None if result.cached else result.u,
+                qid=ticket.qid, level=result.level,
+                version=result.policy_version)
             lag = max(0, self.store.version - result.policy_version)
             with self._lock:
                 self.n_responses += 1
                 self._lags.append(lag)
                 self._latencies.append(ticket.latency_s)
+            self.tap.record(ticket.qid, ticket.category, ticket.level)
         else:  # shed inside the replica (queue full / shutdown / error)
-            self.admission.release(ticket.est_u)
+            self.admission.release(ticket.reserved_u)
             with self._lock:
                 self.n_shed += 1
+            self.tap.record(ticket.qid, ticket.category, ServiceLevel.SHED)
 
     # -------------------------------------------------------------- stats
     def version_lag(self) -> dict:
@@ -210,6 +263,7 @@ class ReplicaSet:
             "n_responses": n_resp,
             "n_shed": n_shed,
             "shed_rate": n_shed / n_sub if n_sub else 0.0,
+            "served_fraction": n_resp / n_sub if n_sub else 0.0,
             "latency_p50_ms": _pct(lat, 0.50) * 1e3,
             "latency_p99_ms": _pct(lat, 0.99) * 1e3,
             "version_lag_observed_max": lag["observed_max"],
@@ -218,5 +272,6 @@ class ReplicaSet:
             "head_version": lag["head_version"],
             "router": self.router.stats(),
             "admission": self.admission.stats(),
+            "tap": self.tap.stats(),
             "replicas": [r.summary() for r in self.replicas],
         }

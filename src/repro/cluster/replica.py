@@ -23,7 +23,8 @@ from collections import deque
 from typing import Callable, Dict, Optional, Union
 
 from repro.policies import StalePolicyError
-from repro.serving import AdmissionError, EngineConfig, ServeEngine
+from repro.serving import (AdmissionError, CacheOnlyMiss, EngineConfig,
+                           ServeEngine, ServiceLevel)
 from repro.serving.engine import ServeResponse
 from repro.serving.telemetry import Telemetry
 
@@ -38,11 +39,14 @@ class ClusterTicket:
     """Cluster-level future for one submitted query."""
 
     def __init__(self, qid: int, category: int, est_u: float = 0.0,
-                 cache_key=None):
+                 cache_key=None,
+                 level: ServiceLevel = ServiceLevel.FULL):
         self.qid = qid
         self.category = category
         self.est_u = est_u
         self.cache_key = cache_key
+        self.level = level            # admission's ladder decision
+        self.reserved_u = 0.0         # what the ledger holds for us
         self.replica: Optional[int] = None
         self.t_submit = Telemetry.now()
         self.t_done: Optional[float] = None
@@ -183,10 +187,17 @@ class Replica:
 
     def _submit_one(self, ticket: ClusterTicket) -> None:
         try:
-            rid = self.engine.submit(ticket.qid)
+            rid = self.engine.submit(ticket.qid, ticket.level)
         except AdmissionError:
             self._finish(ticket, Shed(ticket.qid, ticket.category,
                                       ticket.est_u, "replica_queue_full"))
+            return
+        except CacheOnlyMiss:
+            # An eviction raced the cluster's CACHED_ONLY routing
+            # decision; there is no u reservation to roll out with, so
+            # the ladder's last rung applies.
+            self._finish(ticket, Shed(ticket.qid, ticket.category,
+                                      ticket.est_u, "cached_only_miss"))
             return
         except StalePolicyError:
             # A publish raced between the submit-time refresh and the

@@ -44,6 +44,15 @@ class Router:
              owner: Optional[int] = None) -> int:
         raise NotImplementedError
 
+    def wants_full_depths(self, owner_depth: int) -> bool:
+        """Whether ``pick`` will need the whole fleet's depth snapshot
+        for a request whose cache owner currently carries
+        ``owner_depth`` units of work.  The cluster uses this to skip
+        the per-replica gauge sweep on the sticky fast path; the rule
+        lives HERE so it can never drift from ``pick``'s own
+        sticky-vs-spill decision."""
+        return False
+
     def stats(self) -> dict:
         return {"router": self.name}
 
@@ -60,36 +69,69 @@ class RoundRobinRouter(Router):
 
 
 class QueueAwareRouter(Router):
-    """Cache-owner-sticky, depth-balanced routing.
+    """Cache-owner-sticky, depth-balanced routing with owner-saturation
+    spill.
 
-    A key already routed somewhere goes back to that replica regardless
-    of depth — its result cache makes the repeat nearly free, while a
-    "balanced" miss elsewhere costs a full rollout.  First-seen keys
-    start from their hash-preferred replica and spill to the
-    least-loaded one when the preferred queue is ``spill_margin``
+    A key already routed somewhere goes back to that replica — its
+    result cache makes the repeat nearly free, while a "balanced" miss
+    elsewhere costs a full rollout — UNLESS the owner is saturated: a
+    likely hit queued behind ``owner_spill_depth`` units of pending
+    work pays the owner's whole backlog in latency, which is worse than
+    one balanced-path rollout on an idle neighbour.  Saturated-owner
+    requests therefore fall through to the depth-balanced path (and the
+    cluster records the new pick as the key's owner, so the hot key's
+    cache footprint migrates off the hot replica instead of feeding it).
+
+    First-seen keys start from their hash-preferred replica and spill
+    to the least-loaded one when the preferred queue is ``spill_margin``
     deeper; the cluster then records the pick as the key's owner.
     """
 
     name = "queue_aware"
 
-    def __init__(self, spill_margin: int = 4):
+    def __init__(self, spill_margin: int = 4,
+                 owner_spill_depth: Optional[int] = 32):
         if spill_margin < 0:
             raise ValueError("spill_margin must be >= 0")
+        if owner_spill_depth is not None and owner_spill_depth < 0:
+            raise ValueError("owner_spill_depth must be >= 0 (or None)")
         self.spill_margin = spill_margin
+        self.owner_spill_depth = owner_spill_depth
         self._lock = threading.Lock()
         self.affinity_picks = 0
         self.sticky_picks = 0
         self.spills = 0
+        self.owner_spills = 0
+
+    def wants_full_depths(self, owner_depth: int) -> bool:
+        return (self.owner_spill_depth is not None
+                and owner_depth > self.owner_spill_depth)
 
     def pick(self, key_hash: int, depths: Sequence[int],
              owner: Optional[int] = None) -> int:
         n = len(depths)
+        avoid = None
         if owner is not None and 0 <= owner < n:
+            if not self.wants_full_depths(depths[owner]):
+                with self._lock:
+                    self.sticky_picks += 1
+                return owner
+            # saturated owner: a likely hit is not worth its backlog —
+            # fall through to the depth-balanced first-seen path
             with self._lock:
-                self.sticky_picks += 1
-            return owner
+                self.owner_spills += 1
+            avoid = owner
         pref = key_hash % n
         best = min(range(n), key=depths.__getitem__)
+        if avoid is not None and pref == avoid:
+            # the hash-preferred replica IS the saturated owner; going
+            # back there would make the spill a no-op (unless the whole
+            # fleet is even deeper, in which case best == owner and the
+            # owner genuinely is the least bad choice) — counted as a
+            # spill so stats' pick total stays complete
+            with self._lock:
+                self.spills += 1
+            return best
         if depths[pref] - depths[best] > self.spill_margin:
             with self._lock:
                 self.spills += 1
@@ -103,18 +145,22 @@ class QueueAwareRouter(Router):
         return {
             "router": self.name,
             "spill_margin": self.spill_margin,
+            "owner_spill_depth": self.owner_spill_depth,
             "affinity_picks": self.affinity_picks,
             "sticky_picks": self.sticky_picks,
             "spills": self.spills,
+            "owner_spills": self.owner_spills,
             "spill_rate": self.spills / total if total else 0.0,
         }
 
 
-def make_router(name: str, spill_margin: int = 4) -> Router:
+def make_router(name: str, spill_margin: int = 4,
+                owner_spill_depth: Optional[int] = 32) -> Router:
     if name == "round_robin":
         return RoundRobinRouter()
     if name == "queue_aware":
-        return QueueAwareRouter(spill_margin=spill_margin)
+        return QueueAwareRouter(spill_margin=spill_margin,
+                                owner_spill_depth=owner_spill_depth)
     raise ValueError(
         f"unknown routing policy {name!r}; available: "
         "('queue_aware', 'round_robin')")

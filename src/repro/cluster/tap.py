@@ -1,0 +1,102 @@
+"""Served-traffic tap: the trainer's window onto what the fleet serves.
+
+The paper's policies were trained from production query streams, not
+from a synthetic log sample — the MDP should spend its capacity on the
+queries users actually issue, weighted by how often they issue them.
+:class:`ServedTrafficTap` closes that loop: the cluster records every
+completed ticket (responses AND sheds) into a bounded per-category
+recency window, and the :class:`~repro.cluster.trainer.TrainerLoop`
+draws its training batches from it instead of sampling the query log.
+
+Two properties fall out of the representation:
+
+- **Popularity weighting is free**: hot queries appear in the window
+  once per serve, so sampling the window with replacement reproduces
+  the served popularity distribution (including the result-cache's
+  view of it — cache hits are served traffic too).
+- **Shed awareness**: degraded and shed tickets are recorded with a
+  configurable weight boost.  The queries the fleet could NOT afford
+  to serve fully are exactly where a better match policy pays —
+  upweighting them points the trainer at the pressure.
+"""
+from __future__ import annotations
+
+import threading
+from collections import deque
+from typing import Dict, Optional
+
+import numpy as np
+
+from repro.serving.levels import ServiceLevel
+
+__all__ = ["ServedTrafficTap"]
+
+
+class ServedTrafficTap:
+    """Thread-safe bounded window of served (qid, weight) per category.
+
+    ``record`` is called from replica completion callbacks (and the
+    cluster's submit path for immediate sheds); ``sample`` from the
+    trainer thread.  The window is a recency ring (deque maxlen), so
+    the trainer always learns from the *current* traffic mix, not from
+    the whole history.
+    """
+
+    def __init__(self, capacity: int = 8192, degraded_boost: float = 2.0):
+        if capacity < 1:
+            raise ValueError("capacity must be >= 1")
+        if degraded_boost <= 0:
+            raise ValueError("degraded_boost must be > 0")
+        self.capacity = int(capacity)
+        self.degraded_boost = float(degraded_boost)
+        self._lock = threading.Lock()
+        self._window: Dict[int, deque] = {}       # category -> (qid, w)
+        self.n_recorded = 0
+        self.level_counts: Dict[int, int] = {int(l): 0 for l in ServiceLevel}
+
+    # -------------------------------------------------------------- feed
+    def record(self, qid: int, category: int,
+               level: ServiceLevel = ServiceLevel.FULL) -> None:
+        level = ServiceLevel(level)
+        w = self.degraded_boost if level.degraded else 1.0
+        with self._lock:
+            dq = self._window.get(int(category))
+            if dq is None:
+                dq = self._window[int(category)] = deque(maxlen=self.capacity)
+            dq.append((int(qid), w))
+            self.n_recorded += 1
+            self.level_counts[int(level)] += 1
+
+    # ------------------------------------------------------------ sample
+    def size(self, category: Optional[int] = None) -> int:
+        with self._lock:
+            if category is not None:
+                return len(self._window.get(int(category), ()))
+            return sum(len(dq) for dq in self._window.values())
+
+    def sample(self, category: int, batch: int,
+               rng: np.random.Generator) -> Optional[np.ndarray]:
+        """A weighted with-replacement training batch of qids from the
+        category's served window, or None while the window is empty
+        (the trainer waits or skips — it never falls back to the log)."""
+        with self._lock:
+            dq = self._window.get(int(category))
+            if not dq:
+                return None
+            qids = np.fromiter((q for q, _ in dq), dtype=np.int64, count=len(dq))
+            weights = np.fromiter((w for _, w in dq), dtype=np.float64,
+                                  count=len(dq))
+        return rng.choice(qids, size=int(batch), replace=True,
+                          p=weights / weights.sum())
+
+    def stats(self) -> dict:
+        with self._lock:
+            return {
+                "capacity": self.capacity,
+                "degraded_boost": self.degraded_boost,
+                "n_recorded": self.n_recorded,
+                "window_sizes": {c: len(dq)
+                                 for c, dq in sorted(self._window.items())},
+                "levels": {ServiceLevel(k).name: v
+                           for k, v in sorted(self.level_counts.items())},
+            }

@@ -7,7 +7,18 @@ that trainer: per-category tabular Q-learning epochs
 offline training) run on a background thread, and every
 ``publish_every`` epochs a fresh `{category: TabularQPolicy}` snapshot
 is published into the shared store — the replicas hot-swap to it at
-their next drain.
+their next drain.  Each publish carries the degraded-service
+**fallback policies** in the same snapshot (live policy and its
+SHALLOW fallback hot-swap atomically; see docs/cluster.md).
+
+Training batches come from a **served-traffic tap** when one is wired
+(`source=cluster.tap`): the trainer samples the queries the fleet
+actually served — popularity-weighted by construction, with degraded
+and shed tickets boosted — instead of drawing synthetic samples from
+the query log.  That closes the paper's train-on-live-traffic loop:
+the MDP spends its capacity exactly where serving pressure is.  With
+no tap, the loop falls back to direct query-log sampling (the offline
+shape used by tests and the standalone trainer CLI).
 
 Publishes are **eval-gated** by default (the standard online-promotion
 pattern): each candidate Q-table is scored on a fixed probe set with
@@ -22,6 +33,7 @@ from __future__ import annotations
 
 import dataclasses
 import threading
+import time
 from typing import Dict, List, Optional, Sequence, Tuple
 
 import jax
@@ -32,6 +44,8 @@ from repro.core.rollout import unified_rollout
 from repro.core.telescope import l1_prune
 from repro.data.querylog import CAT1, CAT2
 from repro.policies import Policy, PolicyStore, TabularQPolicy
+
+from .tap import ServedTrafficTap
 
 __all__ = ["TrainerConfig", "TrainerLoop", "candidate_recall", "probe_recall"]
 
@@ -84,21 +98,35 @@ class TrainerConfig:
     probe_queries: int = 32       # probe-set size per category
     keep: int = 100               # L1 prune depth for probe scoring
     publish_initial: bool = True  # publish v1 before any training
+    fallback_plan_len: int = 2    # SHALLOW fallback = plan prefix of this many entries
+    # With a served-traffic source, how long one epoch may wait for the
+    # tap to fill before skipping a category's update (the fleet serves
+    # concurrently, so early epochs briefly race the first responses).
+    wait_for_source_s: float = 30.0
 
 
 class TrainerLoop:
     """Runs ``cfg.iters`` epochs on a daemon thread, publishing every
     ``publish_every`` epochs (plus the initial snapshot), so a full run
-    publishes ``publish_initial + iters // publish_every`` versions."""
+    publishes ``publish_initial + iters // publish_every`` versions.
+
+    ``source`` (a :class:`ServedTrafficTap`, typically
+    ``cluster.tap``) switches training batches from query-log sampling
+    to the cluster's served-traffic stream; it may also be assigned
+    after construction but before :meth:`start` (the cluster is
+    usually built after the trainer's first publish).
+    """
 
     def __init__(self, system, store: PolicyStore,
                  cats: Sequence[int] = (CAT1, CAT2),
-                 cfg: TrainerConfig = TrainerConfig()):
+                 cfg: TrainerConfig = TrainerConfig(),
+                 source: Optional[ServedTrafficTap] = None):
         assert system.bins is not None, "fit_state_bins() first"
         self.system = system
         self.store = store
         self.cats = tuple(cats)
         self.cfg = cfg
+        self.source = source
         rng = np.random.default_rng(cfg.seed)
         self._rng = rng
         self._key = jax.random.key(cfg.seed)
@@ -107,10 +135,17 @@ class TrainerLoop:
         self._q = {c: init_q(system.qcfg) for c in self.cats}
         self._best_q = dict(self._q)
         self._best_score: Dict[int, float] = {c: -np.inf for c in self.cats}
+        # Degraded-service fallbacks ride along with every publish so a
+        # snapshot is always (live policy, its fallback) as one unit.
+        self._fallbacks = system.fallback_policies(
+            self.cats, length=cfg.fallback_plan_len)
         self.probe_qids = {c: self._qids_all[c][: cfg.probe_queries]
                            for c in self.cats}
         self.history: List[dict] = []     # one row per publish
         self.epochs_done = 0
+        self.tap_batches = 0              # batches drawn from the tap
+        self.log_batches = 0              # batches drawn from the query log
+        self.starved_batches = 0          # tap dry past the wait: skipped
         self._stop = threading.Event()
         self._thread: Optional[threading.Thread] = None
         self.error: Optional[BaseException] = None
@@ -137,20 +172,44 @@ class TrainerLoop:
         """Gate + publish the current tables immediately (e.g. to get
         v1 up before replicas construct); returns the version."""
         policies, scores = self._gate()
-        version = self.store.publish(policies)
+        version = self.store.publish(policies, fallbacks=dict(self._fallbacks))
         self.history.append({
             "version": version,
             "epoch": self.epochs_done,
             "probe_recall": {c: scores[c] for c in self.cats},
+            "tap_batches": self.tap_batches,
+            "log_batches": self.log_batches,
         })
         return version
 
     # -------------------------------------------------------------- train
+    def _sample(self, cat: int) -> Optional[np.ndarray]:
+        """One training batch of qids: from the served-traffic tap when
+        wired (waiting briefly while the fleet's first responses land),
+        else from the query log.  None = starved (skip the update)."""
+        if self.source is None:
+            self.log_batches += 1
+            return self.system.sample_train_qids(cat, self.cfg.batch,
+                                                 self._rng)
+        deadline = time.monotonic() + self.cfg.wait_for_source_s
+        while not self._stop.is_set():
+            qids = self.source.sample(cat, self.cfg.batch, self._rng)
+            if qids is not None:
+                self.tap_batches += 1
+                return qids
+            if time.monotonic() >= deadline:
+                break
+            time.sleep(0.005)
+        self.starved_batches += 1
+        return None
+
     def _epoch(self, it: int) -> None:
         eps = linear_epsilon(it, self.cfg.iters, self.cfg.eps_start,
                              self.cfg.eps_end)
         for c in self.cats:
-            qids = self.system.sample_train_qids(c, self.cfg.batch, self._rng)
+            qids = self._sample(c)
+            if qids is None:
+                continue                  # tap starved: epoch still counts
             self._key, sub = jax.random.split(self._key)
             self._q[c], _ = self.system.policy_train_step(
                 c, self._q[c], sub, eps, qids)

@@ -1,17 +1,21 @@
 """Online-learning cluster driver: trainer-fed replica set CLI.
 
-Builds the retrieval system, starts a `TrainerLoop` publishing policy
-snapshots into a shared `PolicyStore`, and serves a random query stream
-through a `ReplicaSet` (queue-aware routing + u-budget admission) while
-training runs — the paper's serve-while-training deployment in one
-process.
+Builds the retrieval system, starts a `TrainerLoop` that trains from
+the cluster's served-traffic tap and publishes policy snapshots (live
++ SHALLOW fallbacks) into a shared `PolicyStore`, and serves a random
+query stream through a `ReplicaSet` (queue-aware routing + the
+pressure-tiered admission ladder) while training runs — the paper's
+serve-while-training deployment in one process.
 
     PYTHONPATH=src python -m repro.launch.cluster --replicas 2 \
         --publish-every 10 --backend xla
 
 ``--smoke`` is the CI gate: tiny corpus, 2 replicas, 2 publish cycles,
-and a hard assertion that every submitted query completed with either a
-response or an explicit Shed — zero dropped.
+a hard assertion that every submitted query completed with either a
+response or an explicit Shed (zero dropped), that the trainer consumed
+ONLY the served-traffic tap, and — under a moderate burst against a
+finite u budget — that the ladder degraded (some SHALLOW) without a
+single hard SHED.
 """
 from __future__ import annotations
 
@@ -37,7 +41,11 @@ def main() -> None:
                     choices=["queue_aware", "round_robin"])
     ap.add_argument("--staleness-bound", type=int, default=2)
     ap.add_argument("--u-budget-inflight", type=float, default=float("inf"),
-                    help="fleet admission budget in u (inf disables shedding)")
+                    help="fleet admission budget in u (inf disables "
+                         "degradation/shedding)")
+    ap.add_argument("--no-ladder", action="store_true",
+                    help="binary admit/shed instead of the FULL/SHALLOW/"
+                         "CACHED_ONLY/SHED service ladder")
     ap.add_argument("--n-docs", type=int, default=4096)
     ap.add_argument("--n-queries", type=int, default=400)
     ap.add_argument("--batch", type=int, default=24,
@@ -56,9 +64,9 @@ def main() -> None:
         args.iters, args.publish_every = 8, 4      # exactly 2 publish cycles
         args.train_batch, args.batch = 16, 16
 
-    from repro.cluster import (ClusterConfig, ReplicaSet, Shed,
+    from repro.cluster import (ClusterConfig, ReplicaSet, ServiceLevel, Shed,
                                TrainerConfig, TrainerLoop)
-    from repro.data.querylog import QueryLogConfig
+    from repro.data.querylog import CAT1, CAT2, QueryLogConfig
     from repro.index.corpus import CorpusConfig
     from repro.policies import PolicyStore
     from repro.serving import EngineConfig
@@ -76,6 +84,7 @@ def main() -> None:
     print(f"[build] {sys_.index.n_docs} docs / {sys_.log.n_queries} queries "
           f"/ {sys_.index.n_blocks} blocks ({sys_.build_time:.1f}s)")
 
+    shallow_caps = {cat: sys_.shallow_u_cap(cat) for cat in (CAT1, CAT2)}
     store = PolicyStore(staleness_bound=args.staleness_bound)
     trainer = TrainerLoop(sys_, store, cfg=TrainerConfig(
         iters=args.iters, publish_every=args.publish_every,
@@ -83,13 +92,19 @@ def main() -> None:
     trainer.publish_now()                 # v1 up before replicas construct
     cluster = ReplicaSet(sys_, store, ClusterConfig(
         n_replicas=args.replicas, routing=args.routing,
-        u_inflight_budget=args.u_budget_inflight),
+        u_inflight_budget=args.u_budget_inflight,
+        ladder=not args.no_ladder,
+        # keep the cold SHALLOW estimate inside its provable cap, so a
+        # degraded admission can never be priced above what it can cost
+        prior_shallow_u=float(min(shallow_caps.values()))),
         EngineConfig(min_bucket=args.min_bucket, max_bucket=args.max_bucket,
                      cache_capacity=args.cache, backend=args.backend))
+    trainer.source = cluster.tap          # train on served traffic only
     cluster.warmup()
 
     rng = np.random.default_rng(0)
     results, t0 = [], time.time()
+    burst_results, burst_tickets = [], []
     with cluster:
         trainer.start()
         waves = 0
@@ -102,6 +117,25 @@ def main() -> None:
         results.extend(cluster.serve(
             rng.integers(0, sys_.log.n_queries, size=args.batch)))
         waves += 1
+
+        if args.smoke and not args.no_ladder:
+            # Moderate burst against a finite budget: size the ledger
+            # so the FULL rung saturates after a few queries while the
+            # SHALLOW rung provably fits the whole burst — the ladder
+            # must absorb the pressure with degraded service, zero
+            # hard SHEDs.
+            burst = 48
+            cap = max(shallow_caps.values())
+            burst_qids = rng.integers(0, sys_.log.n_queries, size=burst)
+            est = cluster.admission.estimator
+            est_med = float(np.median([est.estimate(int(q))
+                                       for q in burst_qids]))
+            budget = max(3 * est_med, sys_.cfg.u_budget) + (burst + 1) * cap
+            cluster.admission.u_inflight_budget = budget
+            cluster.admission.full_watermark = \
+                min(0.5, max(3 * est_med, sys_.cfg.u_budget) / budget)
+            burst_tickets = [cluster.submit(int(q)) for q in burst_qids]
+            burst_results = [t.result(timeout=120.0) for t in burst_tickets]
     wall = time.time() - t0
 
     stats = cluster.stats()
@@ -115,24 +149,43 @@ def main() -> None:
                                      for row in trainer.history],
         "n_results": len(results),
         "n_shed": n_shed,
+        "trainer_tap_batches": trainer.tap_batches,
+        "trainer_log_batches": trainer.log_batches,
         "cluster": stats,
     }
     print(f"[serve] {len(results)} results over {waves} waves "
           f"({out['qps']:.1f} qps), {n_shed} shed, "
           f"versions {trainer.versions_published}, "
-          f"version_lag_max={stats['version_lag_observed_max']}")
+          f"version_lag_max={stats['version_lag_observed_max']}, "
+          f"tap_batches={trainer.tap_batches}")
 
     if args.smoke:
         assert len(trainer.versions_published) >= 3, \
             f"expected >= 3 publishes (v1 + 2 cycles), got {trainer.versions_published}"
         assert stats["n_submitted"] == stats["n_responses"] + stats["n_shed"], \
             "dropped queries: submitted != responses + shed"
-        assert len(results) == stats["n_submitted"], "lost tickets"
+        assert len(results) + len(burst_results) == stats["n_submitted"], \
+            "lost tickets"
         assert stats["version_lag_observed_max"] <= args.staleness_bound, \
             "served a snapshot beyond the staleness bound"
+        # the trainer consumed the served-traffic tap, never the log
+        assert trainer.tap_batches > 0 and trainer.log_batches == 0, \
+            (f"trainer must train from served traffic only "
+             f"(tap={trainer.tap_batches}, log={trainer.log_batches})")
+        if not args.no_ladder:
+            # graceful degradation under the burst: zero hard SHEDs,
+            # pressure visibly absorbed by the SHALLOW rung
+            hard_sheds = [r for r in burst_results if isinstance(r, Shed)]
+            assert not hard_sheds, \
+                f"ladder hard-shed under a moderate burst: {hard_sheds[:3]}"
+            mix = {l.name: sum(t.level == l for t in burst_tickets)
+                   for l in ServiceLevel}
+            out["burst_mix"] = mix
+            assert mix["SHALLOW"] > 0, f"expected SHALLOW under burst: {mix}"
+            print(f"[smoke] burst mix {mix} (zero hard sheds)")
         print("[smoke] OK: zero dropped non-shed queries, "
-              f"{len(trainer.versions_published)} versions, "
-              f"lag <= {args.staleness_bound}")
+              f"{len(trainer.versions_published)} versions trained from "
+              f"the served tap, lag <= {args.staleness_bound}")
 
     Path(args.out).parent.mkdir(parents=True, exist_ok=True)
     Path(args.out).write_text(json.dumps(out, indent=1, default=str))

@@ -33,26 +33,37 @@ class StalePolicyError(RuntimeError):
     """A consumer's pinned snapshot is older than the staleness bound."""
 
 
+_EMPTY: Mapping[int, Policy] = MappingProxyType({})
+
+
 @dataclass(frozen=True)
 class PolicySnapshot:
     version: int                        # monotonically increasing, from 1
     policies: Mapping[int, Policy]      # category -> Policy (read-only)
+    # category -> degraded-service fallback (typically a truncated
+    # StaticPlanPolicy with bounded u).  Published and hot-swapped
+    # TOGETHER with the live set: a replica can never pair a new live
+    # policy with a stale fallback or vice versa.
+    fallbacks: Mapping[int, Policy] = _EMPTY
 
     def describe(self) -> dict:
         return {"version": self.version,
-                "policies": {k: p.describe() for k, p in self.policies.items()}}
+                "policies": {k: p.describe() for k, p in self.policies.items()},
+                "fallbacks": {k: p.describe()
+                              for k, p in self.fallbacks.items()}}
 
 
-def _validate_policies(policies: Dict[int, Policy]) -> None:
-    if not isinstance(policies, dict) or not policies:
+def _validate_policies(policies: Dict[int, Policy], role: str = "policies",
+                       allow_empty: bool = False) -> None:
+    if not isinstance(policies, dict) or (not policies and not allow_empty):
         raise TypeError(
-            "PolicyStore.publish expects a non-empty {category: Policy} dict, "
-            f"got {type(policies).__name__}")
+            f"PolicyStore.publish expects a non-empty {{category: Policy}} "
+            f"dict for {role}, got {type(policies).__name__}")
     for cat, pol in policies.items():
         if not isinstance(pol, Policy):
             raise TypeError(
-                f"category {cat}: expected a repro.policies.Policy, got "
-                f"{type(pol).__name__}. Raw Q-table arrays are no longer "
+                f"category {cat} ({role}): expected a repro.policies.Policy, "
+                f"got {type(pol).__name__}. Raw Q-table arrays are no longer "
                 "accepted — wrap them with TabularQPolicy(q) (or a "
                 "MatchPlan with StaticPlanPolicy(plan, n_actions)).")
 
@@ -93,13 +104,25 @@ class PolicyStore:
         self._subscribers: List[_Subscriber] = []
 
     # ------------------------------------------------------------ publish
-    def publish(self, policies: Dict[int, Policy]) -> int:
+    def publish(self, policies: Dict[int, Policy],
+                fallbacks: Optional[Dict[int, Policy]] = None) -> int:
         """Install a new snapshot; returns its (strictly increasing)
-        version id and notifies subscribers."""
+        version id and notifies subscribers.
+
+        ``fallbacks`` is the degraded-service policy set (category ->
+        cheap bounded-u Policy, e.g. a truncated StaticPlanPolicy).
+        When omitted, the previous snapshot's fallbacks are carried
+        forward — live policies and their fallbacks always travel in
+        the same snapshot, so replicas hot-swap them atomically.
+        """
         _validate_policies(policies)
+        if fallbacks is not None:
+            _validate_policies(fallbacks, role="fallbacks", allow_empty=True)
         with self._lock:
             version = (self._snapshot.version if self._snapshot else 0) + 1
-            snap = PolicySnapshot(version, MappingProxyType(dict(policies)))
+            fb = (MappingProxyType(dict(fallbacks)) if fallbacks is not None
+                  else (self._snapshot.fallbacks if self._snapshot else _EMPTY))
+            snap = PolicySnapshot(version, MappingProxyType(dict(policies)), fb)
             self._snapshot = snap
             subscribers = list(self._subscribers)
         for sub in subscribers:

@@ -8,16 +8,17 @@ Policies come from a versioned `repro.policies.PolicyStore` snapshot.
 from repro.serving.batcher import (BucketConfig, MicroBatch, PendingRequest,
                                    ShapeBucketBatcher, bucket_size_for)
 from repro.serving.cache import LRUResultCache, canonical_query_key
-from repro.serving.engine import (AdmissionError, EngineConfig, ServeEngine,
-                                  ServeResponse)
+from repro.serving.engine import (AdmissionError, CacheOnlyMiss, EngineConfig,
+                                  ServeEngine, ServeResponse)
 from repro.serving.executor import (ShardedExecutor, available_backends,
                                     register_rollout_backend)
+from repro.serving.levels import EXECUTED_LEVELS, ServiceLevel
 from repro.serving.telemetry import Telemetry
 
 __all__ = [
-    "AdmissionError", "BucketConfig", "EngineConfig", "LRUResultCache",
-    "MicroBatch", "PendingRequest", "ServeEngine", "ServeResponse",
-    "ShapeBucketBatcher", "ShardedExecutor", "Telemetry",
-    "available_backends", "bucket_size_for", "canonical_query_key",
-    "register_rollout_backend",
+    "AdmissionError", "BucketConfig", "CacheOnlyMiss", "EXECUTED_LEVELS",
+    "EngineConfig", "LRUResultCache", "MicroBatch", "PendingRequest",
+    "ServeEngine", "ServeResponse", "ServiceLevel", "ShapeBucketBatcher",
+    "ShardedExecutor", "Telemetry", "available_backends", "bucket_size_for",
+    "canonical_query_key", "register_rollout_backend",
 ]

@@ -61,6 +61,7 @@ class PendingRequest:
     category: int
     cache_key: object
     t_submit: float
+    level: int = 0         # ServiceLevel value (FULL=0, SHALLOW=1)
 
 
 @dataclasses.dataclass
@@ -68,6 +69,7 @@ class MicroBatch:
     category: int
     bucket: int
     requests: List[PendingRequest]     # the real lanes, in FIFO order
+    level: int = 0         # every lane shares the micro-batch's level
 
     @property
     def n_real(self) -> int:
@@ -82,20 +84,28 @@ class MicroBatch:
 
 
 class ShapeBucketBatcher:
-    """Per-category FIFO queues drained into shape buckets."""
+    """Per-(category, service-level) FIFO queues drained into shape
+    buckets.  Levels never mix inside one micro-batch: a SHALLOW lane
+    runs the snapshot's fallback policy through a different executable
+    than its FULL neighbour, so they batch separately by construction.
+    """
 
     def __init__(self, cfg: BucketConfig = BucketConfig()):
         self.cfg = cfg
-        self._queues: Dict[int, Deque[PendingRequest]] = {}
+        self._queues: Dict[tuple, Deque[PendingRequest]] = {}
+
+    @staticmethod
+    def _key(req: PendingRequest) -> tuple:
+        return (req.category, int(req.level))
 
     def enqueue(self, req: PendingRequest) -> None:
-        self._queues.setdefault(req.category, deque()).append(req)
+        self._queues.setdefault(self._key(req), deque()).append(req)
 
     def requeue(self, reqs: List[PendingRequest]) -> None:
         """Put a drained (but unexecuted) micro-batch back at the FRONT
         of its queues, preserving FIFO order for the retry."""
         for req in reversed(reqs):
-            self._queues.setdefault(req.category, deque()).appendleft(req)
+            self._queues.setdefault(self._key(req), deque()).appendleft(req)
 
     def remove(self, request_ids) -> int:
         """Drop queued requests by id (cancellation — e.g. a caller
@@ -109,34 +119,37 @@ class ShapeBucketBatcher:
             q.extend(kept)
         return n
 
-    def pending(self, category: Optional[int] = None) -> int:
-        if category is not None:
-            return len(self._queues.get(category, ()))
+    def pending(self, key: Optional[tuple] = None) -> int:
+        if key is not None:
+            return len(self._queues.get(key, ()))
         # list() snapshots the values atomically under the GIL (single
         # C-level call, no bytecode boundary), so this stays safe when
         # a router thread polls while the owning thread enqueues a
-        # first-of-its-category request (which inserts a dict key); a
+        # first-of-its-queue request (which inserts a dict key); a
         # plain generator over .values() can raise "dictionary changed
         # size during iteration" there.
         return sum(len(q) for q in list(self._queues.values()))
 
-    def categories(self) -> List[int]:
-        return [c for c, q in self._queues.items() if q]
+    def queue_keys(self) -> List[tuple]:
+        """Non-empty (category, level) queues."""
+        return [k for k, q in self._queues.items() if q]
 
-    def drain(self, category: int, force: bool = False) -> Optional[MicroBatch]:
-        """Pop up to max_bucket requests into a micro-batch.
+    def drain(self, key: tuple, force: bool = False) -> Optional[MicroBatch]:
+        """Pop up to max_bucket requests of one (category, level) queue
+        into a micro-batch.
 
         Without ``force``, only a full max_bucket batch is released (the
         throughput-optimal shape); with ``force`` a partial batch drains
         into the smallest fitting bucket — the flush/latency path.
         """
-        q = self._queues.get(category)
+        q = self._queues.get(key)
         if not q:
             return None
         if not force and len(q) < self.cfg.max_bucket:
             return None
         take = min(len(q), self.cfg.max_bucket)
         reqs = [q.popleft() for _ in range(take)]
+        category, level = key
         return MicroBatch(category=category,
                           bucket=bucket_size_for(take, self.cfg),
-                          requests=reqs)
+                          requests=reqs, level=level)

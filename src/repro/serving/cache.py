@@ -56,6 +56,19 @@ class LRUResultCache:
         request, it cannot corrupt the dict under the GIL)."""
         return self.capacity > 0 and key in self._entries
 
+    def peek(self, key: Hashable) -> Optional[Any]:
+        """The entry without touching LRU order or hit/miss stats —
+        for callers that must inspect an entry before deciding whether
+        it counts as a hit (e.g. the engine's service-level check)."""
+        if self.capacity > 0:
+            return self._entries.get(key)
+        return None
+
+    def record_miss(self) -> None:
+        """Count a lookup the caller rejected after ``peek`` (absent or
+        incompatible entry) without promoting anything."""
+        self.misses += 1
+
     def put(self, key: Hashable, value: Any) -> None:
         if self.capacity <= 0:
             return

@@ -32,9 +32,11 @@ from repro.serving.batcher import (
 )
 from repro.serving.cache import LRUResultCache, canonical_query_key
 from repro.serving.executor import ShardedExecutor
+from repro.serving.levels import ServiceLevel
 from repro.serving.telemetry import Telemetry
 
-__all__ = ["EngineConfig", "ServeResponse", "AdmissionError", "ServeEngine"]
+__all__ = ["EngineConfig", "ServeResponse", "AdmissionError",
+           "CacheOnlyMiss", "ServeEngine"]
 
 
 @dataclasses.dataclass(frozen=True)
@@ -54,6 +56,13 @@ class AdmissionError(RuntimeError):
     """Raised when the pending queue is at admission_limit (load shed)."""
 
 
+class CacheOnlyMiss(RuntimeError):
+    """A CACHED_ONLY submission found no usable cache entry.  The
+    cluster normally prevents this (it only prices CACHED_ONLY when the
+    owner replica's cache holds the key), so hitting it means an
+    eviction raced the routing decision; the caller sheds explicitly."""
+
+
 @dataclasses.dataclass
 class ServeResponse:
     request_id: int
@@ -66,6 +75,12 @@ class ServeResponse:
     cached: bool
     latency_s: float
     policy_version: int = 0    # snapshot version that produced the result
+    # The service level that PRODUCED the candidates (result quality):
+    # FULL for live-policy rollouts and hits on FULL-filled entries,
+    # SHALLOW for fallback-plan rollouts and hits on SHALLOW fills.  A
+    # CACHED_ONLY admission therefore reports the level of whatever the
+    # cache held; the *admission* decision lives on the cluster ticket.
+    level: ServiceLevel = ServiceLevel.FULL
 
 
 @dataclasses.dataclass
@@ -74,6 +89,7 @@ class _CachedResult:
     scores: np.ndarray
     u: int
     cand_cnt: int
+    level: ServiceLevel = ServiceLevel.FULL
 
 
 class ServeEngine:
@@ -142,21 +158,32 @@ class ServeEngine:
         self.cache.clear()
         return True
 
-    def _policy_for(self, category: int) -> Policy:
+    def _policy_for(self, category: int,
+                    level: ServiceLevel = ServiceLevel.FULL) -> Policy:
         self.store.validate(self._snapshot.version)
+        mapping = (self._snapshot.policies if level == ServiceLevel.FULL
+                   else self._snapshot.fallbacks)
         try:
-            return self._snapshot.policies[category]
+            return mapping[category]
         except KeyError:
+            role = "policy" if level == ServiceLevel.FULL else "fallback policy"
             raise KeyError(
-                f"policy snapshot v{self._snapshot.version} has no policy "
+                f"policy snapshot v{self._snapshot.version} has no {role} "
                 f"for category {category}") from None
 
     # ------------------------------------------------------------ warmup
     def warmup(self) -> int:
-        """Pre-compile every (bucket, policy-structure) executable for
-        the current snapshot; returns the compile count."""
+        """Pre-compile every (bucket, policy-structure, level)
+        executable for the current snapshot — fallbacks included, so
+        the first degraded micro-batch under pressure never pays a
+        compile; returns the compile count."""
         self.executor.warmup(self.bucket_cfg.buckets(),
-                             self._snapshot.policies.values())
+                             self._snapshot.policies.values(),
+                             level=int(ServiceLevel.FULL))
+        if self._snapshot.fallbacks:
+            self.executor.warmup(self.bucket_cfg.buckets(),
+                                 self._snapshot.fallbacks.values(),
+                                 level=int(ServiceLevel.SHALLOW))
         return self.executor.compile_count
 
     @property
@@ -164,20 +191,27 @@ class ServeEngine:
         return self.executor.compile_count
 
     # ------------------------------------------------------------ submit
-    def submit(self, qid: int) -> int:
-        """Admit one query-log query; returns its request id.
+    def submit(self, qid: int,
+               level: ServiceLevel = ServiceLevel.FULL) -> int:
+        """Admit one query-log query at a service level; returns its
+        request id.
 
-        Cache hits complete immediately; misses queue for the next
-        micro-batch.  Raises AdmissionError when the queue is full.
+        Cache hits complete immediately — but only when the cached
+        entry's level is at least as good as the request's (a SHALLOW
+        fill never silently answers a FULL request; a FULL fill answers
+        anyone).  Misses queue for the next micro-batch of their
+        (category, level); a CACHED_ONLY miss raises
+        :class:`CacheOnlyMiss` instead (it has no u budget to roll out
+        with).  Raises AdmissionError when the queue is full.
         """
+        level = ServiceLevel(level)
+        if level == ServiceLevel.SHED:
+            raise ValueError("SHED is not a servable level — the caller "
+                             "sheds instead of submitting")
         if self.cfg.auto_refresh:
             # A publish between drains must not leave old-policy cache
             # entries answering new submissions.
             self.refresh_policies()
-        if self.batcher.pending() >= self.cfg.admission_limit:
-            self.telemetry.record_rejection()
-            raise AdmissionError(
-                f"pending={self.batcher.pending()} >= {self.cfg.admission_limit}")
         t0 = Telemetry.now()
         rid = self._next_id
         self._next_id += 1
@@ -187,7 +221,16 @@ class ServeEngine:
         # Cached responses embody the pinned snapshot's policy, so the
         # staleness bound applies to hits exactly as to rollouts.
         self.store.validate(self._snapshot.version)
-        hit = self.cache.get(key)
+        # Peek first: a degraded fill must not answer a better-level
+        # request, and a rejected entry must count as a MISS (not a
+        # hit) nor be promoted in LRU order — the FULL execution below
+        # will overwrite it.
+        entry = self.cache.peek(key)
+        if entry is not None and int(entry.level) <= int(level):
+            hit = self.cache.get(key)      # counts the hit, refreshes LRU
+        else:
+            hit = None
+            self.cache.record_miss()
         if hit is not None:
             t1 = Telemetry.now()
             # The cache is flushed on every version change, so a hit
@@ -196,18 +239,41 @@ class ServeEngine:
                 request_id=rid, qid=int(qid), category=cat,
                 doc_ids=hit.doc_ids, scores=hit.scores, u=hit.u,
                 cand_cnt=hit.cand_cnt, cached=True, latency_s=t1 - t0,
-                policy_version=self._snapshot.version))
+                policy_version=self._snapshot.version, level=hit.level))
             self.telemetry.record_request(category=cat, latency_s=t1 - t0,
-                                          u=hit.u, cached=True, t_done=t1)
+                                          u=hit.u, cached=True, t_done=t1,
+                                          level=int(hit.level))
             return rid
+        if level == ServiceLevel.CACHED_ONLY:
+            raise CacheOnlyMiss(f"qid {qid}: no cache entry for {key}")
+        # The queue cap guards the PENDING queue only — a cache hit
+        # completes inline without queueing, so it must never be
+        # rejected for queue fullness (under saturation, hits are
+        # exactly the traffic the CACHED_ONLY rung relies on).
+        if self.batcher.pending() >= self.cfg.admission_limit:
+            self.telemetry.record_rejection()
+            raise AdmissionError(
+                f"pending={self.batcher.pending()} >= {self.cfg.admission_limit}")
         self.batcher.enqueue(PendingRequest(
             request_id=rid, qid=int(qid), category=cat, cache_key=key,
-            t_submit=t0))
+            t_submit=t0, level=int(level)))
         self.telemetry.observe_gauges(self.queue_depth, self._inflight)
         return rid
 
     # ------------------------------------------------------------- batch
     def _execute_batch(self, mb: MicroBatch) -> None:
+        level = ServiceLevel(mb.level)
+        try:
+            policy = self._policy_for(mb.category, level)
+        except KeyError:
+            if level != ServiceLevel.SHALLOW:
+                raise
+            # A publish cleared the fallbacks while SHALLOW-admitted
+            # requests sat in the queue.  Upgrade the batch to FULL
+            # (better results, more u) rather than poisoning the
+            # FIFO front and shedding the replica's in-flight window.
+            level = ServiceLevel.FULL
+            policy = self._policy_for(mb.category, level)
         t0 = Telemetry.now()
         self._inflight = mb.n_real
         self.telemetry.observe_gauges(self.queue_depth, self._inflight)
@@ -216,7 +282,7 @@ class ServeEngine:
             occ, scores, tp = self.system.batch_inputs(qids)
             t1 = Telemetry.now()
             ids, sc, u, cnt = self.executor.execute(
-                self._policy_for(mb.category), occ, scores, tp)
+                policy, occ, scores, tp, level=int(level))
             t2 = Telemetry.now()
         finally:
             self._inflight = 0
@@ -229,22 +295,29 @@ class ServeEngine:
         # answered — the bucket-padding invariant the tests pin down.
         for lane, req in enumerate(mb.requests):
             result = _CachedResult(doc_ids=ids[lane], scores=sc[lane],
-                                   u=int(u[lane]), cand_cnt=int(cnt[lane]))
-            self.cache.put(req.cache_key, result)
+                                   u=int(u[lane]), cand_cnt=int(cnt[lane]),
+                                   level=level)
+            prior = self.cache.contains(req.cache_key)
+            # A SHALLOW fill never downgrades an existing (necessarily
+            # >=-quality) entry; FULL fills always win.
+            if level == ServiceLevel.FULL or not prior:
+                self.cache.put(req.cache_key, result)
             latency = t2 - req.t_submit
             self._complete(ServeResponse(
                 request_id=req.request_id, qid=req.qid,
                 category=mb.category, doc_ids=result.doc_ids,
                 scores=result.scores, u=result.u, cand_cnt=result.cand_cnt,
-                cached=False, latency_s=latency, policy_version=version))
+                cached=False, latency_s=latency, policy_version=version,
+                level=level))
             self.telemetry.record_request(category=mb.category,
                                           latency_s=latency, u=result.u,
-                                          cached=False, t_done=t2)
+                                          cached=False, t_done=t2,
+                                          level=int(level))
 
-    def _drain_category(self, cat: int, force: bool) -> int:
+    def _drain_queue(self, key: tuple, force: bool) -> int:
         n = 0
         while True:
-            mb = self.batcher.drain(cat, force=force)
+            mb = self.batcher.drain(key, force=force)
             if mb is None:
                 break
             try:
@@ -263,14 +336,14 @@ class ServeEngine:
         """Drain every full bucket; returns micro-batches executed."""
         if self.cfg.auto_refresh:
             self.refresh_policies()
-        return sum(self._drain_category(cat, force=False)
-                   for cat in self.batcher.categories())
+        return sum(self._drain_queue(key, force=False)
+                   for key in self.batcher.queue_keys())
 
     def flush(self) -> int:
         """Force-drain everything (partial buckets padded up)."""
         n = self.step()
-        return n + sum(self._drain_category(cat, force=True)
-                       for cat in self.batcher.categories())
+        return n + sum(self._drain_queue(key, force=True)
+                       for key in self.batcher.queue_keys())
 
     # ----------------------------------------------------------- respond
     def take_response(self, request_id: int) -> Optional[ServeResponse]:
@@ -285,10 +358,11 @@ class ServeEngine:
             self._completed.pop(rid, None)
         return self.batcher.remove(request_ids)
 
-    def serve(self, qids: Sequence[int]) -> List[ServeResponse]:
+    def serve(self, qids: Sequence[int],
+              level: ServiceLevel = ServiceLevel.FULL) -> List[ServeResponse]:
         """Synchronous driver: submit a stream, flush, return responses
         in submission order."""
-        rids = [self.submit(int(q)) for q in qids]
+        rids = [self.submit(int(q), level) for q in qids]
         self.flush()
         return [self._completed.pop(r) for r in rids]
 

@@ -160,15 +160,20 @@ class ShardedExecutor:
             lambda x: sd(x.shape, x.dtype), policy)
         return bins, pol_abs, occ, scores, tp
 
-    def compiled_for(self, bucket: int, policy: Policy) -> jax.stages.Compiled:
+    def compiled_for(self, bucket: int, policy: Policy,
+                     level: int = 0) -> jax.stages.Compiled:
         if not isinstance(policy, Policy):
             raise TypeError(
                 f"expected a repro.policies.Policy, got {type(policy).__name__}; "
                 "raw Q-table arrays are no longer accepted — wrap with "
                 "TabularQPolicy(q)")
-        # The backend is part of the compile key: each scan strategy
-        # lowers to a distinct executable even at equal bucket/policy.
-        key = (bucket, self.backend, self._policy_key(policy))
+        # The backend AND the service level are part of the compile key:
+        # each scan strategy lowers to a distinct executable even at
+        # equal bucket/policy, and a degraded (SHALLOW) execution never
+        # shares an executable with FULL serving — even if a future
+        # fallback happens to share the live policy's structure, the
+        # ladder keeps its own compile row.
+        key = (bucket, self.backend, int(level), self._policy_key(policy))
         exe = self._compiled.get(key)
         if exe is None:
             exe = self._jit.lower(*self._abstract_args(bucket, policy)).compile()
@@ -176,18 +181,19 @@ class ShardedExecutor:
             self.compile_count += 1
         return exe
 
-    def warmup(self, buckets: Iterable[int],
-               policies: Iterable[Policy]) -> None:
+    def warmup(self, buckets: Iterable[int], policies: Iterable[Policy],
+               level: int = 0) -> None:
         policies = list(policies)
         for b in buckets:
             for pol in policies:
-                self.compiled_for(b, pol)
+                self.compiled_for(b, pol, level)
 
     # ------------------------------------------------------------ execute
-    def execute(self, policy: Policy, occ, scores, term_present
+    def execute(self, policy: Policy, occ, scores, term_present,
+                level: int = 0
                 ) -> Tuple[np.ndarray, np.ndarray, np.ndarray, np.ndarray]:
         """Run one micro-batch through its pre-compiled executable."""
-        exe = self.compiled_for(occ.shape[0], policy)
+        exe = self.compiled_for(occ.shape[0], policy, level)
         ids, sc, u, cnt = exe(self.system.bins, policy, occ, scores,
                               term_present)
         jax.block_until_ready(ids)

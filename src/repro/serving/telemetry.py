@@ -38,6 +38,9 @@ class Telemetry:
         self.total_requests = 0
         self.total_cached = 0
         self.rejected = 0
+        # ServiceLevel value -> lifetime count of served requests (the
+        # degradation-ladder mix; sheds never reach the engine).
+        self.level_counts: Dict[int, int] = {}
         # Load gauges (current + lifetime peak), fed by the engine on
         # every enqueue/drain — the router's balancing signal.
         self.queue_depth = 0
@@ -59,15 +62,17 @@ class Telemetry:
 
     # ------------------------------------------------------------ records
     def record_request(self, *, category: int, latency_s: float, u: int,
-                       cached: bool, t_done: float) -> None:
+                       cached: bool, t_done: float, level: int = 0) -> None:
         self._touch(t_done)
         self.total_requests += 1
         self.total_cached += bool(cached)
+        self.level_counts[int(level)] = self.level_counts.get(int(level), 0) + 1
         self.requests.append({
             "category": int(category),
             "latency_s": float(latency_s),
             "u": int(u),
             "cached": bool(cached),
+            "level": int(level),
         })
 
     def record_batch(self, *, category: int, bucket: int, n_real: int,
@@ -113,6 +118,7 @@ class Telemetry:
             "mean_u": float(us.mean()) if len(us) else 0.0,
             "p99_u": _pct(us, 0.99),
             "padding_overhead": (padded / lanes) if lanes else 0.0,
+            "level_counts": dict(sorted(self.level_counts.items())),
             "compile_count": int(compile_count),
             "queue_depth": self.queue_depth,
             "inflight": self.inflight,

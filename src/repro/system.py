@@ -146,6 +146,28 @@ class RetrievalSystem:
         """The hand-tuned production plan as a first-class Policy."""
         return StaticPlanPolicy(self.plan_for_category(cat), self.env_cfg.n_actions)
 
+    def shallow_plan(self, cat: int, length: int = 2) -> MatchPlan:
+        """Truncated production plan served at ServiceLevel.SHALLOW —
+        u bounded by the prefix's summed Δu quotas."""
+        return self.plan_for_category(cat).prefix(length)
+
+    def shallow_u_cap(self, cat: int, length: int = 2) -> int:
+        """Worst-case u of ONE single-shard shallow-plan execution:
+        summed Δu quotas plus one block's planes of quota overshoot per
+        entry.  The honest per-query bound degraded serving promises."""
+        from repro.index.builder import MAX_QUERY_TERMS
+        from repro.index.corpus import N_FIELDS
+        return self.shallow_plan(cat, length).u_cap(
+            per_entry_overshoot=MAX_QUERY_TERMS * N_FIELDS)
+
+    def fallback_policies(self, cats: Sequence[int] = (CAT1, CAT2),
+                          length: int = 2) -> Dict[int, StaticPlanPolicy]:
+        """Degraded-service fallbacks published alongside live snapshots
+        (PolicyStore.publish(policies, fallbacks=...))."""
+        return {cat: StaticPlanPolicy(self.shallow_plan(cat, length),
+                                      self.env_cfg.n_actions)
+                for cat in cats}
+
     def _run_plan_batch(self, plan: MatchPlan, occ, scores, term_present):
         """Batched static-plan execution via the unified rollout; returns
         (final_state, trajectory with (B, L) leaves)."""

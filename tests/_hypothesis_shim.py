@@ -39,13 +39,21 @@ def settings(deadline=None, max_examples: int = _DEFAULT_MAX_EXAMPLES, **_kw):
 
 def given(*strategies: _Strategy):
     def deco(fn):
+        # Like real hypothesis, positional strategies fill the TRAILING
+        # parameters; anything before them (pytest fixtures) arrives via
+        # kwargs, so strategy values must be bound by name.
+        names = [p.name
+                 for p in inspect.signature(fn).parameters.values()
+                 ][-len(strategies):]
+
         @functools.wraps(fn)
         def wrapper(*args, **kwargs):
             n = getattr(wrapper, "_shim_max_examples", _DEFAULT_MAX_EXAMPLES)
             rng = np.random.default_rng(_SEED)
             for _ in range(n):
-                vals = [s._sample(rng) for s in strategies]
-                fn(*args, *vals, **kwargs)
+                vals = {nm: s._sample(rng)
+                        for nm, s in zip(names, strategies)}
+                fn(*args, **kwargs, **vals)
         # Hide the generated parameters from pytest's fixture resolution:
         # only the leading (fixture) params of the original signature remain.
         sig = inspect.signature(fn)

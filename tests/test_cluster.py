@@ -6,11 +6,13 @@ import time
 
 import numpy as np
 import pytest
+from hypothesis import given, settings, strategies as st
 
 from repro.cluster import (
     AdmissionController, ClusterConfig, QueueAwareRouter, Replica,
-    ReplicaSet, RoundRobinRouter, Shed, TrainerConfig, TrainerLoop,
-    UCostEstimator, candidate_recall, make_router, stable_query_hash,
+    ReplicaSet, RoundRobinRouter, ServedTrafficTap, ServiceLevel, Shed,
+    TrainerConfig, TrainerLoop, UCostEstimator, candidate_recall,
+    make_router, stable_query_hash,
 )
 from repro.data.querylog import CAT1, CAT2
 from repro.policies import PolicyStore, TabularQPolicy
@@ -27,15 +29,15 @@ def trained(tiny_system):
     return tiny_system, policies
 
 
-def _store(policies, staleness_bound=2):
+def _store(policies, staleness_bound=2, fallbacks=None):
     store = PolicyStore(staleness_bound=staleness_bound)
-    store.publish(dict(policies))
+    store.publish(dict(policies), fallbacks=fallbacks)
     return store
 
 
 # ------------------------------------------------------------------ router
 def test_queue_aware_router_affinity_and_spill():
-    r = QueueAwareRouter(spill_margin=4)
+    r = QueueAwareRouter(spill_margin=4, owner_spill_depth=None)
     depths = [0, 0, 0, 0]
     h = stable_query_hash((1, (3, 5, 9)))
     pref = h % 4
@@ -48,9 +50,34 @@ def test_queue_aware_router_affinity_and_spill():
     assert spilled != pref and depths[spilled] == 10
     assert r.stats()["spills"] == 1
     assert r.stats()["affinity_picks"] == 2
-    # a known cache owner wins regardless of depth (a hit is ~free)
+    # owner_spill_depth=None: a known cache owner wins regardless of
+    # depth (a hit is ~free)
     assert r.pick(h, [100, 0, 0, 0], owner=0) == 0
     assert r.stats()["sticky_picks"] == 1
+
+
+def test_queue_aware_router_owner_saturation_spill():
+    """A likely-hit key spills off its saturated cache owner to the
+    depth-balanced path instead of queueing behind the hot replica —
+    even when the owner is also the hash-preferred replica."""
+    r = QueueAwareRouter(spill_margin=2, owner_spill_depth=8)
+    # owner at the gauge threshold: still sticky
+    depths = [8, 1, 1, 1]
+    assert r.pick(0, depths, owner=0) == 0
+    assert r.stats()["sticky_picks"] == 1
+    # owner past the threshold AND hash-preferred (key_hash % 4 == 0):
+    # must NOT fall back to the owner — goes to the least-loaded
+    depths = [9, 1, 1, 1]
+    assert r.pick(0, depths, owner=0) == 1
+    assert r.stats()["owner_spills"] == 1
+    # owner saturated, different preferred replica: balanced path rules
+    assert r.pick(2, depths, owner=0) == 2
+    st = r.stats()
+    assert st["owner_spills"] == 2 and st["affinity_picks"] == 1
+    # whole fleet deeper than the owner: the owner IS least-bad
+    assert r.pick(0, [9, 30, 30, 30], owner=0) == 0
+    with pytest.raises(ValueError):
+        QueueAwareRouter(owner_spill_depth=-1)
 
 
 def test_round_robin_router_cycles():
@@ -82,28 +109,210 @@ def test_ucost_estimator_prior_then_observation(tiny_system):
     cat, df_bin = est.features(0)
     assert cat == int(tiny_system.log.category[0])
     assert 0 <= df_bin < 8
+    # the SHALLOW row has its own prior and its own observations
+    assert est.estimate(0, ServiceLevel.SHALLOW) == 25.0
+    est.observe(0, 7.0, level=ServiceLevel.SHALLOW)
+    assert est.estimate(0, ServiceLevel.SHALLOW) == 7.0
+    assert 40.0 < est.estimate(0) < 80.0              # FULL row untouched
 
 
-def test_admission_controller_budget_and_shed(tiny_system):
+def test_admission_binary_mode_budget_and_shed(tiny_system):
+    """ladder=False preserves the pre-ladder behaviour verbatim: FULL
+    if the estimate fits the budget, explicit SHED otherwise."""
     est = UCostEstimator(tiny_system, prior_u=100.0)
-    adm = AdmissionController(est, u_inflight_budget=250.0)
-    e1 = adm.try_admit(0)
-    e2 = adm.try_admit(1)
-    assert e1 == e2 == 100.0
-    assert adm.try_admit(2) is None                   # 300 > 250: shed
+    adm = AdmissionController(est, u_inflight_budget=250.0, ladder=False)
+    a1 = adm.decide(0)
+    a2 = adm.decide(1)
+    assert a1.level == a2.level == ServiceLevel.FULL
+    assert a1.reserved_u == a2.reserved_u == 100.0
+    a3 = adm.decide(2)                                # 300 > 250: shed
+    assert a3.level == ServiceLevel.SHED and a3.reserved_u == 0.0
     assert adm.stats()["shed"] == 1
-    adm.release(e1)
-    assert adm.try_admit(2) == 100.0                  # freed: admit again
+    adm.release(a1.reserved_u)
+    assert adm.decide(2).level == ServiceLevel.FULL   # freed: admit again
     # actual-u completion feeds the estimator
-    adm.release(e2, actual_u=20.0, qid=1)
+    adm.release(a2.reserved_u, actual_u=20.0, qid=1)
     assert est.estimate(1) == 20.0
 
 
+def test_admission_ladder_walks_every_rung(tiny_system):
+    """As the ledger fills, decisions walk FULL → SHALLOW →
+    CACHED_ONLY → SHED, each rung reserving what it will cost."""
+    est = UCostEstimator(tiny_system, prior_u=100.0, prior_shallow_u=10.0)
+    adm = AdmissionController(est, u_inflight_budget=200.0,
+                              full_watermark=0.5)
+    a1 = adm.decide(0)                    # idle: FULL (reserves 100)
+    assert a1.level == ServiceLevel.FULL and a1.reserved_u == 100.0
+    # 100 + 100 > watermark 100, but 100 + 10 <= 200: SHALLOW
+    a2 = adm.decide(1)
+    assert a2.level == ServiceLevel.SHALLOW and a2.reserved_u == 10.0
+    # fill the ledger right up (9 more shallows: 110 → 200) so not
+    # even a shallow fits afterwards
+    fills = [adm.decide(q) for q in range(2, 11)]
+    assert all(f.level == ServiceLevel.SHALLOW for f in fills)
+    hot = adm.decide(12)
+    assert hot.level == ServiceLevel.SHED             # no cache: last rung
+    cached = adm.decide(13, cache_available=True)
+    assert cached.level == ServiceLevel.CACHED_ONLY
+    assert cached.reserved_u == 0.0                   # ~free, no reservation
+    st = adm.stats()
+    assert st["levels"]["SHED"] == 1 and st["levels"]["CACHED_ONLY"] == 1
+    assert st["levels"]["FULL"] == 1 and st["levels"]["SHALLOW"] >= 10
+
+
+def test_admission_ladder_without_degraded_tiers_matches_binary(tiny_system):
+    """With no fallback and no cache for a query, the FULL rung may use
+    the WHOLE budget — the watermark only exists to keep headroom for
+    SHALLOW reservations, and a ladder with no lower rungs available
+    must never serve less than the binary controller it replaced."""
+    est = UCostEstimator(tiny_system, prior_u=100.0)
+    ladder = AdmissionController(est, u_inflight_budget=250.0,
+                                 full_watermark=0.5)
+    decisions = [ladder.decide(q, shallow_available=False)
+                 for q in range(3)]
+    # binary semantics verbatim: 100 + 100 fit, the third sheds
+    assert [d.level for d in decisions] == \
+        [ServiceLevel.FULL, ServiceLevel.FULL, ServiceLevel.SHED]
+    # with a cache available the last rung softens to CACHED_ONLY
+    assert ladder.decide(3, cache_available=True,
+                         shallow_available=False).level == \
+        ServiceLevel.CACHED_ONLY
+
+
 def test_admission_oversized_query_admitted_when_idle(tiny_system):
-    adm = AdmissionController(UCostEstimator(tiny_system, prior_u=500.0),
+    adm = AdmissionController(UCostEstimator(tiny_system, prior_u=500.0,
+                                             prior_shallow_u=400.0),
                               u_inflight_budget=250.0)
-    assert adm.try_admit(0) == 500.0                  # idle fleet: let it run
-    assert adm.try_admit(1) is None                   # but only alone
+    a1 = adm.decide(0)
+    assert a1.level == ServiceLevel.FULL              # idle fleet: let it run
+    assert a1.reserved_u == 500.0
+    assert adm.decide(1).level == ServiceLevel.SHED   # but only alone
+
+
+# ----------------------------------------------- estimator online learning
+def test_ucost_estimator_versioned_per_snapshot(tiny_system):
+    """Each snapshot version learns its own costs; a new version starts
+    from the previous version's estimate as its (replaceable) prior."""
+    est = UCostEstimator(tiny_system, prior_u=100.0)
+    est.observe(0, 40.0, version=1)
+    est.observe(0, 50.0, version=1)
+    v1 = est.estimate(0, version=1)
+    assert 40.0 < v1 <= 50.0
+    # v2 inherits v1's estimate until its own first observation...
+    assert est.estimate(0, version=2) == v1
+    est.observe(0, 400.0, version=2)                  # policy got deeper
+    assert est.estimate(0, version=2) == 400.0        # replaced, not EMA'd
+    assert est.estimate(0, version=1) == v1           # v1 untouched
+    # ...and estimate() with no version reads the latest version
+    assert est.estimate(0) == 400.0
+    assert est.describe()["versions"] == [0, 1, 2]
+
+
+def test_ucost_estimator_version_retention(tiny_system):
+    est = UCostEstimator(tiny_system, prior_u=100.0, max_versions=2)
+    for v in (1, 2, 3, 4):
+        est.observe(0, 10.0 * v, version=v)
+    assert est.describe()["versions"] == [3, 4]
+    # evicted versions read their nearest retained predecessor
+    assert est.estimate(0, version=1) == est.estimate(0, version=3)
+    # observations for evicted versions are dropped, not resurrected
+    est.observe(0, 999.0, version=1)
+    assert est.describe()["versions"] == [3, 4]
+    assert est.estimate(0, version=4) == 40.0
+
+
+def test_ucost_estimator_ema_converges_to_served_u(trained):
+    """Feed the estimator realized u from actually-served responses:
+    the estimate converges to the (stationary) served cost."""
+    sys_, policies = trained
+    cluster = ReplicaSet(sys_, _store(policies), ClusterConfig(n_replicas=1),
+                         EngineConfig(min_bucket=8, max_bucket=8,
+                                      cache_capacity=0))
+    qid = int(np.where(sys_.log.category == CAT1)[0][0])
+    with cluster:
+        results = cluster.serve([qid] * 12)
+    assert not any(isinstance(r, Shed) for r in results)
+    true_u = results[0].u                  # deterministic policy: stationary
+    assert all(r.u == true_u for r in results)
+    est = cluster.admission.estimator
+    assert est.estimate(qid, version=1) == true_u
+    # the serving path recorded every observation at the served version
+    assert est.describe()["buckets_seen"] >= 1
+
+
+@settings(deadline=None, max_examples=8)
+@given(st.integers(0, 2**31 - 1), st.integers(1, 2000))
+def test_ucost_estimator_error_monotone_on_stationary_stream(
+        tiny_system, seed, true_u):
+    """On a stationary stream (fixed realized u per bucket), estimator
+    error shrinks monotonically with every observation."""
+    rng = np.random.default_rng(seed)
+    est = UCostEstimator(tiny_system, prior_u=997.0)
+    qid = int(rng.integers(0, tiny_system.log.n_queries))
+    errors = [abs(est.estimate(qid) - true_u)]
+    for _ in range(6):
+        est.observe(qid, float(true_u))
+        errors.append(abs(est.estimate(qid) - true_u))
+    assert all(b <= a + 1e-9 for a, b in zip(errors, errors[1:])), errors
+    assert errors[-1] < 1e-9               # converged exactly (constant u)
+
+
+# ------------------------------------------------------- served-traffic tap
+def test_tap_popularity_weighting_and_shed_boost():
+    tap = ServedTrafficTap(capacity=64, degraded_boost=3.0)
+    rng = np.random.default_rng(0)
+    assert tap.sample(0, 8, rng) is None              # dry tap: no batch
+    for _ in range(9):
+        tap.record(7, 0, ServiceLevel.FULL)           # hot query
+    tap.record(3, 0, ServiceLevel.FULL)               # tail query
+    tap.record(5, 0, ServiceLevel.SHED)               # shed, boosted 3x
+    tap.record(11, 1, ServiceLevel.FULL)              # other category
+    qids = tap.sample(0, 4096, rng)
+    counts = {q: int((qids == q).sum()) for q in (7, 3, 5, 11)}
+    assert counts[11] == 0                            # category-scoped
+    # popularity: 7 carries 9/13 of the weight, 3 carries 1/13
+    assert counts[7] > 4 * counts[3]
+    # shed boost: 5 (weight 3) sampled ~3x as often as 3 (weight 1)
+    assert counts[5] > 1.5 * counts[3]
+    st_ = tap.stats()
+    assert st_["n_recorded"] == 12
+    assert st_["levels"]["SHED"] == 1
+    assert tap.size(0) == 11 and tap.size() == 12
+
+
+def test_tap_recency_window():
+    tap = ServedTrafficTap(capacity=4)
+    for q in range(10):
+        tap.record(q, 0)
+    qids = tap.sample(0, 256, np.random.default_rng(1))
+    assert set(qids) <= {6, 7, 8, 9}                  # only the window
+
+
+def test_trainer_consumes_tap_not_query_log(tiny_system, monkeypatch):
+    """With a served-traffic source the trainer NEVER samples the query
+    log: every batch is drawn from the tap (popularity-weighted)."""
+    tap = ServedTrafficTap(capacity=512)
+    rng = np.random.default_rng(2)
+    for cat in (CAT1, CAT2):
+        for qid in np.where(tiny_system.log.category == cat)[0][:16]:
+            for _ in range(int(rng.integers(1, 4))):
+                tap.record(int(qid), cat)
+    monkeypatch.setattr(
+        tiny_system, "sample_train_qids",
+        lambda *a, **k: pytest.fail("trainer sampled the query log"))
+    store = PolicyStore(staleness_bound=2)
+    trainer = TrainerLoop(tiny_system, store, cfg=TrainerConfig(
+        iters=4, publish_every=2, batch=8, probe_queries=8), source=tap)
+    trainer.run_to_completion()
+    assert trainer.versions_published == [1, 2, 3]
+    assert trainer.tap_batches == 4 * 2               # every epoch, per cat
+    assert trainer.log_batches == 0
+    assert trainer.starved_batches == 0
+    # fallbacks ride along with every published snapshot
+    snap = store.snapshot()
+    assert set(snap.fallbacks) == {CAT1, CAT2}
+    for cat in (CAT1, CAT2):
+        assert snap.fallbacks[cat].horizon == 2       # truncated static plan
 
 
 # ------------------------------------------------------------- replica set
@@ -144,13 +353,59 @@ def test_cluster_sheds_explicitly_under_tight_budget(trained):
         results = cluster.serve(qids)
     sheds = [r for r in results if isinstance(r, Shed)]
     served = [r for r in results if not isinstance(r, Shed)]
-    # budget admits ~one query at a time; the rest shed explicitly
+    # a 1-u budget fits nothing, not even the shallow fallback, and
+    # with no cache the ladder bottoms out: explicit sheds, no drops
     assert sheds and served
     assert all(s.reason == "u_budget_hot" for s in sheds)
     assert all(s.est_u > 0 for s in sheds)
     stats = cluster.stats()
     assert stats["n_shed"] == len(sheds)
     assert stats["n_submitted"] == stats["n_responses"] + stats["n_shed"]
+
+
+def test_cluster_ladder_degrades_instead_of_shedding(trained):
+    """Under pressure the ladder answers with bounded-u SHALLOW
+    rollouts (the snapshot's fallback plan) instead of shedding; the
+    binary controller sheds the same stream."""
+    sys_, policies = trained
+    shallow_cap = max(sys_.shallow_u_cap(c) for c in (CAT1, CAT2))
+    # Budget: one FULL reservation saturates the watermark, but every
+    # query's shallow estimate always fits.
+    budget = 64 * shallow_cap + 2 * 1000.0
+    qids = np.arange(24)
+    results = {}
+    for ladder in (True, False):
+        cluster = ReplicaSet(
+            sys_, _store(policies, fallbacks=sys_.fallback_policies()),
+            ClusterConfig(n_replicas=2, ladder=ladder,
+                          u_inflight_budget=budget, prior_u=1000.0,
+                          prior_shallow_u=float(shallow_cap)),
+            EngineConfig(min_bucket=8, max_bucket=8, cache_capacity=0))
+        with cluster:
+            tickets = [cluster.submit(int(q)) for q in qids]
+            results[ladder] = ([t.result(timeout=120.0) for t in tickets],
+                               tickets, cluster.stats())
+    res, tickets, stats = results[True]
+    served = [r for r in res if not isinstance(r, Shed)]
+    shallow = [r for r in served if r.level == ServiceLevel.SHALLOW]
+    assert not any(isinstance(r, Shed) for r in res)   # ladder: zero sheds
+    assert shallow, "expected degraded service under pressure"
+    # SHALLOW responses return real candidates with bounded u
+    for r in shallow:
+        assert (r.doc_ids >= 0).any()
+        assert 0 < r.u <= shallow_cap
+    assert stats["admission"]["levels"]["SHALLOW"] >= len(shallow)
+    # the ladder serves a strictly higher fraction than binary shedding
+    bin_res, _, bin_stats = results[False]
+    assert sum(isinstance(r, Shed) for r in bin_res) > 0
+    assert stats["served_fraction"] > bin_stats["served_fraction"]
+    # FULL-level responses are bit-identical to the reference path
+    # (degradation must not perturb undegraded queries)
+    full = [r for r in served if r.level == ServiceLevel.FULL]
+    ids, sc, u = _direct(sys_, policies, [r.qid for r in full])
+    for lane, r in enumerate(full):
+        np.testing.assert_array_equal(r.doc_ids, ids[lane])
+        assert r.u == u[lane]
 
 
 def test_cache_affinity_routes_repeats_to_one_replica(trained):
@@ -217,8 +472,9 @@ def test_candidate_recall_proxy():
 
 
 def test_serve_while_training(trained):
-    """The full loop: trainer publishes while the fleet serves; nothing
-    drops, every response's version is within the staleness bound."""
+    """The full loop: the trainer consumes the cluster's served-traffic
+    tap and publishes while the fleet serves; nothing drops, every
+    response's version is within the staleness bound."""
     sys_, _ = trained
     bound = 2
     store = PolicyStore(staleness_bound=bound)
@@ -229,6 +485,7 @@ def test_serve_while_training(trained):
     cluster = ReplicaSet(sys_, store, ClusterConfig(n_replicas=2),
                          EngineConfig(min_bucket=8, max_bucket=8,
                                       cache_capacity=128))
+    trainer.source = cluster.tap          # train on served traffic
     rng = np.random.default_rng(0)
     results = []
     with cluster:
@@ -249,3 +506,6 @@ def test_serve_while_training(trained):
     assert {r.policy_version for r in served} <= {1, 2, 3}
     # the last wave ran after the final publish: head version was served
     assert max(r.policy_version for r in served) == 3
+    # every training batch came from the tap, none from the query log
+    assert trainer.tap_batches > 0 and trainer.log_batches == 0
+    assert stats["tap"]["n_recorded"] == stats["n_responses"] + stats["n_shed"]

@@ -252,6 +252,31 @@ def test_snapshot_policies_read_only(trained_q):
         store.snapshot().policies[CAT2] = TabularQPolicy(trained_q)
 
 
+def test_store_fallbacks_travel_with_snapshots(tiny_system, trained_q):
+    """Fallback policies publish in the same snapshot as the live set
+    (atomic hot-swap), carry forward when a publish omits them, and are
+    validated like any other policy."""
+    store = PolicyStore(staleness_bound=2)
+    pol = TabularQPolicy(trained_q)
+    fb = tiny_system.fallback_policies((CAT1,))
+    store.publish({CAT1: pol}, fallbacks=fb)
+    snap = store.snapshot()
+    assert set(snap.fallbacks) == {CAT1}
+    assert snap.fallbacks[CAT1].horizon == 2
+    # omitted fallbacks carry forward — live + fallback stay paired
+    store.publish({CAT1: pol})
+    assert store.snapshot().fallbacks[CAT1] is snap.fallbacks[CAT1]
+    # explicit replacement (and explicit clearing) both take
+    store.publish({CAT1: pol}, fallbacks=dict(fb))
+    store.publish({CAT1: pol}, fallbacks={})
+    assert not store.snapshot().fallbacks
+    with pytest.raises(TypeError, match="fallbacks"):
+        store.publish({CAT1: pol},
+                      fallbacks={CAT1: np.asarray(trained_q)})
+    with pytest.raises(TypeError):
+        store.snapshot().fallbacks[CAT1] = pol          # read-only
+
+
 def test_store_subscribe_under_concurrent_publish_stress():
     """Threaded stress: publishers racing subscribers.  Every subscriber
     must observe (a) strictly increasing versions — a callback

@@ -11,7 +11,8 @@ from repro.core.telescope import l1_prune
 from repro.data.querylog import CAT1, CAT2
 from repro.policies import PolicyStore, TabularQPolicy
 from repro.serving import (
-    AdmissionError, BucketConfig, EngineConfig, ServeEngine, bucket_size_for,
+    AdmissionError, BucketConfig, CacheOnlyMiss, EngineConfig, ServeEngine,
+    ServiceLevel, bucket_size_for,
 )
 from repro.serving.cache import canonical_query_key
 
@@ -157,6 +158,167 @@ def test_bad_shard_count_rejected(trained):
     sys_, policies = trained
     with pytest.raises(ValueError):
         ServeEngine(sys_, policies, EngineConfig(n_shards=3))  # 8 blocks % 3
+
+
+# -------------------------------------------------------- service levels
+def _ladder_engine(sys_, policies, **cfg_kw):
+    store = PolicyStore(staleness_bound=0)
+    store.publish(dict(policies), fallbacks=sys_.fallback_policies())
+    return ServeEngine(sys_, store, EngineConfig(**cfg_kw))
+
+
+def test_shallow_level_serves_fallback_plan(trained):
+    """SHALLOW responses are bit-identical to a direct rollout of the
+    snapshot's truncated-plan fallback, with the promised u bound."""
+    sys_, policies = trained
+    engine = _ladder_engine(sys_, policies, min_bucket=8, max_bucket=8,
+                            cache_capacity=0)
+    qids = np.where(sys_.log.category == CAT1)[0][:5]
+    responses = engine.serve(qids, level=ServiceLevel.SHALLOW)
+    ids, sc, u = _direct(sys_, sys_.fallback_policies(), qids)
+    cap = sys_.shallow_u_cap(CAT1)
+    for lane, r in enumerate(responses):
+        assert r.level == ServiceLevel.SHALLOW and not r.cached
+        np.testing.assert_array_equal(r.doc_ids, ids[lane])
+        np.testing.assert_allclose(r.scores, sc[lane], rtol=1e-6)
+        assert r.u == u[lane]
+        assert 0 < r.u <= cap
+    assert engine.summary()["level_counts"] == {int(ServiceLevel.SHALLOW): 5}
+
+
+def test_full_and_shallow_never_share_a_micro_batch(trained):
+    """Interleaved FULL/SHALLOW submissions of one category drain into
+    separate micro-batches (different policies, different executables),
+    and each response is identical to its unmixed reference."""
+    sys_, policies = trained
+    engine = _ladder_engine(sys_, policies, min_bucket=8, max_bucket=8,
+                            cache_capacity=0)
+    qids = np.where(sys_.log.category == CAT2)[0][:6]
+    rids = {}
+    for i, q in enumerate(qids):
+        level = ServiceLevel.SHALLOW if i % 2 else ServiceLevel.FULL
+        rids[engine.submit(int(q), level)] = (int(q), level)
+    engine.flush()
+    full_ids, _, full_u = _direct(sys_, policies, qids)
+    sh_ids, _, sh_u = _direct(sys_, sys_.fallback_policies(), qids)
+    for rid, (q, level) in rids.items():
+        r = engine.take_response(rid)
+        lane = int(np.where(qids == q)[0][0])
+        assert r.level == level
+        if level == ServiceLevel.FULL:
+            np.testing.assert_array_equal(r.doc_ids, full_ids[lane])
+            assert r.u == full_u[lane]
+        else:
+            np.testing.assert_array_equal(r.doc_ids, sh_ids[lane])
+            assert r.u == sh_u[lane]
+
+
+def test_shallow_fill_never_answers_full_request(trained):
+    """Cache-level compatibility: a SHALLOW fill answers SHALLOW and
+    CACHED_ONLY requests but never a FULL one; a FULL fill answers
+    everyone and upgrades the entry."""
+    sys_, policies = trained
+    engine = _ladder_engine(sys_, policies, min_bucket=8, max_bucket=8,
+                            cache_capacity=64)
+    qid = int(np.where(sys_.log.category == CAT1)[0][0])
+    (sh,) = engine.serve([qid], level=ServiceLevel.SHALLOW)
+    assert not sh.cached and sh.level == ServiceLevel.SHALLOW
+    (sh2,) = engine.serve([qid], level=ServiceLevel.SHALLOW)
+    assert sh2.cached and sh2.level == ServiceLevel.SHALLOW
+    (full,) = engine.serve([qid])                  # degraded entry: miss
+    assert not full.cached and full.level == ServiceLevel.FULL
+    (full2,) = engine.serve([qid])                 # FULL fill won the entry
+    assert full2.cached and full2.level == ServiceLevel.FULL
+    np.testing.assert_array_equal(full2.doc_ids, full.doc_ids)
+    # ...and now answers degraded requests too (quality upgrade is fine)
+    (sh3,) = engine.serve([qid], level=ServiceLevel.SHALLOW)
+    assert sh3.cached and sh3.level == ServiceLevel.FULL
+    # accounting: the level-incompatible lookup counted as a MISS and
+    # did not promote the rejected entry
+    assert engine.cache.hits == 3 and engine.cache.misses == 2
+
+
+def test_cached_only_level(trained):
+    sys_, policies = trained
+    engine = _ladder_engine(sys_, policies, min_bucket=8, max_bucket=8,
+                            cache_capacity=64)
+    qid = int(np.where(sys_.log.category == CAT2)[0][0])
+    with pytest.raises(CacheOnlyMiss):
+        engine.submit(qid, ServiceLevel.CACHED_ONLY)
+    (full,) = engine.serve([qid])
+    (hit,) = engine.serve([qid], level=ServiceLevel.CACHED_ONLY)
+    assert hit.cached and hit.level == ServiceLevel.FULL
+    np.testing.assert_array_equal(hit.doc_ids, full.doc_ids)
+    with pytest.raises(ValueError):
+        engine.submit(qid, ServiceLevel.SHED)
+
+
+def test_shallow_batch_upgrades_to_full_when_fallbacks_cleared(trained):
+    """A publish that clears the fallbacks while SHALLOW requests sit
+    queued must not poison the batch: it executes at FULL instead."""
+    sys_, policies = trained
+    store = PolicyStore(staleness_bound=2)
+    store.publish(dict(policies), fallbacks=sys_.fallback_policies())
+    engine = ServeEngine(sys_, store, EngineConfig(
+        min_bucket=8, max_bucket=8, cache_capacity=0))
+    qids = np.where(sys_.log.category == CAT1)[0][:3]
+    rids = [engine.submit(int(q), ServiceLevel.SHALLOW) for q in qids]
+    store.publish(dict(policies), fallbacks={})      # fallbacks gone
+    engine.flush()
+    ids, _, u = _direct(sys_, policies, qids)
+    for lane, rid in enumerate(rids):
+        r = engine.take_response(rid)
+        assert r is not None and r.level == ServiceLevel.FULL
+        np.testing.assert_array_equal(r.doc_ids, ids[lane])
+        assert r.u == u[lane]
+
+
+def test_cache_hit_served_when_queue_full(trained):
+    """admission_limit caps the PENDING queue only: a cache hit
+    completes inline and must be served even at the cap (the ladder's
+    CACHED_ONLY rung depends on exactly this under saturation)."""
+    sys_, policies = trained
+    engine = _ladder_engine(sys_, policies, min_bucket=8, max_bucket=8,
+                            cache_capacity=64, admission_limit=1)
+    cat1 = np.where(sys_.log.category == CAT1)[0]
+    # three qids with pairwise-distinct canonical keys (the log can
+    # contain duplicate term sets, which would hit instead of queueing)
+    key_of = lambda q: canonical_query_key(sys_.log.terms[q], CAT1)
+    hot, miss1, miss2 = None, None, None
+    seen = {}
+    for q in cat1:
+        k = key_of(int(q))
+        if k not in seen:
+            seen[k] = int(q)
+            if len(seen) == 3:
+                hot, miss1, miss2 = seen.values()
+                break
+    (filled,) = engine.serve([hot])                   # fill the cache
+    assert not filled.cached
+    engine.submit(miss1)                              # miss: queue at cap
+    rid = engine.submit(hot)                          # hit: inline, no queue
+    hit = engine.take_response(rid)
+    assert hit is not None and hit.cached
+    with pytest.raises(AdmissionError):
+        engine.submit(miss2)                          # miss at cap: shed
+    engine.flush()                                    # queued work completes
+
+
+def test_warmup_covers_fallbacks_and_level_splits_compile_key(trained):
+    sys_, policies = trained
+    engine = _ladder_engine(sys_, policies, min_bucket=8, max_bucket=16,
+                            cache_capacity=0)
+    buckets = engine.bucket_cfg.buckets()
+    # one tabular structure at FULL + one static-plan structure per
+    # distinct fallback plan length at SHALLOW
+    n_fallback_structs = len({p.plan.length
+                              for p in sys_.fallback_policies().values()})
+    assert engine.warmup() == len(buckets) * (1 + n_fallback_structs)
+    # an identical policy structure still compiles separately per level
+    before = engine.executor.compile_count
+    engine.executor.compiled_for(8, policies[CAT1],
+                                 level=int(ServiceLevel.SHALLOW))
+    assert engine.executor.compile_count == before + 1
 
 
 # ------------------------------------------------- steady-state compilation
