@@ -1,7 +1,7 @@
 PYTHON ?= python
 export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH),)
 
-.PHONY: check compile test serve-bench cluster-bench cluster-smoke degrade-bench bench serve example
+.PHONY: check compile test serve-bench cluster-bench cluster-smoke trace-smoke degrade-bench bench serve example
 
 # CI gate: byte-compile everything, then the tier-1 suite
 check: compile test
@@ -26,6 +26,19 @@ cluster-bench:
 # absorb with SHALLOW service instead of hard SHEDs
 cluster-smoke:
 	$(PYTHON) -m repro.launch.cluster --smoke
+
+# cluster-smoke with the observability plane on: emits a Chrome trace
+# (Perfetto-loadable) + merged fleet metrics snapshot, then validates
+# both — well-formed events, matched B/E pairs, monotone ts, a full
+# admit->queue->batch->execute->respond ticket chain, a trainer publish
+# span, and per-(level,category) latency histograms (docs/observability.md)
+trace-smoke:
+	$(PYTHON) -m repro.launch.cluster --smoke \
+		--trace-out results/trace_smoke.json \
+		--metrics-json results/metrics_smoke.json \
+		--out results/cluster_smoke.json
+	$(PYTHON) tools/check_trace.py results/trace_smoke.json \
+		--require-chain --metrics results/metrics_smoke.json
 
 # Graceful-degradation sweep: ladder vs binary shedding across offered
 # loads (p99 / served fraction / recall incl. SHALLOW / level mix)

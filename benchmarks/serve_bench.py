@@ -156,6 +156,50 @@ def backend_sweep(sys_, policies, batches, backends):
     return out
 
 
+def obs_overhead(sys_, policies, batches, repeats: int = 3) -> dict:
+    """Cost of the observability plane: the same stream through two
+    identical engines, one with tracing disabled (the default
+    NULL_TRACER — one falsy attribute check per site) and one with a
+    live `Tracer` recording the full ticket span chain into the ring.
+    Caching is off so every query pays the real rollout, and each mode
+    takes its best-of-N wall time to shave scheduler noise.  The gate:
+    tracing enabled must cost < 5% QPS."""
+    from repro.obs import Tracer
+    from repro.serving import EngineConfig, ServeEngine
+
+    batch = len(batches[0])
+    bucket = 1 << (batch - 1).bit_length()
+    volume = batch * (len(batches) - 1)
+    qps, n_events = {}, 0
+    for mode in ("tracing_off", "tracing_on"):
+        tracer = Tracer() if mode == "tracing_on" else None
+        kw = {"tracer": tracer} if tracer is not None else {}
+        engine = ServeEngine(sys_, policies, EngineConfig(
+            min_bucket=bucket, max_bucket=bucket, cache_capacity=0),
+            **kw)
+        engine.warmup()
+        engine_serve_batches(engine, batches[:1])   # post-compile warm
+        best = float("inf")
+        for _ in range(repeats):
+            t0 = time.time()
+            engine_serve_batches(engine, batches[1:])
+            best = min(best, time.time() - t0)
+        qps[mode] = volume / best
+        if tracer is not None:
+            n_events = len(tracer.log)
+    penalty = 1.0 - qps["tracing_on"] / qps["tracing_off"]
+    assert penalty < 0.05, \
+        (f"tracing overhead {penalty:.1%} >= 5% "
+         f"(off={qps['tracing_off']:.1f} qps, "
+         f"on={qps['tracing_on']:.1f} qps)")
+    return {
+        "qps_tracing_off": qps["tracing_off"],
+        "qps_tracing_on": qps["tracing_on"],
+        "qps_penalty_frac": penalty,
+        "trace_events_recorded": n_events,
+    }
+
+
 def build_system(n_docs: int, n_queries: int, iters: int):
     from repro.data.querylog import CAT1, CAT2, QueryLogConfig
     from repro.index.corpus import CorpusConfig
@@ -248,6 +292,17 @@ def main(fast: bool = False,
     for name, row in sweep.items():
         for k, v in row.items():
             print(f"serve_bench.backend.{name}.{k},{v:.4f}")
+
+    # ------------------------------------------------------- obs overhead
+    # The tracing plane must be effectively free when off (one falsy
+    # attribute check per site) and < 5% QPS when recording full ticket
+    # span chains.  Hard-asserted here so a regression fails the bench.
+    obs = obs_overhead(sys_, policies,
+                       batches[: warm + max(2, n_batches // 3)])
+    out["obs"] = obs
+    for k, v in obs.items():
+        print(f"serve_bench.obs.{k},{v:.4f}" if isinstance(v, float)
+              else f"serve_bench.obs.{k},{v}")
 
     from benchmarks._results import record
     record("serve_bench",

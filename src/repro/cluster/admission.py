@@ -37,6 +37,7 @@ from typing import Dict, Optional, Tuple
 
 import numpy as np
 
+from repro.obs import MetricsRegistry
 from repro.serving.levels import EXECUTED_LEVELS, ServiceLevel
 
 __all__ = ["Admission", "Shed", "UCostEstimator", "AdmissionController"]
@@ -230,7 +231,8 @@ class AdmissionController:
     def __init__(self, estimator: UCostEstimator,
                  u_inflight_budget: float = float("inf"),
                  ladder: bool = True,
-                 full_watermark: float = 0.5):
+                 full_watermark: float = 0.5,
+                 registry: Optional[MetricsRegistry] = None):
         if u_inflight_budget <= 0:
             raise ValueError("u_inflight_budget must be > 0")
         if not 0.0 < full_watermark <= 1.0:
@@ -244,6 +246,15 @@ class AdmissionController:
         self.admitted = 0
         self.shed = 0
         self.level_counts: Dict[int, int] = {int(l): 0 for l in ServiceLevel}
+        # Mirror the ladder mix and the ledger level into the shared
+        # metrics plane (the SLO control loop watches reserved_u's peak
+        # against the budget); a standalone controller gets a private
+        # registry so the recording code has one shape.
+        reg = registry if registry is not None else MetricsRegistry()
+        self._decision_counters = {
+            int(l): reg.counter("admission.decisions", level=l.name)
+            for l in ServiceLevel}
+        self._g_reserved = reg.gauge("admission.reserved_u")
 
     # -------------------------------------------------------------- decide
     def decide(self, qid: int, cache_available: bool = False,
@@ -292,6 +303,8 @@ class AdmissionController:
                 self.shed += 1
             else:
                 self.admitted += 1
+            self._decision_counters[int(level)].inc()
+            self._g_reserved.set(self.reserved_u)
             return Admission(level=level, est_u=est_full, reserved_u=reserve)
 
     def release(self, reserved_u: float, actual_u: Optional[float] = None,
@@ -303,6 +316,7 @@ class AdmissionController:
         version) that served it."""
         with self._lock:
             self.reserved_u = max(0.0, self.reserved_u - reserved_u)
+            self._g_reserved.set(self.reserved_u)
         if actual_u is not None and qid is not None:
             self.estimator.observe(qid, actual_u, level=level,
                                    version=version)

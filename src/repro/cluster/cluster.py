@@ -34,6 +34,7 @@ from typing import Deque, List, Optional, Sequence, Union
 
 import numpy as np
 
+from repro.obs import NULL_TRACER, MetricsRegistry, Tracer, merge_snapshots
 from repro.policies import PolicyStore
 from repro.serving import EngineConfig, ServiceLevel
 from repro.serving.cache import canonical_query_key
@@ -67,6 +68,9 @@ class ClusterConfig:
     affinity_table: int = 65536           # key -> cache-owner LRU entries
     tap_capacity: int = 8192              # served-traffic window per category
     tap_degraded_boost: float = 2.0       # tap weight for non-FULL tickets
+    tap_holdout_every: int = 0            # divert every Nth record to the
+                                          # eval holdout (0 = off)
+    tap_holdout_capacity: int = 1024      # held-out window per category
 
 
 class ReplicaSet:
@@ -74,28 +78,41 @@ class ReplicaSet:
 
     def __init__(self, system, store: PolicyStore,
                  cfg: ClusterConfig = ClusterConfig(),
-                 engine_cfg: EngineConfig = EngineConfig()):
+                 engine_cfg: EngineConfig = EngineConfig(),
+                 tracer: Tracer = NULL_TRACER):
         if cfg.n_replicas < 1:
             raise ValueError("n_replicas must be >= 1")
         self.system = system
         self.store = store
         self.cfg = cfg
+        self.tracer = tracer
+        # Cluster-plane instruments (admission/routing); replica-plane
+        # metrics live in each engine's registry and fold together in
+        # metrics_snapshot().
+        self.registry = MetricsRegistry()
+        self._c_submitted = self.registry.counter("cluster.submitted")
+        self._c_shed = self.registry.counter("cluster.shed",
+                                             where="admission")
         self.router = make_router(cfg.routing, spill_margin=cfg.spill_margin,
-                                  owner_spill_depth=cfg.owner_spill_depth)
+                                  owner_spill_depth=cfg.owner_spill_depth,
+                                  registry=self.registry)
         self.admission = AdmissionController(
             UCostEstimator(system, n_df_bins=cfg.n_df_bins,
                            prior_u=cfg.prior_u,
                            prior_shallow_u=cfg.prior_shallow_u),
             u_inflight_budget=cfg.u_inflight_budget,
-            ladder=cfg.ladder, full_watermark=cfg.full_watermark)
+            ladder=cfg.ladder, full_watermark=cfg.full_watermark,
+            registry=self.registry)
         # Every completion (responses AND sheds) is recorded here; a
         # TrainerLoop pointed at it learns from served traffic instead
         # of the query log (docs/cluster.md, "trainer tap").
         self.tap = ServedTrafficTap(capacity=cfg.tap_capacity,
-                                    degraded_boost=cfg.tap_degraded_boost)
+                                    degraded_boost=cfg.tap_degraded_boost,
+                                    holdout_every=cfg.tap_holdout_every,
+                                    holdout_capacity=cfg.tap_holdout_capacity)
         self.replicas: List[Replica] = [
             Replica(i, system, store, engine_cfg,
-                    on_complete=self._on_complete)
+                    on_complete=self._on_complete, tracer=tracer)
             for i in range(cfg.n_replicas)
         ]
         self._lock = threading.Lock()
@@ -142,6 +159,10 @@ class ReplicaSet:
         cat = int(self.system.log.category[qid])
         key = canonical_query_key(self.system.log.terms[qid], cat)
         ticket = ClusterTicket(qid, cat, cache_key=key)
+        # One trace track per ticket: the admit → queue → batch →
+        # execute → respond chain lives on it, ended at completion.
+        ticket.span = self.tracer.root_span("ticket", qid=qid, category=cat)
+        self._c_submitted.inc()
         with self._lock:
             self.n_submitted += 1
             owner = self._key_owner.get(key)
@@ -154,17 +175,22 @@ class ReplicaSet:
             owner = None
         # The SHALLOW rung is only real if the head snapshot ships a
         # fallback policy for this category (they travel together).
+        adm_span = ticket.span.child("admit")
         adm = self.admission.decide(
             qid, cache_available=owner is not None,
             shallow_available=cat in self.store.snapshot().fallbacks)
+        adm_span.end(level=ServiceLevel(adm.level).name, est_u=adm.est_u)
         ticket.est_u = adm.est_u
         ticket.reserved_u = adm.reserved_u
         ticket.level = adm.level
         if adm.level == ServiceLevel.SHED:
+            self._c_shed.inc()
             with self._lock:
                 self.n_shed += 1
             self.tap.record(qid, cat, ServiceLevel.SHED)
             ticket.complete(Shed(qid, cat, adm.est_u, "u_budget_hot"))
+            if ticket.span:
+                ticket.span.end(level="SHED", reason="u_budget_hot")
             return ticket
         if adm.level == ServiceLevel.CACHED_ONLY:
             # only priced when the owner's cache holds the key; route
@@ -187,6 +213,11 @@ class ReplicaSet:
                     # gauge that just crossed the threshold
                     depths[owner] = d_owner
             idx = self.router.pick(stable_query_hash(key), depths, owner)
+        if ticket.span:
+            ticket.span.instant("route", replica=idx,
+                                sticky=owner is not None and idx == owner)
+            # Covers route → replica-thread pickup; the replica ends it.
+            ticket.inbox_span = ticket.span.child("inbox", replica=idx)
         with self._lock:
             self._key_owner[key] = idx
             self._key_owner.move_to_end(key)
@@ -229,13 +260,30 @@ class ReplicaSet:
                 self._lags.append(lag)
                 self._latencies.append(ticket.latency_s)
             self.tap.record(ticket.qid, ticket.category, ticket.level)
+            if ticket.span:
+                ticket.span.end(level=ServiceLevel(result.level).name,
+                                u=result.u, cached=result.cached,
+                                version=result.policy_version)
         else:  # shed inside the replica (queue full / shutdown / error)
             self.admission.release(ticket.reserved_u)
             with self._lock:
                 self.n_shed += 1
             self.tap.record(ticket.qid, ticket.category, ServiceLevel.SHED)
+            if ticket.span:
+                ticket.span.end(level="SHED",
+                                reason=getattr(result, "reason", None))
 
     # -------------------------------------------------------------- stats
+    def metrics_snapshot(self) -> dict:
+        """The fleet metrics view: every replica registry (request/
+        latency/u/queue-wait instruments, cache counters) folded into
+        one snapshot with the cluster-plane instruments — counters and
+        histograms add, gauges take the max.  JSON-serializable; this
+        is what ``--metrics-json`` writes."""
+        return merge_snapshots(
+            [r.engine.telemetry.registry.snapshot() for r in self.replicas]
+            + [self.registry.snapshot()])
+
     def version_lag(self) -> dict:
         """Current per-replica lag vs the store head, plus the response
         window's observed lag distribution."""

@@ -22,6 +22,7 @@ import threading
 from collections import deque
 from typing import Callable, Dict, Optional, Union
 
+from repro.obs import NULL_TRACER, Tracer
 from repro.policies import StalePolicyError
 from repro.serving import (AdmissionError, CacheOnlyMiss, EngineConfig,
                            ServeEngine, ServiceLevel)
@@ -48,6 +49,11 @@ class ClusterTicket:
         self.level = level            # admission's ladder decision
         self.reserved_u = 0.0         # what the ledger holds for us
         self.replica: Optional[int] = None
+        # Trace context (repro.obs): the cluster opens ``span`` (the
+        # ticket's root) at admission and ends it at completion;
+        # ``inbox_span`` covers route → replica-thread pickup.
+        self.span = None
+        self.inbox_span = None
         self.t_submit = Telemetry.now()
         self.t_done: Optional[float] = None
         self._event = threading.Event()
@@ -84,9 +90,10 @@ class Replica:
                  engine_cfg: EngineConfig = EngineConfig(),
                  on_complete: Optional[Callable[[ClusterTicket, Result], None]] = None,
                  max_consecutive_failures: int = 3,
-                 poll_s: float = 0.005):
+                 poll_s: float = 0.005,
+                 tracer: Tracer = NULL_TRACER):
         self.idx = idx
-        self.engine = ServeEngine(system, store, engine_cfg)
+        self.engine = ServeEngine(system, store, engine_cfg, tracer=tracer)
         self.on_complete = on_complete
         self.max_consecutive_failures = max_consecutive_failures
         self.poll_s = poll_s
@@ -186,8 +193,12 @@ class Replica:
         return tickets, False
 
     def _submit_one(self, ticket: ClusterTicket) -> None:
+        if ticket.inbox_span:
+            ticket.inbox_span.end()
+            ticket.inbox_span = None      # idempotent across retries
         try:
-            rid = self.engine.submit(ticket.qid, ticket.level)
+            rid = self.engine.submit(ticket.qid, ticket.level,
+                                     span=ticket.span)
         except AdmissionError:
             self._finish(ticket, Shed(ticket.qid, ticket.category,
                                       ticket.est_u, "replica_queue_full"))

@@ -18,6 +18,8 @@ import threading
 import zlib
 from typing import Optional, Sequence
 
+from repro.obs import MetricsRegistry
+
 __all__ = ["stable_query_hash", "Router", "RoundRobinRouter",
            "QueueAwareRouter", "make_router"]
 
@@ -90,7 +92,8 @@ class QueueAwareRouter(Router):
     name = "queue_aware"
 
     def __init__(self, spill_margin: int = 4,
-                 owner_spill_depth: Optional[int] = 32):
+                 owner_spill_depth: Optional[int] = 32,
+                 registry: Optional[MetricsRegistry] = None):
         if spill_margin < 0:
             raise ValueError("spill_margin must be >= 0")
         if owner_spill_depth is not None and owner_spill_depth < 0:
@@ -102,6 +105,10 @@ class QueueAwareRouter(Router):
         self.sticky_picks = 0
         self.spills = 0
         self.owner_spills = 0
+        reg = registry if registry is not None else MetricsRegistry()
+        self._pick_counters = {
+            kind: reg.counter("router.picks", kind=kind)
+            for kind in ("sticky", "affinity", "spill", "owner_spill")}
 
     def wants_full_depths(self, owner_depth: int) -> bool:
         return (self.owner_spill_depth is not None
@@ -115,11 +122,13 @@ class QueueAwareRouter(Router):
             if not self.wants_full_depths(depths[owner]):
                 with self._lock:
                     self.sticky_picks += 1
+                self._pick_counters["sticky"].inc()
                 return owner
             # saturated owner: a likely hit is not worth its backlog —
             # fall through to the depth-balanced first-seen path
             with self._lock:
                 self.owner_spills += 1
+            self._pick_counters["owner_spill"].inc()
             avoid = owner
         pref = key_hash % n
         best = min(range(n), key=depths.__getitem__)
@@ -131,13 +140,16 @@ class QueueAwareRouter(Router):
             # spill so stats' pick total stays complete
             with self._lock:
                 self.spills += 1
+            self._pick_counters["spill"].inc()
             return best
         if depths[pref] - depths[best] > self.spill_margin:
             with self._lock:
                 self.spills += 1
+            self._pick_counters["spill"].inc()
             return best
         with self._lock:
             self.affinity_picks += 1
+        self._pick_counters["affinity"].inc()
         return pref
 
     def stats(self) -> dict:
@@ -155,12 +167,14 @@ class QueueAwareRouter(Router):
 
 
 def make_router(name: str, spill_margin: int = 4,
-                owner_spill_depth: Optional[int] = 32) -> Router:
+                owner_spill_depth: Optional[int] = 32,
+                registry: Optional[MetricsRegistry] = None) -> Router:
     if name == "round_robin":
         return RoundRobinRouter()
     if name == "queue_aware":
         return QueueAwareRouter(spill_margin=spill_margin,
-                                owner_spill_depth=owner_spill_depth)
+                                owner_spill_depth=owner_spill_depth,
+                                registry=registry)
     raise ValueError(
         f"unknown routing policy {name!r}; available: "
         "('queue_aware', 'round_robin')")

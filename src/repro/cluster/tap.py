@@ -42,16 +42,29 @@ class ServedTrafficTap:
     the whole history.
     """
 
-    def __init__(self, capacity: int = 8192, degraded_boost: float = 2.0):
+    def __init__(self, capacity: int = 8192, degraded_boost: float = 2.0,
+                 holdout_every: int = 0, holdout_capacity: int = 1024):
         if capacity < 1:
             raise ValueError("capacity must be >= 1")
         if degraded_boost <= 0:
             raise ValueError("degraded_boost must be > 0")
+        if holdout_every < 0:
+            raise ValueError("holdout_every must be >= 0 (0 disables)")
         self.capacity = int(capacity)
         self.degraded_boost = float(degraded_boost)
+        # Every ``holdout_every``-th record per category is diverted to
+        # a held-out eval window the trainer's promotion gate probes —
+        # evaluation traffic the training sampler never sees (0 = off,
+        # the standalone default; the cluster turns it on via
+        # ClusterConfig.tap_holdout_every).
+        self.holdout_every = int(holdout_every)
+        self.holdout_capacity = int(holdout_capacity)
         self._lock = threading.Lock()
         self._window: Dict[int, deque] = {}       # category -> (qid, w)
+        self._holdout: Dict[int, deque] = {}      # category -> qid
+        self._seen: Dict[int, int] = {}           # category -> record count
         self.n_recorded = 0
+        self.n_held_out = 0
         self.level_counts: Dict[int, int] = {int(l): 0 for l in ServiceLevel}
 
     # -------------------------------------------------------------- feed
@@ -60,12 +73,23 @@ class ServedTrafficTap:
         level = ServiceLevel(level)
         w = self.degraded_boost if level.degraded else 1.0
         with self._lock:
-            dq = self._window.get(int(category))
-            if dq is None:
-                dq = self._window[int(category)] = deque(maxlen=self.capacity)
-            dq.append((int(qid), w))
+            cat = int(category)
             self.n_recorded += 1
             self.level_counts[int(level)] += 1
+            if self.holdout_every:
+                n = self._seen[cat] = self._seen.get(cat, 0) + 1
+                if n % self.holdout_every == 0:
+                    hq = self._holdout.get(cat)
+                    if hq is None:
+                        hq = self._holdout[cat] = deque(
+                            maxlen=self.holdout_capacity)
+                    hq.append(int(qid))
+                    self.n_held_out += 1
+                    return
+            dq = self._window.get(cat)
+            if dq is None:
+                dq = self._window[cat] = deque(maxlen=self.capacity)
+            dq.append((int(qid), w))
 
     # ------------------------------------------------------------ sample
     def size(self, category: Optional[int] = None) -> int:
@@ -89,14 +113,40 @@ class ServedTrafficTap:
         return rng.choice(qids, size=int(batch), replace=True,
                           p=weights / weights.sum())
 
+    # ----------------------------------------------------------- holdout
+    def holdout_size(self, category: Optional[int] = None) -> int:
+        with self._lock:
+            if category is not None:
+                return len(self._holdout.get(int(category), ()))
+            return sum(len(dq) for dq in self._holdout.values())
+
+    def holdout_sample(self, category: int, n: int,
+                       rng: np.random.Generator) -> Optional[np.ndarray]:
+        """Up to ``n`` *distinct* held-out qids for the category — the
+        promotion gate's probe set — or None while the holdout window
+        is empty.  Distinct because the gate scores recall per query;
+        popularity weighting belongs to training, not evaluation."""
+        with self._lock:
+            dq = self._holdout.get(int(category))
+            if not dq:
+                return None
+            qids = np.unique(np.fromiter(dq, dtype=np.int64, count=len(dq)))
+        if len(qids) <= n:
+            return qids
+        return rng.choice(qids, size=int(n), replace=False)
+
     def stats(self) -> dict:
         with self._lock:
             return {
                 "capacity": self.capacity,
                 "degraded_boost": self.degraded_boost,
                 "n_recorded": self.n_recorded,
+                "n_held_out": self.n_held_out,
+                "holdout_every": self.holdout_every,
                 "window_sizes": {c: len(dq)
                                  for c, dq in sorted(self._window.items())},
+                "holdout_sizes": {c: len(dq)
+                                  for c, dq in sorted(self._holdout.items())},
                 "levels": {ServiceLevel(k).name: v
                            for k, v in sorted(self.level_counts.items())},
             }

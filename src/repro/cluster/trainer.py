@@ -43,6 +43,7 @@ from repro.core.qlearning import init_q, linear_epsilon
 from repro.core.rollout import unified_rollout
 from repro.core.telescope import l1_prune
 from repro.data.querylog import CAT1, CAT2
+from repro.obs import NULL_TRACER, Tracer
 from repro.policies import Policy, PolicyStore, TabularQPolicy
 
 from .tap import ServedTrafficTap
@@ -97,6 +98,14 @@ class TrainerConfig:
     gate: bool = True             # eval-gated promotion (monotone probe score)
     probe_queries: int = 32       # probe-set size per category
     keep: int = 100               # L1 prune depth for probe scoring
+    # Gate on a held-out slice of the served-traffic tap instead of the
+    # fixed query-log probe set (needs a source with tap holdout
+    # enabled; falls back to the fixed set while the holdout is empty).
+    # The probe set is then fresh per gate, so the incumbent is
+    # re-scored on the same queries — promotion compares both policies
+    # on live traffic, but scores are no longer monotone in version
+    # (each gate is a new sample), hence opt-in.
+    probe_from_tap: bool = False
     publish_initial: bool = True  # publish v1 before any training
     fallback_plan_len: int = 2    # SHALLOW fallback = plan prefix of this many entries
     # With a served-traffic source, how long one epoch may wait for the
@@ -120,13 +129,15 @@ class TrainerLoop:
     def __init__(self, system, store: PolicyStore,
                  cats: Sequence[int] = (CAT1, CAT2),
                  cfg: TrainerConfig = TrainerConfig(),
-                 source: Optional[ServedTrafficTap] = None):
+                 source: Optional[ServedTrafficTap] = None,
+                 tracer: Tracer = NULL_TRACER):
         assert system.bins is not None, "fit_state_bins() first"
         self.system = system
         self.store = store
         self.cats = tuple(cats)
         self.cfg = cfg
         self.source = source
+        self.tracer = tracer
         rng = np.random.default_rng(cfg.seed)
         self._rng = rng
         self._key = jax.random.key(cfg.seed)
@@ -151,32 +162,70 @@ class TrainerLoop:
         self.error: Optional[BaseException] = None
 
     # ------------------------------------------------------------ publish
-    def _gate(self) -> Tuple[Dict[int, Policy], Dict[int, float]]:
+    def _probe_set(self, cat: int) -> Tuple[np.ndarray, str]:
+        """The gate's probe queries for one category: a fresh held-out
+        sample of served traffic when tap gating is on and the holdout
+        has filled, else the fixed query-log slice."""
+        if self.cfg.probe_from_tap and self.source is not None:
+            qids = self.source.holdout_sample(cat, self.cfg.probe_queries,
+                                              self._rng)
+            if qids is not None and len(qids):
+                return qids, "tap"
+        return self.probe_qids[cat], "log"
+
+    def _gate(self) -> Tuple[Dict[int, Policy], Dict[int, float], Dict[int, str]]:
         """Score current Q-tables on the probe sets; promote improvers."""
-        scores = {}
+        scores: Dict[int, float] = {}
+        sources: Dict[int, str] = {}
         for c in self.cats:
-            if self.cfg.gate:
-                s = probe_recall(self.system, TabularQPolicy(self._q[c]),
-                                 self.probe_qids[c], keep=self.cfg.keep)
-                if s >= self._best_score[c]:
+            if not self.cfg.gate:
+                self._best_q[c] = self._q[c]
+                scores[c], sources[c] = float("nan"), "none"
+                continue
+            probe, sources[c] = self._probe_set(c)
+            s = probe_recall(self.system, TabularQPolicy(self._q[c]),
+                             probe, keep=self.cfg.keep)
+            if sources[c] == "tap":
+                # The probe set is a fresh traffic sample each gate, so
+                # the incumbent's remembered score is for *different*
+                # queries — re-score it on the same probe so promotion
+                # compares the two policies apples-to-apples.
+                incumbent = (s if self._best_q[c] is self._q[c]
+                             else probe_recall(
+                                 self.system, TabularQPolicy(self._best_q[c]),
+                                 probe, keep=self.cfg.keep))
+                promoted = s >= incumbent
+                if promoted:
+                    self._best_q[c] = self._q[c]
+                scores[c] = self._best_score[c] = s if promoted else incumbent
+            else:
+                promoted = s >= self._best_score[c]
+                if promoted:
                     self._best_score[c] = s
                     self._best_q[c] = self._q[c]
                 scores[c] = self._best_score[c]
-            else:
-                self._best_q[c] = self._q[c]
-                scores[c] = float("nan")
+            self.tracer.instant("gate_decision", category=c,
+                                probe_recall=s, promoted=promoted,
+                                probe_source=sources[c])
         return ({c: TabularQPolicy(self._best_q[c]) for c in self.cats},
-                scores)
+                scores, sources)
 
     def publish_now(self) -> int:
         """Gate + publish the current tables immediately (e.g. to get
         v1 up before replicas construct); returns the version."""
-        policies, scores = self._gate()
-        version = self.store.publish(policies, fallbacks=dict(self._fallbacks))
+        with self.tracer.span("eval_gate") as gate_span:
+            policies, scores, sources = self._gate()
+            gate_span.end(probe_recall={str(c): scores[c]
+                                        for c in self.cats})
+        with self.tracer.span("publish") as pub_span:
+            version = self.store.publish(policies,
+                                         fallbacks=dict(self._fallbacks))
+            pub_span.end(version=version)
         self.history.append({
             "version": version,
             "epoch": self.epochs_done,
             "probe_recall": {c: scores[c] for c in self.cats},
+            "probe_source": sources,
             "tap_batches": self.tap_batches,
             "log_batches": self.log_batches,
         })
@@ -196,6 +245,7 @@ class TrainerLoop:
             qids = self.source.sample(cat, self.cfg.batch, self._rng)
             if qids is not None:
                 self.tap_batches += 1
+                self.tracer.instant("tap_draw", category=cat, n=len(qids))
                 return qids
             if time.monotonic() >= deadline:
                 break
@@ -206,13 +256,14 @@ class TrainerLoop:
     def _epoch(self, it: int) -> None:
         eps = linear_epsilon(it, self.cfg.iters, self.cfg.eps_start,
                              self.cfg.eps_end)
-        for c in self.cats:
-            qids = self._sample(c)
-            if qids is None:
-                continue                  # tap starved: epoch still counts
-            self._key, sub = jax.random.split(self._key)
-            self._q[c], _ = self.system.policy_train_step(
-                c, self._q[c], sub, eps, qids)
+        with self.tracer.span("epoch", it=it):
+            for c in self.cats:
+                qids = self._sample(c)
+                if qids is None:
+                    continue              # tap starved: epoch still counts
+                self._key, sub = jax.random.split(self._key)
+                self._q[c], _ = self.system.policy_train_step(
+                    c, self._q[c], sub, eps, qids)
         self.epochs_done += 1
 
     def _run(self) -> None:

@@ -54,6 +54,13 @@ def main() -> None:
     ap.add_argument("--max-bucket", type=int, default=32)
     ap.add_argument("--cache", type=int, default=512)
     ap.add_argument("--out", default="results/cluster.json")
+    ap.add_argument("--trace-out", default=None,
+                    help="write a Chrome trace-event JSON (Perfetto-"
+                         "loadable) of the whole run to this path")
+    ap.add_argument("--metrics-json", default=None,
+                    help="write the merged fleet metrics snapshot "
+                         "(counters/gauges/per-(level,category) "
+                         "histograms) to this path")
     ap.add_argument("--smoke", action="store_true",
                     help="CI gate: tiny sizes + zero-dropped assertion")
     args = ap.parse_args()
@@ -68,9 +75,12 @@ def main() -> None:
                                TrainerConfig, TrainerLoop)
     from repro.data.querylog import CAT1, CAT2, QueryLogConfig
     from repro.index.corpus import CorpusConfig
+    from repro.obs import NULL_TRACER, Tracer
     from repro.policies import PolicyStore
     from repro.serving import EngineConfig
     from repro.system import RetrievalSystem, SystemConfig
+
+    tracer = Tracer() if args.trace_out else NULL_TRACER
 
     sys_ = RetrievalSystem(SystemConfig(
         corpus=CorpusConfig(n_docs=args.n_docs, vocab_size=1024, seed=0),
@@ -88,17 +98,22 @@ def main() -> None:
     store = PolicyStore(staleness_bound=args.staleness_bound)
     trainer = TrainerLoop(sys_, store, cfg=TrainerConfig(
         iters=args.iters, publish_every=args.publish_every,
-        batch=args.train_batch, publish_initial=False))
+        batch=args.train_batch, publish_initial=False,
+        # promotion gate probes a held-out slice of served traffic once
+        # the tap holdout fills (falls back to the log slice before)
+        probe_from_tap=True), tracer=tracer)
     trainer.publish_now()                 # v1 up before replicas construct
     cluster = ReplicaSet(sys_, store, ClusterConfig(
         n_replicas=args.replicas, routing=args.routing,
         u_inflight_budget=args.u_budget_inflight,
         ladder=not args.no_ladder,
+        tap_holdout_every=4,              # eval holdout for the gate
         # keep the cold SHALLOW estimate inside its provable cap, so a
         # degraded admission can never be priced above what it can cost
         prior_shallow_u=float(min(shallow_caps.values()))),
         EngineConfig(min_bucket=args.min_bucket, max_bucket=args.max_bucket,
-                     cache_capacity=args.cache, backend=args.backend))
+                     cache_capacity=args.cache, backend=args.backend),
+        tracer=tracer)
     trainer.source = cluster.tap          # train on served traffic only
     cluster.warmup()
 
@@ -147,6 +162,8 @@ def main() -> None:
         "versions_published": trainer.versions_published,
         "probe_recall_per_version": [row["probe_recall"]
                                      for row in trainer.history],
+        "probe_source_per_version": [row["probe_source"]
+                                     for row in trainer.history],
         "n_results": len(results),
         "n_shed": n_shed,
         "trainer_tap_batches": trainer.tap_batches,
@@ -189,6 +206,16 @@ def main() -> None:
 
     Path(args.out).parent.mkdir(parents=True, exist_ok=True)
     Path(args.out).write_text(json.dumps(out, indent=1, default=str))
+
+    if args.trace_out:
+        tracer.log.write_chrome(args.trace_out, process_name="repro-cluster")
+        print(f"[trace] {len(tracer.log)} events -> {args.trace_out} "
+              f"(open at ui.perfetto.dev)")
+    if args.metrics_json:
+        p = Path(args.metrics_json)
+        p.parent.mkdir(parents=True, exist_ok=True)
+        p.write_text(json.dumps(cluster.metrics_snapshot(), indent=1))
+        print(f"[metrics] fleet snapshot -> {args.metrics_json}")
 
 
 if __name__ == "__main__":

@@ -39,12 +39,21 @@ def main() -> None:
                     help="logical index shards for scatter-gather serving")
     ap.add_argument("--backend", default="xla",
                     help="rollout backend (see repro.serving.available_backends)")
+    ap.add_argument("--trace-out", default=None,
+                    help="write a Chrome trace-event JSON (Perfetto-"
+                         "loadable) of the serving run to this path")
+    ap.add_argument("--metrics-json", default=None,
+                    help="write the engine's metrics-registry snapshot "
+                         "to this path")
     args = ap.parse_args()
 
     from repro.data.querylog import CAT1, CAT2, QueryLogConfig
     from repro.index.corpus import CorpusConfig
+    from repro.obs import NULL_TRACER, Tracer
     from repro.serving import EngineConfig, ServeEngine
     from repro.system import RetrievalSystem, SystemConfig
+
+    tracer = Tracer() if args.trace_out else NULL_TRACER
 
     sys_ = RetrievalSystem(SystemConfig(
         corpus=CorpusConfig(n_docs=args.n_docs, vocab_size=2048, seed=0),
@@ -61,7 +70,7 @@ def main() -> None:
     engine = ServeEngine(sys_, store, EngineConfig(
         min_bucket=args.min_bucket, max_bucket=args.max_bucket,
         cache_capacity=args.cache, n_shards=args.shards,
-        backend=args.backend))
+        backend=args.backend), tracer=tracer)
     n_compiles_warm = engine.warmup()
     print(f"warmup: {n_compiles_warm} bucket executables compiled "
           f"(policy snapshot v{engine.policy_version})")
@@ -100,6 +109,16 @@ def main() -> None:
     Path(args.out).write_text(json.dumps(stats, indent=1))
     Path(args.out).with_name("serve_summary.json").write_text(
         json.dumps(summary, indent=1))
+    if args.trace_out:
+        tracer.log.write_chrome(args.trace_out, process_name="repro-serve")
+        print(f"trace: {len(tracer.log)} events -> {args.trace_out} "
+              f"(open at ui.perfetto.dev)")
+    if args.metrics_json:
+        p = Path(args.metrics_json)
+        p.parent.mkdir(parents=True, exist_ok=True)
+        p.write_text(json.dumps(engine.telemetry.registry.snapshot(),
+                                indent=1))
+        print(f"metrics: registry snapshot -> {args.metrics_json}")
 
 
 if __name__ == "__main__":

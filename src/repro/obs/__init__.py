@@ -1,0 +1,30 @@
+"""Observability plane: unified metrics registry + ticket-scoped tracing.
+
+`metrics` holds the mergeable counters/gauges/histograms every serving
+layer records into; `trace` holds the Span/Tracer/TraceLog machinery
+that follows a ticket from admission to kernel and exports a
+Perfetto-loadable Chrome trace.  See docs/observability.md.
+"""
+from .metrics import (
+    Counter,
+    Gauge,
+    Histogram,
+    MetricsRegistry,
+    merge_snapshots,
+    metric_key,
+)
+from .trace import NULL_SPAN, NULL_TRACER, Span, TraceLog, Tracer
+
+__all__ = [
+    "Counter",
+    "Gauge",
+    "Histogram",
+    "MetricsRegistry",
+    "merge_snapshots",
+    "metric_key",
+    "NULL_SPAN",
+    "NULL_TRACER",
+    "Span",
+    "TraceLog",
+    "Tracer",
+]

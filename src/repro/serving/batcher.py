@@ -62,6 +62,15 @@ class PendingRequest:
     cache_key: object
     t_submit: float
     level: int = 0         # ServiceLevel value (FULL=0, SHALLOW=1)
+    # Ticket-scoped trace context (repro.obs).  ``span`` is the
+    # ticket's root span; ``queue_span`` is its open "queue" child,
+    # ended when the request drains into a micro-batch.  ``own_span``
+    # marks spans the engine created itself (standalone serving) and
+    # must therefore end at response time; cluster-provided spans are
+    # ended by the cluster's completion callback.
+    span: object = None
+    queue_span: object = None
+    own_span: bool = False
 
 
 @dataclasses.dataclass

@@ -14,6 +14,8 @@ from typing import Any, Hashable, Optional, Tuple
 
 import numpy as np
 
+from repro.obs import Counter, MetricsRegistry
+
 __all__ = ["canonical_query_key", "LRUResultCache"]
 
 
@@ -31,12 +33,31 @@ class LRUResultCache:
     keeps the engine's control flow identical with and without a cache.
     """
 
-    def __init__(self, capacity: int = 4096):
+    def __init__(self, capacity: int = 4096,
+                 registry: Optional[MetricsRegistry] = None):
         self.capacity = capacity
         self._entries: "OrderedDict[Hashable, Any]" = OrderedDict()
-        self.hits = 0
-        self.misses = 0
-        self.evictions = 0
+        # With a registry, the counters land in the shared metrics
+        # plane (mergeable across replicas, visible in --metrics-json);
+        # standalone caches get private instruments.  Either way the
+        # hits/misses/evictions attributes below read through.
+        reg = registry.counter if registry is not None else (
+            lambda name: Counter())
+        self._hits = reg("cache.hits")
+        self._misses = reg("cache.misses")
+        self._evictions = reg("cache.evictions")
+
+    @property
+    def hits(self) -> int:
+        return self._hits.value
+
+    @property
+    def misses(self) -> int:
+        return self._misses.value
+
+    @property
+    def evictions(self) -> int:
+        return self._evictions.value
 
     def __len__(self) -> int:
         return len(self._entries)
@@ -44,9 +65,9 @@ class LRUResultCache:
     def get(self, key: Hashable) -> Optional[Any]:
         if self.capacity > 0 and key in self._entries:
             self._entries.move_to_end(key)
-            self.hits += 1
+            self._hits.inc()
             return self._entries[key]
-        self.misses += 1
+        self._misses.inc()
         return None
 
     def contains(self, key: Hashable) -> bool:
@@ -67,7 +88,7 @@ class LRUResultCache:
     def record_miss(self) -> None:
         """Count a lookup the caller rejected after ``peek`` (absent or
         incompatible entry) without promoting anything."""
-        self.misses += 1
+        self._misses.inc()
 
     def put(self, key: Hashable, value: Any) -> None:
         if self.capacity <= 0:
@@ -76,7 +97,7 @@ class LRUResultCache:
         self._entries.move_to_end(key)
         while len(self._entries) > self.capacity:
             self._entries.popitem(last=False)
-            self.evictions += 1
+            self._evictions.inc()
 
     def clear(self) -> None:
         """Drop every entry but keep the hit/miss/eviction counters

@@ -26,6 +26,7 @@ from typing import Dict, List, Optional, Sequence, Union
 
 import numpy as np
 
+from repro.obs import NULL_TRACER, Tracer
 from repro.policies import Policy, PolicyStore
 from repro.serving.batcher import (
     BucketConfig, MicroBatch, PendingRequest, ShapeBucketBatcher,
@@ -95,9 +96,11 @@ class _CachedResult:
 class ServeEngine:
     def __init__(self, system,
                  policies: Union[PolicyStore, Dict[int, Policy]],
-                 cfg: EngineConfig = EngineConfig()):
+                 cfg: EngineConfig = EngineConfig(),
+                 tracer: Tracer = NULL_TRACER):
         self.system = system
         self.cfg = cfg
+        self.tracer = tracer
         if isinstance(policies, PolicyStore):
             self.store = policies
         elif isinstance(policies, dict):
@@ -111,11 +114,15 @@ class ServeEngine:
                 f"dict, got {type(policies).__name__}")
         self._snapshot = self.store.snapshot()
         self.bucket_cfg = BucketConfig(cfg.min_bucket, cfg.max_bucket)
+        self.telemetry = Telemetry()
         self.batcher = ShapeBucketBatcher(self.bucket_cfg)
-        self.cache = LRUResultCache(cfg.cache_capacity)
+        # The cache shares the engine's registry so its hit/miss/
+        # eviction counters ride the same mergeable snapshot.
+        self.cache = LRUResultCache(cfg.cache_capacity,
+                                    registry=self.telemetry.registry)
         self.executor = ShardedExecutor(system, n_shards=cfg.n_shards,
                                         keep=cfg.keep, backend=cfg.backend)
-        self.telemetry = Telemetry()
+        self.executor.tracer = tracer
         self._next_id = 0
         # Requests drained from the queue and currently executing; with
         # queue_depth this is the load signal a cross-replica router
@@ -192,7 +199,8 @@ class ServeEngine:
 
     # ------------------------------------------------------------ submit
     def submit(self, qid: int,
-               level: ServiceLevel = ServiceLevel.FULL) -> int:
+               level: ServiceLevel = ServiceLevel.FULL,
+               span=None) -> int:
         """Admit one query-log query at a service level; returns its
         request id.
 
@@ -203,6 +211,12 @@ class ServeEngine:
         (category, level); a CACHED_ONLY miss raises
         :class:`CacheOnlyMiss` instead (it has no u budget to roll out
         with).  Raises AdmissionError when the queue is full.
+
+        ``span`` is the ticket's trace context: the cluster passes the
+        root span it opened at admission and keeps ownership (it ends
+        the span in its completion callback).  Without one, the engine
+        opens — and ends — its own per-ticket root span when tracing
+        is enabled.
         """
         level = ServiceLevel(level)
         if level == ServiceLevel.SHED:
@@ -212,12 +226,17 @@ class ServeEngine:
             # A publish between drains must not leave old-policy cache
             # entries answering new submissions.
             self.refresh_policies()
+        own_span = span is None
+        if own_span:
+            span = self.tracer.root_span("ticket", qid=int(qid),
+                                         level=int(level))
         t0 = Telemetry.now()
         rid = self._next_id
         self._next_id += 1
         log = self.system.log
         cat = int(log.category[qid])
         key = canonical_query_key(log.terms[qid], cat)
+        sub = span.child("submit", category=cat) if span else span
         # Cached responses embody the pinned snapshot's policy, so the
         # staleness bound applies to hits exactly as to rollouts.
         self.store.validate(self._snapshot.version)
@@ -232,6 +251,7 @@ class ServeEngine:
             hit = None
             self.cache.record_miss()
         if hit is not None:
+            span.instant("cache_hit", level=int(hit.level))
             t1 = Telemetry.now()
             # The cache is flushed on every version change, so a hit
             # always embodies the currently pinned snapshot.
@@ -243,8 +263,15 @@ class ServeEngine:
             self.telemetry.record_request(category=cat, latency_s=t1 - t0,
                                           u=hit.u, cached=True, t_done=t1,
                                           level=int(hit.level))
+            sub.end()
+            if own_span:
+                span.end(cached=True, level=int(hit.level))
             return rid
+        span.instant("cache_miss")
         if level == ServiceLevel.CACHED_ONLY:
+            sub.end()
+            if own_span:
+                span.end(error="cache_only_miss")
             raise CacheOnlyMiss(f"qid {qid}: no cache entry for {key}")
         # The queue cap guards the PENDING queue only — a cache hit
         # completes inline without queueing, so it must never be
@@ -252,11 +279,18 @@ class ServeEngine:
         # exactly the traffic the CACHED_ONLY rung relies on).
         if self.batcher.pending() >= self.cfg.admission_limit:
             self.telemetry.record_rejection()
+            sub.end()
+            if own_span:
+                span.end(error="admission_limit")
             raise AdmissionError(
                 f"pending={self.batcher.pending()} >= {self.cfg.admission_limit}")
+        sub.end()
         self.batcher.enqueue(PendingRequest(
             request_id=rid, qid=int(qid), category=cat, cache_key=key,
-            t_submit=t0, level=int(level)))
+            t_submit=t0, level=int(level), span=span,
+            queue_span=span.child("queue", category=cat,
+                                  level=int(level)) if span else span,
+            own_span=own_span))
         self.telemetry.observe_gauges(self.queue_depth, self._inflight)
         return rid
 
@@ -274,7 +308,20 @@ class ServeEngine:
             # FIFO front and shedding the replica's in-flight window.
             level = ServiceLevel.FULL
             policy = self._policy_for(mb.category, level)
+            self.tracer.instant("level_upgrade", category=mb.category,
+                                n=mb.n_real)
+        # Worker-thread view of the batch; each ticket additionally gets
+        # batch/execute/respond children on its own track below.
+        mb_span = self.tracer.span("microbatch", category=mb.category,
+                                   bucket=mb.bucket, n_real=mb.n_real,
+                                   level=int(level))
         t0 = Telemetry.now()
+        for req in mb.requests:
+            if req.queue_span:
+                req.queue_span.end(t1=t0)
+            self.telemetry.record_queue_wait(category=mb.category,
+                                             level=int(level),
+                                             wait_s=t0 - req.t_submit)
         self._inflight = mb.n_real
         self.telemetry.observe_gauges(self.queue_depth, self._inflight)
         try:
@@ -284,9 +331,15 @@ class ServeEngine:
             ids, sc, u, cnt = self.executor.execute(
                 policy, occ, scores, tp, level=int(level))
             t2 = Telemetry.now()
+        except Exception as err:
+            mb_span.end(error=type(err).__name__)
+            raise
         finally:
             self._inflight = 0
             self.telemetry.observe_gauges(self.queue_depth, 0)
+        if mb_span:
+            mb_span.child_at("batch_inputs", t0, t1)
+            mb_span.child_at("execute", t1, t2)
         version = self._snapshot.version
         self.telemetry.record_batch(category=mb.category, bucket=mb.bucket,
                                     n_real=mb.n_real, t_inputs_s=t1 - t0,
@@ -313,6 +366,16 @@ class ServeEngine:
                                           latency_s=latency, u=result.u,
                                           cached=False, t_done=t2,
                                           level=int(level))
+            if req.span:
+                # batch covers drain → inputs assembled; execute the
+                # rollout; respond the host-side completion.
+                req.span.child_at("batch", t0, t1, bucket=mb.bucket)
+                req.span.child_at("execute", t1, t2, u=result.u)
+                t3 = Telemetry.now()
+                req.span.child_at("respond", t2, t3)
+                if req.own_span:
+                    req.span.end(t1=t3, level=int(level), u=result.u)
+        mb_span.end()
 
     def _drain_queue(self, key: tuple, force: bool) -> int:
         n = 0

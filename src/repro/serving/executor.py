@@ -44,6 +44,7 @@ from repro.core.rollout import unified_rollout
 from repro.core.scan_backends import available_backends as scan_backends
 from repro.core.telescope import l1_prune, merge_shard_candidates
 from repro.index.corpus import N_FIELDS
+from repro.obs import NULL_TRACER
 from repro.policies import Policy
 
 __all__ = ["ShardedExecutor", "available_backends",
@@ -110,6 +111,9 @@ class ShardedExecutor:
         self._compiled: Dict[tuple, jax.stages.Compiled] = {}
         self.compile_count = 0
         self.execute_count = 0
+        # Set by the owning engine when tracing is on; compiles are the
+        # dominant cold-start latency, so each gets its own span.
+        self.tracer = NULL_TRACER
 
     # ----------------------------------------------------------- the step
     def _serve_fn(self, bins, policy, occ, scores, term_present):
@@ -176,7 +180,10 @@ class ShardedExecutor:
         key = (bucket, self.backend, int(level), self._policy_key(policy))
         exe = self._compiled.get(key)
         if exe is None:
-            exe = self._jit.lower(*self._abstract_args(bucket, policy)).compile()
+            with self.tracer.span("compile", bucket=bucket,
+                                  backend=self.backend, level=int(level)):
+                exe = self._jit.lower(
+                    *self._abstract_args(bucket, policy)).compile()
             self._compiled[key] = exe
             self.compile_count += 1
         return exe

@@ -5,11 +5,26 @@ blocks-accessed unit (shown linear in machine time), so both views of
 "cost" are recorded per request.  ``summary()`` aggregates into the
 p50/p99 + QPS shape every later scaling PR reports against.
 
-Per-request records live in a bounded sliding window (the engine is a
-long-running process; an unbounded list grows by one dict per request
-forever), while totals — request/cached/rejected counts — are plain
-counters, so summary percentiles are over the window but counts are
-lifetime-accurate.
+Storage is split by what each consumer needs:
+
+- **Counters / gauges / per-(level, category) histograms** live in a
+  :class:`repro.obs.MetricsRegistry` — mergeable across replicas (fleet
+  stats are a fold over snapshots) and JSON-serializable for
+  ``--metrics-json``.  The legacy attributes (``total_requests``,
+  ``rejected``, ``level_counts``, ``queue_depth`` …) are read-through
+  views onto those instruments.
+- **Per-request / per-batch records** stay in bounded sliding windows
+  (the engine is a long-running process; an unbounded list grows by one
+  dict per request forever) because summary percentiles are *exact*
+  ``np.quantile`` over the window — fixed histogram buckets are for the
+  merged fleet view, not for the benches that compare p99s to fractions
+  of a millisecond.
+
+QPS is the windowed request count over the *window's own* time span
+(first to last ``t_done`` currently in the deque).  Dividing by the
+lifetime span — as an earlier version did — underestimates QPS once the
+window wraps, because the numerator saturates at ``maxlen`` while the
+denominator keeps growing.
 """
 from __future__ import annotations
 
@@ -19,7 +34,9 @@ from typing import Deque, Dict, Optional
 
 import numpy as np
 
-__all__ = ["Telemetry", "pct"]
+from repro.obs import Counter, MetricsRegistry
+
+__all__ = ["Telemetry", "pct", "LATENCY_MS_EDGES", "U_EDGES"]
 
 
 def pct(xs, q: float) -> float:
@@ -30,50 +47,115 @@ def pct(xs, q: float) -> float:
 
 _pct = pct
 
+# Fixed bucket layouts shared by every replica so snapshots merge
+# elementwise (see docs/observability.md for the rationale).
+#: Latency / queue-wait edges in ms: 1-2-5 decades, 100 µs … 10 s.
+LATENCY_MS_EDGES = (0.1, 0.2, 0.5, 1.0, 2.0, 5.0, 10.0, 20.0, 50.0,
+                    100.0, 200.0, 500.0, 1000.0, 2000.0, 5000.0, 10000.0)
+#: u (index blocks accessed) edges: powers of two up to 128 Ki blocks.
+U_EDGES = tuple(float(2 ** i) for i in range(18))
+
 
 class Telemetry:
-    def __init__(self, window: int = 65536):
+    def __init__(self, window: int = 65536,
+                 registry: Optional[MetricsRegistry] = None):
+        self.registry = registry if registry is not None else MetricsRegistry()
         self.requests: Deque[dict] = deque(maxlen=window)
         self.batches: Deque[dict] = deque(maxlen=window)
-        self.total_requests = 0
-        self.total_cached = 0
-        self.rejected = 0
-        # ServiceLevel value -> lifetime count of served requests (the
-        # degradation-ladder mix; sheds never reach the engine).
-        self.level_counts: Dict[int, int] = {}
-        # Load gauges (current + lifetime peak), fed by the engine on
-        # every enqueue/drain — the router's balancing signal.
-        self.queue_depth = 0
-        self.inflight = 0
-        self.peak_queue_depth = 0
-        self.peak_inflight = 0
-        self._t_start: Optional[float] = None
-        self._t_last: Optional[float] = None
+        # Instrument handles — resolved once, recorded through on the
+        # hot path without re-deriving (name, labels) keys per event.
+        self._c_requests = self.registry.counter("serve.requests")
+        self._c_cached = self.registry.counter("serve.cached")
+        self._c_rejected = self.registry.counter("serve.rejected")
+        self._g_queue_depth = self.registry.gauge("serve.queue_depth")
+        self._g_inflight = self.registry.gauge("serve.inflight")
+        self._level_counters: Dict[int, Counter] = {}
+        self._hists: Dict[tuple, object] = {}
 
     # ------------------------------------------------------------- clocks
     @staticmethod
     def now() -> float:
         return time.perf_counter()
 
-    def _touch(self, t: float) -> None:
-        if self._t_start is None:
-            self._t_start = t
-        self._t_last = t
+    # ------------------------------------------- registry handle caches
+    def _level_counter(self, level: int) -> Counter:
+        c = self._level_counters.get(level)
+        if c is None:
+            c = self._level_counters[level] = self.registry.counter(
+                "serve.requests_by_level", level=level)
+        return c
+
+    def _hist(self, name: str, edges, level: int, category: int):
+        key = (name, level, category)
+        h = self._hists.get(key)
+        if h is None:
+            h = self._hists[key] = self.registry.histogram(
+                name, edges, level=level, category=category)
+        return h
+
+    # --------------------------------------------- legacy attribute views
+    @property
+    def total_requests(self) -> int:
+        return self._c_requests.value
+
+    @property
+    def total_cached(self) -> int:
+        return self._c_cached.value
+
+    @property
+    def rejected(self) -> int:
+        return self._c_rejected.value
+
+    @property
+    def level_counts(self) -> Dict[int, int]:
+        """ServiceLevel value -> lifetime count of served requests (the
+        degradation-ladder mix; sheds never reach the engine)."""
+        return {lvl: c.value for lvl, c in self._level_counters.items()}
+
+    @property
+    def queue_depth(self) -> int:
+        return int(self._g_queue_depth.value)
+
+    @property
+    def inflight(self) -> int:
+        return int(self._g_inflight.value)
+
+    @property
+    def peak_queue_depth(self) -> int:
+        return int(self._g_queue_depth.max)
+
+    @property
+    def peak_inflight(self) -> int:
+        return int(self._g_inflight.max)
 
     # ------------------------------------------------------------ records
     def record_request(self, *, category: int, latency_s: float, u: int,
                        cached: bool, t_done: float, level: int = 0) -> None:
-        self._touch(t_done)
-        self.total_requests += 1
-        self.total_cached += bool(cached)
-        self.level_counts[int(level)] = self.level_counts.get(int(level), 0) + 1
+        category = int(category)
+        level = int(level)
+        self._c_requests.inc()
+        if cached:
+            self._c_cached.inc()
+        self._level_counter(level).inc()
+        self._hist("serve.latency_ms", LATENCY_MS_EDGES,
+                   level, category).record(latency_s * 1e3)
+        self._hist("serve.u", U_EDGES, level, category).record(u)
         self.requests.append({
-            "category": int(category),
+            "category": category,
             "latency_s": float(latency_s),
             "u": int(u),
             "cached": bool(cached),
-            "level": int(level),
+            "level": level,
+            "t_done": float(t_done),
         })
+
+    def record_queue_wait(self, *, category: int, level: int,
+                          wait_s: float) -> None:
+        """Admission-to-drain wait — the slice of latency the batcher
+        owns, recorded separately so the SLO loop can tell queueing
+        pressure from execution cost."""
+        self._hist("serve.queue_wait_ms", LATENCY_MS_EDGES,
+                   int(level), int(category)).record(wait_s * 1e3)
 
     def record_batch(self, *, category: int, bucket: int, n_real: int,
                      t_inputs_s: float, t_execute_s: float) -> None:
@@ -87,22 +169,19 @@ class Telemetry:
         })
 
     def record_rejection(self) -> None:
-        self.rejected += 1
+        self._c_rejected.inc()
 
     def observe_gauges(self, queue_depth: int, inflight: int) -> None:
-        self.queue_depth = int(queue_depth)
-        self.inflight = int(inflight)
-        self.peak_queue_depth = max(self.peak_queue_depth, self.queue_depth)
-        self.peak_inflight = max(self.peak_inflight, self.inflight)
+        self._g_queue_depth.set(int(queue_depth))
+        self._g_inflight.set(int(inflight))
 
     # ------------------------------------------------------------ summary
     def summary(self, compile_count: int = 0) -> Dict[str, float]:
         lat = np.array([r["latency_s"] for r in self.requests], np.float64)
         us = np.array([r["u"] for r in self.requests], np.float64)
         cached = np.array([r["cached"] for r in self.requests], bool)
-        span = ((self._t_last - self._t_start)
-                if self._t_start is not None and self._t_last is not None
-                and self._t_last > self._t_start else 0.0)
+        span = ((self.requests[-1]["t_done"] - self.requests[0]["t_done"])
+                if len(self.requests) >= 2 else 0.0)
         lanes = sum(b["bucket"] for b in self.batches)
         padded = sum(b["n_padded"] for b in self.batches)
         return {

@@ -1,0 +1,142 @@
+#!/usr/bin/env python
+"""Validate a Chrome trace-event JSON file emitted by repro.obs.
+
+Checks (the `make trace-smoke` gate):
+
+1. Shape — top-level ``traceEvents`` list; every event has name/ph/ts/
+   pid/tid; only known phases (M, B, E, i).
+2. Monotone timestamps — non-metadata events appear in non-decreasing
+   ``ts`` order (Perfetto tolerates disorder; our exporter sorts, so
+   disorder means the exporter broke).
+3. Matched B/E pairs — per (pid, tid), B/E events nest like
+   parentheses with matching names and nothing left open at EOF.
+4. ``--require-chain`` — at least one ticket track carries the full
+   admit → queue → batch → execute → respond span chain, and a
+   trainer-side ``publish`` span exists (the smoke's acceptance
+   criterion).
+5. ``--metrics`` — the metrics snapshot JSON contains at least one
+   per-(level, category) ``serve.latency_ms`` histogram.
+
+Exit code 0 on success; prints the first failure and exits 1 otherwise.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+from collections import defaultdict
+
+KNOWN_PHASES = {"M", "B", "E", "i"}
+REQUIRED_KEYS = ("name", "ph", "ts", "pid", "tid")
+TICKET_CHAIN = ("admit", "queue", "batch", "execute", "respond")
+
+
+def fail(msg: str) -> "None":
+    print(f"[check_trace] FAIL: {msg}")
+    sys.exit(1)
+
+
+def check_trace(path: str, require_chain: bool) -> dict:
+    try:
+        doc = json.loads(open(path).read())
+    except (OSError, json.JSONDecodeError) as e:
+        fail(f"{path}: not readable JSON ({e})")
+    if not isinstance(doc, dict) or not isinstance(doc.get("traceEvents"),
+                                                   list):
+        fail(f"{path}: missing top-level traceEvents list")
+    events = doc["traceEvents"]
+    if not events:
+        fail(f"{path}: traceEvents is empty")
+
+    track_names = {}                      # (pid, tid) -> thread_name
+    stacks = defaultdict(list)            # (pid, tid) -> open B names
+    span_names = defaultdict(set)         # (pid, tid) -> completed spans
+    last_ts = None
+    n_spans = 0
+    for i, ev in enumerate(events):
+        for k in REQUIRED_KEYS:
+            if k not in ev:
+                fail(f"event {i} missing key {k!r}: {ev}")
+        ph = ev["ph"]
+        if ph not in KNOWN_PHASES:
+            fail(f"event {i}: unknown phase {ph!r}")
+        if ph == "M":
+            if ev["name"] == "thread_name":
+                track_names[(ev["pid"], ev["tid"])] = ev["args"]["name"]
+            continue
+        ts = ev["ts"]
+        if not isinstance(ts, (int, float)) or ts < 0:
+            fail(f"event {i}: bad ts {ts!r}")
+        if last_ts is not None and ts < last_ts:
+            fail(f"event {i}: ts went backwards ({ts} < {last_ts})")
+        last_ts = ts
+        key = (ev["pid"], ev["tid"])
+        if ph == "B":
+            stacks[key].append(ev["name"])
+        elif ph == "E":
+            if not stacks[key]:
+                fail(f"event {i}: E {ev['name']!r} with no open B on "
+                     f"tid {ev['tid']}")
+            opened = stacks[key].pop()
+            if opened != ev["name"]:
+                fail(f"event {i}: E {ev['name']!r} closes B {opened!r} "
+                     f"on tid {ev['tid']} (bad nesting)")
+            span_names[key].add(ev["name"])
+            n_spans += 1
+    leftovers = {k: v for k, v in stacks.items() if v}
+    if leftovers:
+        fail(f"unclosed B events at EOF: {leftovers}")
+
+    summary = {"n_events": len(events), "n_spans": n_spans,
+               "n_tracks": len(track_names)}
+    if require_chain:
+        chained = [track_names.get(k, str(k)) for k, names in
+                   span_names.items()
+                   if all(step in names for step in TICKET_CHAIN)]
+        if not chained:
+            fail("no ticket track carries the full "
+                 f"{' -> '.join(TICKET_CHAIN)} chain")
+        published = [k for k, names in span_names.items()
+                     if "publish" in names]
+        if not published:
+            fail("no trainer publish span found")
+        summary["n_full_chain_tickets"] = len(chained)
+        summary["example_chain_track"] = chained[0]
+    return summary
+
+
+def check_metrics(path: str) -> dict:
+    try:
+        snap = json.loads(open(path).read())
+    except (OSError, json.JSONDecodeError) as e:
+        fail(f"{path}: not readable JSON ({e})")
+    lat = {k: v for k, v in snap.items()
+           if k.startswith("serve.latency_ms{") and "level=" in k
+           and "category=" in k and v.get("type") == "histogram"}
+    if not lat:
+        fail(f"{path}: no per-(level, category) serve.latency_ms "
+             "histograms in snapshot")
+    recorded = sum(v["count"] for v in lat.values())
+    if recorded <= 0:
+        fail(f"{path}: latency histograms exist but hold no samples")
+    return {"n_latency_histograms": len(lat), "n_samples": recorded}
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("trace", help="Chrome trace-event JSON to validate")
+    ap.add_argument("--require-chain", action="store_true",
+                    help="require a full ticket span chain + a trainer "
+                         "publish span")
+    ap.add_argument("--metrics", default=None,
+                    help="also validate a metrics snapshot JSON")
+    args = ap.parse_args()
+
+    summary = check_trace(args.trace, require_chain=args.require_chain)
+    if args.metrics:
+        summary.update(check_metrics(args.metrics))
+    print(f"[check_trace] OK: {json.dumps(summary)}")
+
+
+if __name__ == "__main__":
+    main()
