@@ -1,7 +1,7 @@
 PYTHON ?= python
 export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH),)
 
-.PHONY: check compile test serve-bench cluster-bench cluster-smoke trace-smoke degrade-bench bench serve example
+.PHONY: check compile test serve-bench cluster-bench cluster-smoke trace-smoke index-smoke index-bench degrade-bench bench serve example
 
 # CI gate: byte-compile everything, then the tier-1 suite
 check: compile test
@@ -39,6 +39,22 @@ trace-smoke:
 		--out results/cluster_smoke.json
 	$(PYTHON) tools/check_trace.py results/trace_smoke.json \
 		--require-chain --metrics results/metrics_smoke.json
+
+# CI smoke for the tiered live index (docs/index.md): serve a
+# freshness workload through the replica set while documents are
+# added, epochs hot-swap, and the MergeDaemon compacts delta segments
+# into new mmapped base generations underneath.  Asserts zero
+# dropped/shed across >= 2 merges and >= 2 served epochs, and that the
+# live (base + delta) view is bit-identical to a from-scratch rebuild
+# at every published epoch, on both scan backends.
+index-smoke:
+	$(PYTHON) -m repro.launch.live_index --smoke \
+		--out results/index_smoke.json
+
+# Live-index scale benchmark: build/ingest/merge throughput and
+# bytes-per-query (xla vs pallas_block_scan) at >= 1M docs
+index-bench:
+	$(PYTHON) -m benchmarks.run --index-bench
 
 # Graceful-degradation sweep: ladder vs binary shedding across offered
 # loads (p99 / served fraction / recall incl. SHALLOW / level mix)

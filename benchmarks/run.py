@@ -25,6 +25,10 @@ def main() -> None:
                     default=False,
                     help="run the online-learning cluster benchmark "
                          "(replica scaling / routing / shedding)")
+    ap.add_argument("--index-bench", action=argparse.BooleanOptionalAction,
+                    default=False,
+                    help="run the tiered live-index benchmark (>= 1M-doc "
+                         "build/ingest/merge + bytes-per-query per backend)")
     args = ap.parse_args()
 
     from benchmarks._results import record
@@ -80,6 +84,14 @@ def main() -> None:
     else:
         print("\n(cluster benchmark skipped: pass --cluster-bench, "
               "or `make cluster-bench`)")
+
+    if args.index_bench:
+        print("\n== tiered live index (build / ingest / merge / bytes) ==")
+        from benchmarks import index_bench
+        index_bench.main(fast=not args.full)
+    else:
+        print("\n(live-index benchmark skipped: pass --index-bench, "
+              "or `make index-bench`)")
 
     # Table 1 / Figure 2
     if args.full:

@@ -86,12 +86,14 @@ class UCostEstimator:
                  prior_shallow_u: Optional[float] = None,
                  max_versions: int = 4):
         log, index = system.log, system.index
-        df_body = index.df[:, 2].astype(np.float64)       # body field
+        self._system = system
+        self._df_body = index.df[:, 2].astype(np.float64)  # body field
+        self._n_docs = int(index.n_docs)
         mean_df = np.zeros(log.n_queries)
         for qi in range(log.n_queries):
             ts = log.terms[qi, : log.n_terms[qi]]
-            mean_df[qi] = df_body[ts].mean() if len(ts) else 0.0
-        self._df_frac = mean_df / max(index.n_docs, 1)
+            mean_df[qi] = self._df_body[ts].mean() if len(ts) else 0.0
+        self._df_frac = mean_df / max(self._n_docs, 1)
         qs = np.linspace(0, 1, n_df_bins + 1)[1:-1]
         self._edges = np.quantile(self._df_frac, qs)
         self._category = log.category
@@ -148,9 +150,35 @@ class UCostEstimator:
         return max(older) if older else min(self._tables)
 
     # ---------------------------------------------------------- features
+    def _extend_features(self, qid: int) -> None:
+        """A live query log grows (``append_queries``): price appended
+        queries by lazily extending the per-query feature arrays from
+        the current log.  Bucket edges stay fixed from the seed log —
+        buckets are a stable coordinate system, not a moving target."""
+        with self._lock:
+            if qid < len(self._df_frac):
+                return                   # another thread got here first
+            log = self._system.log
+            terms, n_terms = log.terms, log.n_terms
+            category = log.category
+            n = min(len(category), terms.shape[0], len(n_terms))
+            old = len(self._df_frac)
+            mean_df = np.zeros(max(0, n - old))
+            for i, qi in enumerate(range(old, n)):
+                ts = terms[qi, : n_terms[qi]]
+                mean_df[i] = self._df_body[ts].mean() if len(ts) else 0.0
+            self._df_frac = np.concatenate(
+                [self._df_frac, mean_df / max(self._n_docs, 1)])
+            self._category = category[:n]
+
     def features(self, qid: int) -> Tuple[int, int]:
-        cat = int(self._category[qid])
-        df_bin = int(np.searchsorted(self._edges, self._df_frac[qid]))
+        qid = int(qid)
+        df_frac, category = self._df_frac, self._category
+        if qid >= len(df_frac) or qid >= len(category):
+            self._extend_features(qid)
+            df_frac, category = self._df_frac, self._category
+        cat = int(category[qid])
+        df_bin = int(np.searchsorted(self._edges, df_frac[qid]))
         return cat, df_bin
 
     def estimate(self, qid: int,

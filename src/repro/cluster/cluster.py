@@ -116,11 +116,18 @@ class ReplicaSet:
             for i in range(cfg.n_replicas)
         ]
         self._lock = threading.Lock()
-        # key -> replica whose result cache owns it (LRU-bounded);
-        # repeats route back there regardless of depth — a hit is
-        # nearly free, a balanced miss elsewhere costs a rollout.
+        # (key, policy_version, index_epoch) -> replica whose result
+        # cache owns it (LRU-bounded); repeats route back there
+        # regardless of depth — a hit is nearly free, a balanced miss
+        # elsewhere costs a rollout.  Versioned like the cache keys
+        # themselves: a policy publish or index epoch swap retires the
+        # old entries by never looking them up again (LRU reclaims
+        # them), so stale affinity can't pin post-swap traffic to a
+        # replica whose entry is already invalid.
         self._key_owner: "OrderedDict" = OrderedDict()
         self._lags: Deque[int] = deque(maxlen=cfg.window)
+        self._epoch_lags: Deque[int] = deque(maxlen=cfg.window)
+        self._g_epoch_lag = self.registry.gauge("index.epoch_lag")
         self._latencies: Deque[float] = deque(maxlen=cfg.window)
         self.n_submitted = 0
         self.n_responses = 0
@@ -159,19 +166,26 @@ class ReplicaSet:
         cat = int(self.system.log.category[qid])
         key = canonical_query_key(self.system.log.terms[qid], cat)
         ticket = ClusterTicket(qid, cat, cache_key=key)
+        # Affinity is versioned alongside the cache entries it points
+        # at: after a policy publish or an index epoch swap, the old
+        # (key, version, epoch) rows simply stop matching.
+        okey = (key, self.store.version,
+                getattr(self.system, "index_epoch", 0))
         # One trace track per ticket: the admit → queue → batch →
         # execute → respond chain lives on it, ended at completion.
         ticket.span = self.tracer.root_span("ticket", qid=qid, category=cat)
         self._c_submitted.inc()
         with self._lock:
             self.n_submitted += 1
-            owner = self._key_owner.get(key)
+            owner = self._key_owner.get(okey)
         # Sticky routing (and the CACHED_ONLY rung) only pay while the
-        # owner's result cache still holds the key (the repeat is ~free
-        # there); once evicted, the request must load-balance like any
-        # other miss — pinning evicted keys to a busy owner is exactly
+        # owner's result cache still holds a CURRENT entry for the key
+        # — cache_has folds in the replica's pinned policy version and
+        # index epoch (the repeat is ~free there); once evicted or
+        # invalidated by a swap, the request must load-balance like any
+        # other miss — pinning dead keys to a busy owner is exactly
         # how tails grow.
-        if owner is not None and not self.replicas[owner].engine.cache.contains(key):
+        if owner is not None and not self.replicas[owner].engine.cache_has(key):
             owner = None
         # The SHALLOW rung is only real if the head snapshot ships a
         # fallback policy for this category (they travel together).
@@ -187,7 +201,9 @@ class ReplicaSet:
             self._c_shed.inc()
             with self._lock:
                 self.n_shed += 1
-            self.tap.record(qid, cat, ServiceLevel.SHED)
+            self.tap.record(qid, cat, ServiceLevel.SHED,
+                            index_epoch=getattr(self.system,
+                                                "index_epoch", 0))
             ticket.complete(Shed(qid, cat, adm.est_u, "u_budget_hot"))
             if ticket.span:
                 ticket.span.end(level="SHED", reason="u_budget_hot")
@@ -219,8 +235,8 @@ class ReplicaSet:
             # Covers route → replica-thread pickup; the replica ends it.
             ticket.inbox_span = ticket.span.child("inbox", replica=idx)
         with self._lock:
-            self._key_owner[key] = idx
-            self._key_owner.move_to_end(key)
+            self._key_owner[okey] = idx
+            self._key_owner.move_to_end(okey)
             while len(self._key_owner) > self.cfg.affinity_table:
                 self._key_owner.popitem(last=False)
         self.replicas[idx].enqueue(ticket)
@@ -255,20 +271,31 @@ class ReplicaSet:
                 qid=ticket.qid, level=result.level,
                 version=result.policy_version)
             lag = max(0, self.store.version - result.policy_version)
+            # Freshness lag: epochs between the index that produced the
+            # response and the head — how stale the answer's view of
+            # the corpus was, the live-index analogue of policy lag.
+            head_epoch = getattr(self.system, "index_epoch", 0)
+            epoch_lag = max(0, head_epoch - result.index_epoch)
             with self._lock:
                 self.n_responses += 1
                 self._lags.append(lag)
+                self._epoch_lags.append(epoch_lag)
                 self._latencies.append(ticket.latency_s)
-            self.tap.record(ticket.qid, ticket.category, ticket.level)
+            self._g_epoch_lag.set(epoch_lag)
+            self.tap.record(ticket.qid, ticket.category, ticket.level,
+                            index_epoch=result.index_epoch)
             if ticket.span:
                 ticket.span.end(level=ServiceLevel(result.level).name,
                                 u=result.u, cached=result.cached,
-                                version=result.policy_version)
+                                version=result.policy_version,
+                                index_epoch=result.index_epoch)
         else:  # shed inside the replica (queue full / shutdown / error)
             self.admission.release(ticket.reserved_u)
             with self._lock:
                 self.n_shed += 1
-            self.tap.record(ticket.qid, ticket.category, ServiceLevel.SHED)
+            self.tap.record(ticket.qid, ticket.category, ServiceLevel.SHED,
+                            index_epoch=getattr(self.system,
+                                                "index_epoch", 0))
             if ticket.span:
                 ticket.span.end(level="SHED",
                                 reason=getattr(result, "reason", None))
@@ -305,8 +332,15 @@ class ReplicaSet:
             n_sub, n_resp, n_shed = (self.n_submitted, self.n_responses,
                                      self.n_shed)
         lag = self.version_lag()
+        with self._lock:
+            epoch_lags = list(self._epoch_lags)
         return {
             "n_replicas": len(self.replicas),
+            "index_epoch_head": getattr(self.system, "index_epoch", 0),
+            "replica_index_epochs": [r.index_epoch for r in self.replicas],
+            "epoch_lag_observed_max": max(epoch_lags) if epoch_lags else 0,
+            "epoch_lag_observed_mean": (float(np.mean(epoch_lags))
+                                        if epoch_lags else 0.0),
             "n_submitted": n_sub,
             "n_responses": n_resp,
             "n_shed": n_shed,

@@ -22,8 +22,8 @@ import threading
 from collections import deque
 from typing import Callable, Dict, Optional, Union
 
+from repro.core.versioned import StaleVersionError
 from repro.obs import NULL_TRACER, Tracer
-from repro.policies import StalePolicyError
 from repro.serving import (AdmissionError, CacheOnlyMiss, EngineConfig,
                            ServeEngine, ServiceLevel)
 from repro.serving.engine import ServeResponse
@@ -142,8 +142,11 @@ class Replica:
         # in this replica's result cache costs ~nothing (it completes
         # inline at submit), so only likely misses count toward the
         # router's load signal.
+        # cache_has composes the engine's pinned (policy version, index
+        # epoch) into the lookup — a stale-epoch entry is a miss here
+        # exactly as it will be at submit.
         likely_hit = (ticket.cache_key is not None
-                      and self.engine.cache.contains(ticket.cache_key))
+                      and self.engine.cache_has(ticket.cache_key))
         with self._cond:
             if self._stopping:
                 self._finish(ticket, Shed(ticket.qid, ticket.category,
@@ -169,6 +172,10 @@ class Replica:
     @property
     def policy_version(self) -> int:
         return self.engine.policy_version
+
+    @property
+    def index_epoch(self) -> int:
+        return self.engine.index_epoch
 
     def summary(self) -> dict:
         out = self.engine.summary()
@@ -210,10 +217,10 @@ class Replica:
             self._finish(ticket, Shed(ticket.qid, ticket.category,
                                       ticket.est_u, "cached_only_miss"))
             return
-        except StalePolicyError:
-            # A publish raced between the submit-time refresh and the
-            # staleness check; put the ticket back and retry after the
-            # next refresh.
+        except StaleVersionError:
+            # A publish (policy snapshot OR index epoch) raced between
+            # the submit-time refresh and the staleness check; put the
+            # ticket back and retry after the next refresh.
             with self._cond:
                 ticket._inbox_work = 1
                 self._inbox_work += 1
@@ -276,10 +283,11 @@ class Replica:
                 else:
                     self.engine.step()            # full buckets only
                 failures = 0
-            except StalePolicyError:
-                # A publish raced the drain past the staleness bound;
-                # the engine re-queued the batch and the next submit /
-                # flush serves it from the refreshed head.
+            except StaleVersionError:
+                # A publish (policy or index epoch) raced the drain past
+                # the staleness bound; the engine re-queued the batch
+                # and the next submit / flush serves it from the
+                # refreshed head.
                 continue
             except Exception as e:                # noqa: BLE001
                 failures += 1

@@ -60,22 +60,33 @@ class ServedTrafficTap:
         self.holdout_every = int(holdout_every)
         self.holdout_capacity = int(holdout_capacity)
         self._lock = threading.Lock()
-        self._window: Dict[int, deque] = {}       # category -> (qid, w)
+        self._window: Dict[int, deque] = {}       # category -> (qid, w, epoch)
         self._holdout: Dict[int, deque] = {}      # category -> qid
         self._seen: Dict[int, int] = {}           # category -> record count
         self.n_recorded = 0
         self.n_held_out = 0
         self.level_counts: Dict[int, int] = {int(l): 0 for l in ServiceLevel}
+        # Index-epoch span of the recorded traffic: the trainer trains
+        # against the head index, so a wide span warns that the window
+        # still carries pre-swap traffic (freshness lag, not an error).
+        self.min_epoch_seen: Optional[int] = None
+        self.max_epoch_seen: Optional[int] = None
 
     # -------------------------------------------------------------- feed
     def record(self, qid: int, category: int,
-               level: ServiceLevel = ServiceLevel.FULL) -> None:
+               level: ServiceLevel = ServiceLevel.FULL,
+               index_epoch: int = 0) -> None:
         level = ServiceLevel(level)
         w = self.degraded_boost if level.degraded else 1.0
+        index_epoch = int(index_epoch)
         with self._lock:
             cat = int(category)
             self.n_recorded += 1
             self.level_counts[int(level)] += 1
+            if self.min_epoch_seen is None or index_epoch < self.min_epoch_seen:
+                self.min_epoch_seen = index_epoch
+            if self.max_epoch_seen is None or index_epoch > self.max_epoch_seen:
+                self.max_epoch_seen = index_epoch
             if self.holdout_every:
                 n = self._seen[cat] = self._seen.get(cat, 0) + 1
                 if n % self.holdout_every == 0:
@@ -89,7 +100,7 @@ class ServedTrafficTap:
             dq = self._window.get(cat)
             if dq is None:
                 dq = self._window[cat] = deque(maxlen=self.capacity)
-            dq.append((int(qid), w))
+            dq.append((int(qid), w, index_epoch))
 
     # ------------------------------------------------------------ sample
     def size(self, category: Optional[int] = None) -> int:
@@ -107,8 +118,9 @@ class ServedTrafficTap:
             dq = self._window.get(int(category))
             if not dq:
                 return None
-            qids = np.fromiter((q for q, _ in dq), dtype=np.int64, count=len(dq))
-            weights = np.fromiter((w for _, w in dq), dtype=np.float64,
+            qids = np.fromiter((q for q, _, _ in dq), dtype=np.int64,
+                               count=len(dq))
+            weights = np.fromiter((w for _, w, _ in dq), dtype=np.float64,
                                   count=len(dq))
         return rng.choice(qids, size=int(batch), replace=True,
                           p=weights / weights.sum())
@@ -149,4 +161,6 @@ class ServedTrafficTap:
                                   for c, dq in sorted(self._holdout.items())},
                 "levels": {ServiceLevel(k).name: v
                            for k, v in sorted(self.level_counts.items())},
+                "index_epoch_min": self.min_epoch_seen,
+                "index_epoch_max": self.max_epoch_seen,
             }

@@ -224,6 +224,10 @@ class TrainerLoop:
         self.history.append({
             "version": version,
             "epoch": self.epochs_done,
+            # Index epoch at publish time: correlates policy versions
+            # with the corpus state they were trained against (0 on a
+            # static index).
+            "index_epoch": getattr(self.system, "index_epoch", 0),
             "probe_recall": {c: scores[c] for c in self.cats},
             "probe_source": sources,
             "tap_batches": self.tap_batches,

@@ -1,0 +1,25 @@
+"""Tiered live index: mmap base + delta segments, epoch-versioned
+hot-swap, background merge.  See docs/index.md.
+
+`LiveRetrievalSystem` is exported lazily (PEP 562): it pulls in
+`repro.system` — which itself imports `repro.index` — so an eager
+import here would be circular.
+"""
+from .live_index import (IndexEpoch, IndexEpochStore, IndexView, LiveIndex,
+                         StaleIndexEpochError)
+from .merge import MergeConfig, MergeDaemon
+from .parity import ParityError, check_epoch_parity, rebuild_index
+from .segments import BaseSegment, DeltaOp, DeltaSegment
+
+__all__ = ["BaseSegment", "DeltaOp", "DeltaSegment", "IndexEpoch",
+           "IndexEpochStore", "IndexView", "LiveIndex",
+           "LiveRetrievalSystem", "MergeConfig", "MergeDaemon",
+           "ParityError", "StaleIndexEpochError", "check_epoch_parity",
+           "rebuild_index"]
+
+
+def __getattr__(name):
+    if name == "LiveRetrievalSystem":
+        from .system import LiveRetrievalSystem
+        return LiveRetrievalSystem
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")

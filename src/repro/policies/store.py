@@ -8,28 +8,28 @@ more than ``staleness_bound`` versions behind the head must refuse to
 serve (``StalePolicyError``) rather than silently answer with an
 ancient policy.
 
-Thread-safe: ``publish`` may be called from a trainer thread while
-engine replicas ``snapshot``/``validate`` concurrently.  Snapshots are
-immutable (the category→policy dict is copied on publish), so a reader
-can never observe a torn snapshot: the mapping is fully built before
-the head pointer moves.  Subscriber delivery is per-subscriber
-serialized and version-monotone — a callback registered mid-publish
-observes either the old or the new version first, never both out of
-order and never the same version twice.
+The version/staleness/subscribe machinery itself lives in
+`repro.core.versioned.VersionedStore` — the same core the live index's
+`IndexEpochStore` publishes epochs through — and this module keeps the
+policy-specific payload: snapshot validation, the fallback carry-
+forward rule, and :class:`PolicySnapshot` immutability (the
+category→policy dict is copied on publish, so a reader can never
+observe a torn snapshot).
 """
 from __future__ import annotations
 
-import threading
 from dataclasses import dataclass
 from types import MappingProxyType
-from typing import Callable, Dict, List, Mapping, Optional
+from typing import Dict, Mapping, Optional
+
+from repro.core.versioned import StaleVersionError, VersionedStore
 
 from .base import Policy
 
 __all__ = ["PolicySnapshot", "PolicyStore", "StalePolicyError"]
 
 
-class StalePolicyError(RuntimeError):
+class StalePolicyError(StaleVersionError):
     """A consumer's pinned snapshot is older than the staleness bound."""
 
 
@@ -68,40 +68,9 @@ def _validate_policies(policies: Dict[int, Policy], role: str = "policies",
                 "MatchPlan with StaticPlanPolicy(plan, n_actions)).")
 
 
-class _Subscriber:
-    """One registered callback with per-subscriber delivery state.
-
-    ``deliver`` serializes invocations of the callback (two concurrent
-    publishers never run it at once) and enforces version monotonicity:
-    a snapshot at or below the last delivered version is dropped.  This
-    closes the subscribe-under-concurrent-publish race where the
-    initial replay of the current snapshot could land *after* a newer
-    publish already notified the callback, delivering versions out of
-    order."""
-
-    __slots__ = ("callback", "_lock", "_last_version")
-
-    def __init__(self, callback: Callable[[PolicySnapshot], None]):
-        self.callback = callback
-        self._lock = threading.Lock()
-        self._last_version = 0
-
-    def deliver(self, snap: PolicySnapshot) -> None:
-        with self._lock:
-            if snap.version <= self._last_version:
-                return
-            self._last_version = snap.version
-            self.callback(snap)
-
-
-class PolicyStore:
-    def __init__(self, staleness_bound: int = 1):
-        if staleness_bound < 0:
-            raise ValueError("staleness_bound must be >= 0")
-        self.staleness_bound = staleness_bound
-        self._lock = threading.Lock()
-        self._snapshot: Optional[PolicySnapshot] = None
-        self._subscribers: List[_Subscriber] = []
+class PolicyStore(VersionedStore):
+    stale_error = StalePolicyError
+    artifact = "policy snapshot"
 
     # ------------------------------------------------------------ publish
     def publish(self, policies: Dict[int, Policy],
@@ -118,66 +87,13 @@ class PolicyStore:
         _validate_policies(policies)
         if fallbacks is not None:
             _validate_policies(fallbacks, role="fallbacks", allow_empty=True)
-        with self._lock:
-            version = (self._snapshot.version if self._snapshot else 0) + 1
-            fb = (MappingProxyType(dict(fallbacks)) if fallbacks is not None
-                  else (self._snapshot.fallbacks if self._snapshot else _EMPTY))
-            snap = PolicySnapshot(version, MappingProxyType(dict(policies)), fb)
-            self._snapshot = snap
-            subscribers = list(self._subscribers)
-        for sub in subscribers:
-            sub.deliver(snap)
-        return version
+        frozen = MappingProxyType(dict(policies))
+        fb_frozen = (MappingProxyType(dict(fallbacks))
+                     if fallbacks is not None else None)
 
-    # ----------------------------------------------------------- consume
-    @property
-    def version(self) -> int:
-        """Head version (0 before the first publish)."""
-        snap = self._snapshot
-        return snap.version if snap else 0
+        def build(prev: Optional[PolicySnapshot], version: int) -> PolicySnapshot:
+            fb = fb_frozen if fb_frozen is not None else (
+                prev.fallbacks if prev else _EMPTY)
+            return PolicySnapshot(version, frozen, fb)
 
-    def snapshot(self) -> PolicySnapshot:
-        snap = self._snapshot
-        if snap is None:
-            raise LookupError("PolicyStore has no published snapshot yet")
-        return snap
-
-    def subscribe(self, callback: Callable[[PolicySnapshot], None]) -> Callable[[], None]:
-        """Register ``callback(snapshot)`` for future publishes (and
-        immediately for the current snapshot, if any).  Returns an
-        unsubscribe function.
-
-        Safe under concurrent ``publish``: the callback observes a
-        strictly increasing version sequence whose first element is the
-        snapshot current at registration *or any later one* — never an
-        older version after a newer, never a duplicate."""
-        sub = _Subscriber(callback)
-        with self._lock:
-            self._subscribers.append(sub)
-            snap = self._snapshot
-        if snap is not None:
-            # Replay outside the store lock; _Subscriber.deliver drops
-            # it if a concurrent publish already delivered a newer one.
-            sub.deliver(snap)
-
-        def unsubscribe() -> None:
-            with self._lock:
-                if sub in self._subscribers:
-                    self._subscribers.remove(sub)
-        return unsubscribe
-
-    def staleness(self, version: int) -> int:
-        """Versions between a pinned snapshot and the head."""
-        return self.version - version
-
-    def validate(self, version: int) -> int:
-        """Enforce the staleness bound on a pinned snapshot version.
-        Returns the staleness; raises :class:`StalePolicyError` beyond
-        the bound."""
-        staleness = self.staleness(version)
-        if staleness > self.staleness_bound:
-            raise StalePolicyError(
-                f"snapshot v{version} is {staleness} versions behind head "
-                f"v{self.version} (staleness_bound={self.staleness_bound}); "
-                "refresh before serving")
-        return staleness
+        return self._publish_snapshot(build)

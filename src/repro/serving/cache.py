@@ -16,7 +16,7 @@ import numpy as np
 
 from repro.obs import Counter, MetricsRegistry
 
-__all__ = ["canonical_query_key", "LRUResultCache"]
+__all__ = ["canonical_query_key", "versioned_key", "LRUResultCache"]
 
 
 def canonical_query_key(terms, category: int) -> Tuple[int, Tuple[int, ...]]:
@@ -24,6 +24,19 @@ def canonical_query_key(terms, category: int) -> Tuple[int, Tuple[int, ...]]:
     t = np.asarray(terms).ravel()
     t = t[t >= 0]
     return (int(category), tuple(sorted({int(x) for x in t})))
+
+
+def versioned_key(base_key: Hashable, policy_version: int,
+                  index_epoch: int) -> Tuple[Hashable, int, int]:
+    """Full cache key: a cached response embodies BOTH the policy
+    snapshot that rolled it out and the index epoch it scanned, so the
+    entry key carries both versions.  A policy publish or an index
+    epoch swap then invalidates exactly the stale entries — the new
+    version simply never looks them up — without flushing results that
+    are still current on the other axis.  Static systems pass
+    ``index_epoch=0`` forever and the scheme degrades to per-policy
+    keying."""
+    return (base_key, int(policy_version), int(index_epoch))
 
 
 class LRUResultCache:

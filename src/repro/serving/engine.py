@@ -31,7 +31,8 @@ from repro.policies import Policy, PolicyStore
 from repro.serving.batcher import (
     BucketConfig, MicroBatch, PendingRequest, ShapeBucketBatcher,
 )
-from repro.serving.cache import LRUResultCache, canonical_query_key
+from repro.serving.cache import (LRUResultCache, canonical_query_key,
+                                 versioned_key)
 from repro.serving.executor import ShardedExecutor
 from repro.serving.levels import ServiceLevel
 from repro.serving.telemetry import Telemetry
@@ -76,6 +77,8 @@ class ServeResponse:
     cached: bool
     latency_s: float
     policy_version: int = 0    # snapshot version that produced the result
+    index_epoch: int = 0       # index epoch the result was scanned at
+                               # (0 = static index, no live tier)
     # The service level that PRODUCED the candidates (result quality):
     # FULL for live-policy rollouts and hits on FULL-filled entries,
     # SHALLOW for fallback-plan rollouts and hits on SHALLOW fills.  A
@@ -115,6 +118,19 @@ class ServeEngine:
         self._snapshot = self.store.snapshot()
         self.bucket_cfg = BucketConfig(cfg.min_bucket, cfg.max_bucket)
         self.telemetry = Telemetry()
+        # Live-index integration: systems with a tiered live index
+        # (repro.index.live.LiveRetrievalSystem) expose an
+        # IndexEpochStore; static systems expose None and everything
+        # below degrades to a constant epoch 0.  The engine pins one
+        # epoch like it pins one policy snapshot, and threads it into
+        # batch_inputs so a hot swap mid-batch can't mix two indexes.
+        self._index_store = getattr(system, "index_epoch_store", None)
+        self._index_epoch_snap = (self._index_store.snapshot()
+                                  if self._index_store is not None else None)
+        self._c_epoch_swaps = self.telemetry.registry.counter(
+            "index.epoch_swaps")
+        self._g_epoch = self.telemetry.registry.gauge("index.epoch")
+        self._g_epoch.set(self.index_epoch)
         self.batcher = ShapeBucketBatcher(self.bucket_cfg)
         # The cache shares the engine's registry so its hit/miss/
         # eviction counters ride the same mergeable snapshot.
@@ -162,8 +178,52 @@ class ServeEngine:
         if snap.version == self._snapshot.version:
             return False
         self._snapshot = snap
+        # Entries filled under the old version are unreachable anyway
+        # (the cache key embeds the policy version); clearing is pure
+        # memory hygiene so dead entries don't squat LRU capacity.
         self.cache.clear()
         return True
+
+    # -------------------------------------------------------- index epoch
+    @property
+    def index_epoch(self) -> int:
+        """Index epoch currently pinned (0 on a static index)."""
+        snap = self._index_epoch_snap
+        return snap.version if snap is not None else 0
+
+    def refresh_index(self) -> bool:
+        """Adopt the index store's head epoch.  Returns True on a swap.
+
+        Unlike a policy swap, the cache is NOT flushed: the cache key
+        embeds the index epoch, so a swap invalidates exactly the
+        entries scanned against the old index — fills that raced the
+        swap included — while the epoch gauge and swap counter land in
+        the metrics plane."""
+        if self._index_store is None:
+            return False
+        head = self._index_store.snapshot()
+        snap = self._index_epoch_snap
+        if snap is not None and head.version == snap.version:
+            return False
+        self._index_epoch_snap = head
+        self._c_epoch_swaps.inc()
+        self._g_epoch.set(head.version)
+        return True
+
+    def _versioned_key(self, base_key) -> tuple:
+        """The full cache key for a base query key under the currently
+        pinned (policy version, index epoch)."""
+        return versioned_key(base_key, self._snapshot.version,
+                             self.index_epoch)
+
+    def cache_has(self, base_key) -> bool:
+        """Does this engine's cache hold a CURRENT entry for the base
+        query key — i.e. one filled under the pinned policy version and
+        index epoch?  Stats-free and thread-safe like
+        ``cache.contains``; the cluster router's owner probe uses this
+        so CACHED_ONLY is never priced against an entry a hot swap
+        already invalidated."""
+        return self.cache.contains(self._versioned_key(base_key))
 
     def _policy_for(self, category: int,
                     level: ServiceLevel = ServiceLevel.FULL) -> Policy:
@@ -224,8 +284,9 @@ class ServeEngine:
                              "sheds instead of submitting")
         if self.cfg.auto_refresh:
             # A publish between drains must not leave old-policy cache
-            # entries answering new submissions.
+            # entries answering new submissions; same for index epochs.
             self.refresh_policies()
+            self.refresh_index()
         own_span = span is None
         if own_span:
             span = self.tracer.root_span("ticket", qid=int(qid),
@@ -237,29 +298,37 @@ class ServeEngine:
         cat = int(log.category[qid])
         key = canonical_query_key(log.terms[qid], cat)
         sub = span.child("submit", category=cat) if span else span
-        # Cached responses embody the pinned snapshot's policy, so the
-        # staleness bound applies to hits exactly as to rollouts.
+        # Cached responses embody the pinned snapshot's policy AND the
+        # pinned index epoch, so both staleness bounds apply to hits
+        # exactly as to rollouts.
         self.store.validate(self._snapshot.version)
+        if self._index_store is not None:
+            self._index_store.validate(self.index_epoch)
         # Peek first: a degraded fill must not answer a better-level
         # request, and a rejected entry must count as a MISS (not a
         # hit) nor be promoted in LRU order — the FULL execution below
-        # will overwrite it.
-        entry = self.cache.peek(key)
+        # will overwrite it.  The lookup key embeds (policy version,
+        # index epoch): an entry filled at epoch N can never answer a
+        # request routed at epoch N+1 (tests/test_live_index.py pins
+        # this regression).
+        vkey = self._versioned_key(key)
+        entry = self.cache.peek(vkey)
         if entry is not None and int(entry.level) <= int(level):
-            hit = self.cache.get(key)      # counts the hit, refreshes LRU
+            hit = self.cache.get(vkey)     # counts the hit, refreshes LRU
         else:
             hit = None
             self.cache.record_miss()
         if hit is not None:
             span.instant("cache_hit", level=int(hit.level))
             t1 = Telemetry.now()
-            # The cache is flushed on every version change, so a hit
-            # always embodies the currently pinned snapshot.
+            # The key embeds both versions, so a hit always embodies
+            # the currently pinned snapshot and epoch.
             self._complete(ServeResponse(
                 request_id=rid, qid=int(qid), category=cat,
                 doc_ids=hit.doc_ids, scores=hit.scores, u=hit.u,
                 cand_cnt=hit.cand_cnt, cached=True, latency_s=t1 - t0,
-                policy_version=self._snapshot.version, level=hit.level))
+                policy_version=self._snapshot.version,
+                index_epoch=self.index_epoch, level=hit.level))
             self.telemetry.record_request(category=cat, latency_s=t1 - t0,
                                           u=hit.u, cached=True, t_done=t1,
                                           level=int(hit.level))
@@ -324,9 +393,17 @@ class ServeEngine:
                                              wait_s=t0 - req.t_submit)
         self._inflight = mb.n_real
         self.telemetry.observe_gauges(self.queue_depth, self._inflight)
+        # Pin the epoch for the whole batch: occupancy, the cache fill
+        # key, and the response all report the SAME epoch even if a
+        # merge publishes mid-execution (the next drain adopts it).
+        epoch_snap = self._index_epoch_snap
+        epoch_version = epoch_snap.version if epoch_snap is not None else 0
+        if self._index_store is not None:
+            self._index_store.validate(epoch_version)
         try:
             qids = mb.padded_qids()
-            occ, scores, tp = self.system.batch_inputs(qids)
+            occ, scores, tp = self.system.batch_inputs(qids,
+                                                       epoch=epoch_snap)
             t1 = Telemetry.now()
             ids, sc, u, cnt = self.executor.execute(
                 policy, occ, scores, tp, level=int(level))
@@ -350,18 +427,24 @@ class ServeEngine:
             result = _CachedResult(doc_ids=ids[lane], scores=sc[lane],
                                    u=int(u[lane]), cand_cnt=int(cnt[lane]),
                                    level=level)
-            prior = self.cache.contains(req.cache_key)
+            # Fill under the versions that PRODUCED the result: the
+            # pending request carries the base query key, the versioned
+            # key is composed at use time, so a swap between submit and
+            # drain can never file a new-epoch result under an old key
+            # (or vice versa).
+            vkey = versioned_key(req.cache_key, version, epoch_version)
+            prior = self.cache.contains(vkey)
             # A SHALLOW fill never downgrades an existing (necessarily
             # >=-quality) entry; FULL fills always win.
             if level == ServiceLevel.FULL or not prior:
-                self.cache.put(req.cache_key, result)
+                self.cache.put(vkey, result)
             latency = t2 - req.t_submit
             self._complete(ServeResponse(
                 request_id=req.request_id, qid=req.qid,
                 category=mb.category, doc_ids=result.doc_ids,
                 scores=result.scores, u=result.u, cand_cnt=result.cand_cnt,
                 cached=False, latency_s=latency, policy_version=version,
-                level=level))
+                index_epoch=epoch_version, level=level))
             self.telemetry.record_request(category=mb.category,
                                           latency_s=latency, u=result.u,
                                           cached=False, t_done=t2,
@@ -399,6 +482,7 @@ class ServeEngine:
         """Drain every full bucket; returns micro-batches executed."""
         if self.cfg.auto_refresh:
             self.refresh_policies()
+            self.refresh_index()
         return sum(self._drain_queue(key, force=False)
                    for key in self.batcher.queue_keys())
 
@@ -433,4 +517,6 @@ class ServeEngine:
         out = self.telemetry.summary(compile_count=self.compile_count)
         out.update({f"cache_{k}": v for k, v in self.cache.stats().items()})
         out["policy_version"] = self.policy_version
+        out["index_epoch"] = self.index_epoch
+        out["index_epoch_swaps"] = self._c_epoch_swaps.value
         return out

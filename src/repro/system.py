@@ -55,6 +55,16 @@ class SystemConfig:
 
 
 class RetrievalSystem:
+    # The static system has no live index: one immutable "epoch 0"
+    # forever.  `repro.index.live.LiveRetrievalSystem` overrides both
+    # with the real IndexEpochStore; serving layers probe these via
+    # getattr so they work against either system.
+    index_epoch_store = None
+
+    @property
+    def index_epoch(self) -> int:
+        return 0
+
     def __init__(self, cfg: SystemConfig):
         self.cfg = cfg
         t0 = time.time()
@@ -90,8 +100,11 @@ class RetrievalSystem:
         self.build_time = time.time() - t0
 
     # ---------------------------------------------------------------- batches
-    def batch_inputs(self, query_ids: Sequence[int]):
-        """Occupancy + L1 scores + masks for a set of query ids."""
+    def batch_inputs(self, query_ids: Sequence[int], epoch=None):
+        """Occupancy + L1 scores + masks for a set of query ids.
+
+        ``epoch`` exists for signature parity with the live system's
+        epoch-pinned batches; the static index ignores it."""
         qids = np.asarray(query_ids)
         term_lists = [self.log.terms[q, : self.log.n_terms[q]] for q in qids]
         occ = jnp.asarray(batch_query_occupancy(self.index, term_lists))

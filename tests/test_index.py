@@ -68,3 +68,122 @@ def test_occupancy_matches_postings(small):
             assert (bits[t, f] == member).all()
     # padded term slots are empty
     assert not bits[len(terms):].any()
+
+
+# --------------------------------------------------- vectorized builder
+def _reference_build_index(corpus, block_docs):
+    """The pre-vectorization per-doc loop, kept verbatim as the oracle
+    for the counting-sort builder."""
+    from repro.index.builder import InvertedIndex
+
+    vocab = corpus.config.vocab_size
+    n_docs = corpus.n_docs
+    indptrs, doc_id_arrays = [], []
+    df = np.zeros((vocab, N_FIELDS), dtype=np.int32)
+    doc_len = np.zeros((n_docs, N_FIELDS), dtype=np.int32)
+    for f in range(N_FIELDS):
+        counts = np.zeros(vocab, dtype=np.int64)
+        for d in range(n_docs):
+            terms = corpus.field_terms[f][d]
+            counts[terms] += 1
+            doc_len[d, f] = len(terms)
+        df[:, f] = counts
+        indptr = np.zeros(vocab + 1, dtype=np.int64)
+        np.cumsum(counts, out=indptr[1:])
+        ids = np.zeros(indptr[-1], dtype=np.int32)
+        cursor = indptr[:-1].copy()
+        for d in range(n_docs):
+            terms = corpus.field_terms[f][d]
+            ids[cursor[terms]] = d
+            cursor[terms] += 1
+        indptrs.append(indptr)
+        doc_id_arrays.append(ids)
+    return InvertedIndex(
+        n_docs=n_docs, vocab_size=vocab, block_docs=block_docs,
+        indptr=indptrs, doc_ids=doc_id_arrays,
+        static_rank=corpus.static_rank, doc_len=doc_len, df=df)
+
+
+def test_build_index_matches_reference_loop(small):
+    corpus, index = small
+    ref = _reference_build_index(corpus, block_docs=128)
+    assert index.n_docs == ref.n_docs
+    np.testing.assert_array_equal(index.df, ref.df)
+    np.testing.assert_array_equal(index.doc_len, ref.doc_len)
+    for f in range(N_FIELDS):
+        np.testing.assert_array_equal(index.indptr[f], ref.indptr[f])
+        np.testing.assert_array_equal(index.doc_ids[f], ref.doc_ids[f])
+
+
+def test_build_index_from_pairs_dedup():
+    from repro.index.builder import build_index_from_pairs
+
+    rng = np.random.default_rng(21)
+    n_docs, vocab = 64, 32
+    docs = rng.integers(0, n_docs, size=300)
+    terms = rng.integers(0, vocab, size=300)
+    # duplicating every pair must not change the canonical postings
+    soup = build_index_from_pairs(
+        [np.concatenate([docs, docs])] * N_FIELDS,
+        [np.concatenate([terms, terms])] * N_FIELDS,
+        n_docs=n_docs, vocab_size=vocab,
+        static_rank=np.linspace(1, 0, n_docs, dtype=np.float32),
+        block_docs=32, dedup=True)
+    clean = build_index_from_pairs(
+        [docs] * N_FIELDS, [terms] * N_FIELDS,
+        n_docs=n_docs, vocab_size=vocab,
+        static_rank=np.linspace(1, 0, n_docs, dtype=np.float32),
+        block_docs=32, dedup=True)
+    for f in range(N_FIELDS):
+        np.testing.assert_array_equal(soup.indptr[f], clean.indptr[f])
+        np.testing.assert_array_equal(soup.doc_ids[f], clean.doc_ids[f])
+    np.testing.assert_array_equal(soup.df, clean.df)
+
+
+# --------------------------------------------------- blocks.py edge cases
+def test_pack_bits_rejects_non_word_multiple():
+    with pytest.raises(ValueError, match="multiple of 32"):
+        pack_bits(np.zeros(33, bool))
+
+
+def test_words_per_block_rejects_non_word_multiple():
+    with pytest.raises(ValueError, match="multiple of 32"):
+        words_per_block(100)
+    assert words_per_block(128) == 4
+
+
+def test_pack_bits_empty_plane_is_zero_words():
+    w = pack_bits(np.zeros((3, 64), bool))
+    assert w.shape == (3, 2) and not w.any()
+    assert pack_bits(np.ones(32, bool))[0] == np.uint32(0xFFFFFFFF)
+
+
+def test_occupancy_tail_block_zero_padded():
+    """n_docs not a multiple of block_docs: the tail block's padding
+    bits (docs beyond n_docs) must be zero in every plane."""
+    from repro.index.builder import build_index_from_pairs
+
+    n_docs, vocab, block_docs = 100, 16, 64     # padded to 128
+    docs = np.arange(n_docs, dtype=np.int64)
+    terms = (docs % vocab).astype(np.int64)     # every doc posts
+    index = build_index_from_pairs(
+        [docs] * N_FIELDS, [terms] * N_FIELDS,
+        n_docs=n_docs, vocab_size=vocab,
+        static_rank=np.linspace(1, 0, n_docs, dtype=np.float32),
+        block_docs=block_docs, dedup=False)
+    occ = query_occupancy(index, list(range(MAX_QUERY_TERMS)))
+    bits = unpack_bits(
+        occ.transpose(1, 2, 0, 3).reshape(MAX_QUERY_TERMS, N_FIELDS, -1))
+    assert bits.shape[-1] == index.padded_docs == 128
+    assert bits[..., :n_docs].any()             # real docs present
+    assert not bits[..., n_docs:].any()         # padding strictly zero
+
+
+def test_doc_bit_matches_unpack():
+    from repro.index.blocks import doc_bit
+
+    rng = np.random.default_rng(22)
+    bits = rng.random(128) < 0.4
+    words = pack_bits(bits)
+    for d in (0, 31, 32, 77, 127):
+        assert bool(doc_bit(words, np.int32(d))) == bits[d]

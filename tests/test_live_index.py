@@ -1,0 +1,284 @@
+"""Tiered live index: segments, epochs, merge, parity, epoch-keyed
+serving (src/repro/index/live/, docs/index.md)."""
+import numpy as np
+import pytest
+
+from repro.core.versioned import StaleVersionError, VersionedStore
+from repro.data.querylog import CAT2, QueryLogConfig
+from repro.index.builder import build_index_from_pairs
+from repro.index.corpus import CorpusConfig, N_FIELDS
+from repro.index.live import (BaseSegment, DeltaSegment, IndexEpochStore,
+                              LiveIndex, LiveRetrievalSystem, MergeConfig,
+                              MergeDaemon, StaleIndexEpochError,
+                              check_epoch_parity)
+from repro.policies.store import PolicyStore, StalePolicyError
+from repro.system import SystemConfig
+
+
+# ----------------------------------------------------------- tiny builders
+def tiny_index(n_docs=96, vocab=64, block_docs=32, seed=0):
+    rng = np.random.default_rng(seed)
+    pair_docs, pair_terms = [], []
+    for k in (1, 2, 8, 3):                    # anchor/url/body/title-ish
+        pair_docs.append(np.repeat(np.arange(n_docs, dtype=np.int64), k))
+        pair_terms.append(rng.integers(0, vocab, size=n_docs * k))
+    return build_index_from_pairs(
+        pair_docs, pair_terms, n_docs=n_docs, vocab_size=vocab,
+        static_rank=np.linspace(1, 0, n_docs, dtype=np.float32),
+        block_docs=block_docs, dedup=True)
+
+
+def rand_doc(rng, vocab=64):
+    fields = [np.unique(rng.integers(0, vocab, size=k))
+              for k in (1, 2, 8, 3)]
+    return [f.astype(np.int32) for f in fields]
+
+
+@pytest.fixture(scope="module")
+def live_sys():
+    """One live retrieval system shared by the module; tests only rely
+    on RELATIVE epoch/doc-count movement, never absolute values, so
+    accumulated mutations from earlier tests are fine."""
+    sys_ = LiveRetrievalSystem(SystemConfig(
+        corpus=CorpusConfig(n_docs=512, vocab_size=256, seed=5),
+        querylog=QueryLogConfig(n_queries=96, seed=5),
+        block_docs=128, p_bins=128, u_budget=512, l1_steps=60,
+    ), capacity_docs=1536)
+    sys_.fit_l1(n_queries=48, batch=16)
+    sys_.fit_state_bins(n_queries=32, batch=16)
+    return sys_
+
+
+# ------------------------------------------------------- versioned core
+def test_stale_errors_share_base():
+    # One except-clause covers both publish planes (replica.py relies
+    # on it): policy and index staleness are the same root error.
+    assert issubclass(StalePolicyError, StaleVersionError)
+    assert issubclass(StaleIndexEpochError, StaleVersionError)
+    assert issubclass(StaleVersionError, RuntimeError)
+
+
+def test_policy_store_is_versioned_store():
+    assert issubclass(PolicyStore, VersionedStore)
+    assert issubclass(IndexEpochStore, VersionedStore)
+
+
+def test_index_epoch_store_staleness_and_subscribe():
+    live = LiveIndex(tiny_index(), staleness_bound=1)
+    store = live.store
+    v0 = store.version
+    seen = []
+    unsub = store.subscribe(lambda e: seen.append(e.version))
+    live.add_document(rand_doc(np.random.default_rng(0)))
+    live.commit()
+    live.add_document(rand_doc(np.random.default_rng(1)))
+    live.commit()
+    # the subscriber sees the head at subscription time, then every
+    # publish in order
+    assert seen == [v0, v0 + 1, v0 + 2]
+    assert store.staleness(v0 + 2) == 0
+    with pytest.raises(StaleIndexEpochError):
+        store.validate(v0)                  # 2 behind, bound is 1
+    unsub()
+    live.add_document(rand_doc(np.random.default_rng(2)))
+    live.commit()
+    assert seen == [v0, v0 + 1, v0 + 2]     # unsubscribed — no delivery
+
+
+# ----------------------------------------------------------- base segment
+def test_base_segment_mmap_roundtrip(tmp_path):
+    seg = BaseSegment.from_index(tiny_index(), generation=3)
+    assert not seg.mmapped
+    seg.save(tmp_path / "gen")
+    loaded = BaseSegment.load(tmp_path / "gen")
+    assert loaded.mmapped and loaded.generation == 3
+    a, b = seg.index, loaded.index
+    assert a.n_docs == b.n_docs and a.block_docs == b.block_docs
+    np.testing.assert_array_equal(a.static_rank, b.static_rank)
+    np.testing.assert_array_equal(a.doc_len, b.doc_len)
+    np.testing.assert_array_equal(a.df, b.df)
+    for f in range(N_FIELDS):
+        np.testing.assert_array_equal(a.indptr[f], b.indptr[f])
+        np.testing.assert_array_equal(a.doc_ids[f], b.doc_ids[f])
+        for d in (0, 17, a.n_docs - 1):
+            np.testing.assert_array_equal(seg.doc_terms(d, f),
+                                          loaded.doc_terms(d, f))
+
+
+# ---------------------------------------------------------- delta segment
+def test_delta_append_only_ids():
+    base = BaseSegment.from_index(tiny_index(n_docs=64))
+    rng = np.random.default_rng(7)
+    from repro.index.live.segments import DeltaOp
+    ops = [DeltaOp("add", 64, rand_doc(rng)),
+           DeltaOp("add", 66, rand_doc(rng))]   # gap: 65 missing
+    with pytest.raises(ValueError, match="append-only"):
+        DeltaSegment(base, ops)
+
+
+def test_delta_update_tombstones_and_df():
+    base = BaseSegment.from_index(tiny_index(n_docs=64))
+    rng = np.random.default_rng(8)
+    doc = 5
+    new_fields = rand_doc(rng)
+    from repro.index.live.segments import DeltaOp
+    delta = DeltaSegment(base, [DeltaOp("update", doc, new_fields)])
+    assert delta.tombstones.tolist() == [doc]
+    # df: the old doc's terms are subtracted, the new ones added.
+    for f in range(N_FIELDS):
+        expect = base.index.df[:, f].copy()
+        expect[base.doc_terms(doc, f)] -= 1
+        expect[new_fields[f]] += 1
+        np.testing.assert_array_equal(expect, delta.df[:, f])
+        # updated doc is served from the delta postings, not the base
+        for t in new_fields[f]:
+            assert doc in delta.postings(int(t), f)
+
+
+# ------------------------------------------------------- live index + epochs
+def test_live_index_commit_merge_epochs(tmp_path):
+    live = LiveIndex(tiny_index(), storage_dir=tmp_path)
+    rng = np.random.default_rng(9)
+    v0, g0, n0 = live.epoch, live.generation, live.n_docs
+    ids = live.add_documents([rand_doc(rng) for _ in range(5)])
+    assert ids == list(range(n0, n0 + 5))
+    assert live.n_docs == n0             # invisible until commit
+    live.commit()
+    assert live.epoch == v0 + 1 and live.n_docs == n0 + 5
+    assert live.delta_docs == 5
+    live.merge()
+    assert live.epoch == v0 + 2          # every visible publish bumps
+    assert live.generation == g0 + 1     # merge also bumps generation
+    assert live.delta_docs == 0 and live.n_docs == n0 + 5
+    # merged generation is served from an mmapped on-disk base
+    assert live.stats()["base_mmapped"]
+
+
+def test_live_index_capacity_overflow():
+    live = LiveIndex(tiny_index(n_docs=96, block_docs=32),
+                     capacity_docs=128)
+    rng = np.random.default_rng(10)
+    for _ in range(128 - 96):
+        live.add_document(rand_doc(rng))
+    with pytest.raises(ValueError, match="capacity"):
+        live.add_document(rand_doc(rng))
+
+
+def test_occupancy_shape_fixed_across_epochs():
+    live = LiveIndex(tiny_index(), capacity_docs=256)
+    view0 = live.store.snapshot().view
+    shape0 = view0.query_occupancy([1, 2]).shape
+    rng = np.random.default_rng(11)
+    live.add_documents([rand_doc(rng) for _ in range(3)])
+    live.commit()
+    live.merge()
+    view1 = live.store.snapshot().view
+    # static AOT shapes: occupancy spans CAPACITY at every epoch, so
+    # compiled rollouts never retrace across commits or merges
+    assert view1.query_occupancy([1, 2]).shape == shape0
+
+
+def test_merge_daemon_compacts():
+    live = LiveIndex(tiny_index())
+    rng = np.random.default_rng(12)
+    g0 = live.generation
+    with MergeDaemon(live, MergeConfig(min_delta_docs=4,
+                                       poll_interval_s=0.01)) as daemon:
+        live.add_documents([rand_doc(rng) for _ in range(6)])
+        live.commit()
+        daemon.trigger()
+        deadline = 50
+        while live.delta_docs and deadline:
+            import time
+            time.sleep(0.05)
+            deadline -= 1
+    assert daemon.last_error is None
+    assert live.generation > g0 and live.delta_docs == 0
+    assert daemon.merges_run >= 1
+
+
+# ------------------------------------------------------------ parity sweep
+def test_parity_across_add_commit_merge(live_sys):
+    sys_ = live_sys
+    rng = np.random.default_rng(13)
+    qids = rng.choice(sys_.log.n_queries, size=6, replace=False)
+    store = sys_.index_epoch_store
+    out = check_epoch_parity(sys_, store.snapshot(), qids)
+    assert out["ok"]
+    sys_.add_documents([rand_doc(rng, vocab=256) for _ in range(4)])
+    sys_.commit_index()
+    out = check_epoch_parity(sys_, store.snapshot(), qids)
+    assert out["ok"] and out["n_docs"] >= 516
+    sys_.merge_index()
+    out = check_epoch_parity(sys_, store.snapshot(), qids)
+    assert out["ok"] and out["generation"] >= 1
+
+
+def test_append_queries_served(live_sys):
+    sys_ = live_sys
+    rng = np.random.default_rng(14)
+    doc = rand_doc(rng, vocab=256)
+    [did] = sys_.add_documents([doc])
+    terms = np.sort(doc[3][:2]).astype(np.int32)       # title terms
+    [qid] = sys_.append_queries([terms], [CAT2],
+                                judged_ids=[[did]], judged_gains=[[4]])
+    sys_.commit_index()
+    assert qid == sys_.log.n_queries - 1
+    occ, scores, tp = sys_.batch_inputs([qid])
+    assert int(np.asarray(tp).sum()) == len(terms)
+    # the fresh doc must be visible in the appended query's occupancy
+    view = sys_.index_epoch_store.snapshot().view
+    assert did in view.postings(int(terms[0]), 3)
+
+
+# ---------------------------------------- epoch-keyed serving (regression)
+def test_cache_hit_never_survives_epoch_swap(live_sys):
+    """A result filled at epoch N must NEVER answer at epoch N+1: the
+    swap invalidates exactly the stale entries via (key,
+    policy_version, index_epoch) cache keys."""
+    from repro.serving import EngineConfig, ServeEngine
+
+    sys_ = live_sys
+    store = PolicyStore(staleness_bound=4)
+    store.publish(sys_.baseline_policies(),
+                  fallbacks=sys_.fallback_policies())
+    engine = ServeEngine(sys_, store, EngineConfig(
+        min_bucket=4, max_bucket=8, cache_capacity=256))
+    engine.warmup()
+
+    qid = 3
+    [r1] = engine.serve([qid])
+    e1 = r1.index_epoch
+    assert not r1.cached and e1 == sys_.index_epoch
+    [r2] = engine.serve([qid])
+    assert r2.cached and r2.index_epoch == e1
+
+    rng = np.random.default_rng(15)
+    sys_.add_documents([rand_doc(rng, vocab=256)])
+    sys_.commit_index()                    # epoch N+1
+    [r3] = engine.serve([qid])
+    assert r3.index_epoch == e1 + 1
+    assert not r3.cached, "epoch-N fill answered at epoch N+1"
+    [r4] = engine.serve([qid])             # refilled under the new key
+    assert r4.cached and r4.index_epoch == e1 + 1
+    assert engine.summary()["index_epoch_swaps"] >= 1
+
+
+# -------------------------------------------------------------- freshness
+def test_freshness_workload(live_sys):
+    from repro.data.freshness import FreshnessConfig, FreshnessWorkload
+
+    sys_ = live_sys
+    n_docs0, n_q0, e0 = sys_.live.n_docs, sys_.log.n_queries, sys_.index_epoch
+    w = FreshnessWorkload(sys_, FreshnessConfig(
+        docs_per_tick=4, wave_queries=16, seed=3))
+    wave = w.tick()
+    assert sys_.live.n_docs == n_docs0 + 4
+    assert sys_.log.n_queries == n_q0 + 4
+    assert sys_.index_epoch == e0 + 1      # tick commits an epoch
+    assert wave.shape == (16,)
+    fresh = wave[wave >= n_q0]
+    assert fresh.size > 0                  # the wave chases fresh docs
+    # chase queries judge the fresh doc relevant
+    q = int(fresh[0])
+    assert sys_.log.judged_ids[q, 0] >= n_docs0
