@@ -1,7 +1,7 @@
 PYTHON ?= python
 export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH),)
 
-.PHONY: check compile test serve-bench cluster-bench cluster-smoke trace-smoke index-smoke index-bench degrade-bench bench serve example
+.PHONY: check compile test serve-bench cluster-bench proc-bench cluster-smoke proc-smoke trace-smoke index-smoke index-bench degrade-bench bench serve example
 
 # CI gate: byte-compile everything, then the tier-1 suite
 check: compile test
@@ -21,11 +21,29 @@ serve-bench:
 cluster-bench:
 	$(PYTHON) -m benchmarks.cluster_bench --fast --replicas 1,2
 
+# Thread-vs-process replica backend sweep: fleet QPS / p99 / worker
+# RSS per replica count, the smaps proof of one shared index mapping,
+# and a FULL bit-parity check between backends (docs/cluster.md)
+proc-bench:
+	$(PYTHON) -m benchmarks.cluster_bench --fast --replicas 1,2,4 \
+		--backend-sweep
+
 # CI smoke: 2 replicas, tiny corpus, 2 publish cycles, zero dropped,
 # trainer fed from the served-traffic tap, and a burst the ladder must
 # absorb with SHALLOW service instead of hard SHEDs
 cluster-smoke:
 	$(PYTHON) -m repro.launch.cluster --smoke
+
+# CI smoke for the multi-process serving cell (docs/cluster.md):
+# worker processes over shm rings serve a LIVE system while documents
+# commit and the trainer publishes mid-stream.  Asserts zero dropped
+# tickets, >= 3 policy versions and >= 2 index epochs applied inside
+# the workers (control-pipe acks), and — from /proc/<pid>/smaps — that
+# the workers' index mappings hold zero private-dirty pages: the fleet
+# shares ONE physical copy of the base generation.
+proc-smoke:
+	$(PYTHON) -m repro.launch.cluster --smoke --replica-backend process \
+		--out results/proc_smoke.json
 
 # cluster-smoke with the observability plane on: emits a Chrome trace
 # (Perfetto-loadable) + merged fleet metrics snapshot, then validates

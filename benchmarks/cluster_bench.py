@@ -115,7 +115,7 @@ def config_metrics(cluster, results, tickets, wall) -> dict:
 
 def fresh_cluster(sys_, policies, *, replicas, routing, bucket, cache,
                   u_budget=float("inf"), staleness_bound=2, ladder=True,
-                  fallbacks=None, prior_shallow_u=None):
+                  fallbacks=None, prior_shallow_u=None, backend="thread"):
     from repro.cluster import ClusterConfig, ReplicaSet
     from repro.policies import PolicyStore
     from repro.serving import EngineConfig
@@ -127,12 +127,109 @@ def fresh_cluster(sys_, policies, *, replicas, routing, bucket, cache,
     # long-evicted tail keys fall back to depth-balanced routing.
     cluster = ReplicaSet(sys_, store, ClusterConfig(
         n_replicas=replicas, routing=routing, u_inflight_budget=u_budget,
-        ladder=ladder, prior_shallow_u=prior_shallow_u,
+        ladder=ladder, prior_shallow_u=prior_shallow_u, backend=backend,
         affinity_table=max(1, cache) * replicas),
         EngineConfig(min_bucket=bucket, max_bucket=bucket,
                      cache_capacity=cache))
     cluster.warmup()
     return cluster, store
+
+
+# ---------------------------------------------------------- backend sweep
+def _vm_rss_kb(pid):
+    """VmRSS of one process from /proc/<pid>/status (kB; None if gone)."""
+    try:
+        with open(f"/proc/{pid}/status") as fh:
+            for line in fh:
+                if line.startswith("VmRSS:"):
+                    return int(line.split()[1])
+    except OSError:
+        pass
+    return None
+
+
+def run_backend_sweep(sys_, policies, *, replicas_list, bucket, cache,
+                      volume) -> dict:
+    """Thread vs process replica backends on the same burst stream.
+
+    Per (backend, replica count): fleet QPS, p50/p99, per-worker VmRSS,
+    and — process side — the /proc/<pid>/smaps accounting of the cell's
+    index mappings (Rss vs Pss vs Private_Dirty) proving every worker
+    serves from ONE shared physical copy of the base generation.
+
+    Honest numbers: ``n_cpus`` is recorded with the results.  On a
+    single-core box the process cell pays spawn + ring IPC without any
+    hardware parallelism to recoup it — the scaling claim only means
+    something when cores >= replicas.  Ends with a FULL bit-parity
+    check: the same queries through both backends, identical doc_ids /
+    scores / u."""
+    import os
+
+    from repro.cluster import Shed
+    from repro.launch.cluster import _cell_mapping_stats
+
+    stream = skewed_stream(sys_.log, volume, seed=31)
+    warm_stream = head_once(sys_.log)
+    out = {"n_cpus": os.cpu_count(), "volume": int(volume), "configs": {}}
+    for n_rep in replicas_list:
+        for backend in ("thread", "process"):
+            cluster, _ = fresh_cluster(
+                sys_, policies, replicas=n_rep, routing="queue_aware",
+                bucket=bucket, cache=cache, backend=backend)
+            with cluster:
+                drive(cluster, warm_stream, 0.0)
+                res, tk, wall = drive(cluster, stream, 0.0)
+                m = config_metrics(cluster, res, tk, wall)
+                reps = cluster.stats()["replicas"]
+                if backend == "process":
+                    pids = [s["worker_pid"] for s in reps]
+                    m["worker_restarts"] = [s["n_restarts"] for s in reps]
+                    m["worker_rss_kb"] = [_vm_rss_kb(p) for p in pids]
+                    m["index_mappings"] = _cell_mapping_stats(
+                        pids, cluster.proc_cell_dir)
+            out["configs"][f"r{n_rep}_{backend}"] = m
+            print(f"cluster_bench.backend.r{n_rep}.{backend}.qps,"
+                  f"{m['qps']:.2f}")
+            print(f"cluster_bench.backend.r{n_rep}.{backend}.p99_ms,"
+                  f"{m['latency_p99_ms']:.2f}")
+        t_qps = out["configs"][f"r{n_rep}_thread"]["qps"]
+        p_qps = out["configs"][f"r{n_rep}_process"]["qps"]
+        ratio = p_qps / t_qps if t_qps else 0.0
+        out["configs"][f"r{n_rep}_process"]["qps_vs_thread"] = ratio
+        maps = out["configs"][f"r{n_rep}_process"]["index_mappings"]
+        if n_rep >= 2:
+            # sharing proof needs >= 2 mappers: Pss divides each page
+            # by its mapper count, so one physical copy shows up as
+            # sum(Pss) ~ sum(Rss)/n.  (private_dirty alone is not
+            # usable at n=1 — tmpfs pages are always dirty and count
+            # private until a second worker maps them.)
+            assert maps["pss_kb_total"] <= 0.75 * maps["rss_kb_total"], maps
+        print(f"cluster_bench.backend.r{n_rep}.process_qps_over_thread,"
+              f"{ratio:.3f}")
+        print(f"cluster_bench.backend.r{n_rep}.index_map_rss_kb,"
+              f"{maps['rss_kb_total']} (pss {maps['pss_kb_total']}, "
+              f"private_dirty {maps['private_dirty_kb_total']})")
+
+    # FULL bit-parity: identical queries, caches off, both backends —
+    # process responses must match the thread reference bit for bit.
+    rng = np.random.default_rng(13)
+    qids = [int(q) for q in rng.integers(0, sys_.log.n_queries, size=24)]
+    got = {}
+    for backend in ("thread", "process"):
+        cluster, _ = fresh_cluster(
+            sys_, policies, replicas=2, routing="queue_aware",
+            bucket=bucket, cache=0, backend=backend)
+        with cluster:
+            got[backend] = cluster.serve(qids)
+    for t_resp, p_resp in zip(got["thread"], got["process"]):
+        assert not isinstance(t_resp, Shed) and not isinstance(p_resp, Shed)
+        np.testing.assert_array_equal(t_resp.doc_ids, p_resp.doc_ids)
+        np.testing.assert_array_equal(t_resp.scores, p_resp.scores)
+        assert t_resp.u == p_resp.u and \
+            t_resp.policy_version == p_resp.policy_version
+    out["full_parity_checked"] = len(qids)
+    print(f"cluster_bench.backend.full_parity_checked,{len(qids)}")
+    return out
 
 
 # ------------------------------------------------------------- degradation
@@ -249,7 +346,8 @@ def run_degradation(sys_, policies, *, n_rep, bucket, cache, volume,
 
 def main(fast: bool = False, replicas_list=(1, 2, 4),
          pacing_ms: float = 8.0, repeats: int = 3,
-         degradation_only: bool = False) -> dict:
+         degradation_only: bool = False,
+         backend_sweep_only: bool = False) -> dict:
     from benchmarks.serve_bench import build_system
     from repro.cluster import TrainerConfig, TrainerLoop
 
@@ -277,6 +375,19 @@ def main(fast: bool = False, replicas_list=(1, 2, 4),
 
     out = {"volume": volume, "pacing_ms": pacing_ms, "repeats": repeats,
            "configs": {}}
+
+    if backend_sweep_only:
+        out["backend"] = run_backend_sweep(
+            sys_, policies, replicas_list=replicas_list, bucket=bucket,
+            cache=cache, volume=volume)
+        from benchmarks._results import record
+        record("cluster_bench_backend",
+               config={"fast": fast, "n_docs": n_docs,
+                       "n_queries": n_queries,
+                       "replicas": list(replicas_list), "volume": volume,
+                       "bucket": bucket},
+               metrics=out["backend"])
+        return out
 
     if degradation_only:
         out["degradation"] = run_degradation(
@@ -394,8 +505,12 @@ if __name__ == "__main__":
     ap.add_argument("--degradation-only", action="store_true",
                     help="run only the ladder-vs-binary degradation sweep "
                          "(make degrade-bench)")
+    ap.add_argument("--backend-sweep", action="store_true",
+                    help="run only the thread-vs-process replica backend "
+                         "sweep (make proc-bench)")
     a = ap.parse_args()
     main(fast=a.fast,
          replicas_list=tuple(int(x) for x in a.replicas.split(",")),
          pacing_ms=a.pacing_ms, repeats=a.repeats,
-         degradation_only=a.degradation_only)
+         degradation_only=a.degradation_only,
+         backend_sweep_only=a.backend_sweep)

@@ -13,6 +13,7 @@ from repro.serving.levels import ServiceLevel
 
 from .admission import Admission, AdmissionController, Shed, UCostEstimator
 from .cluster import ClusterConfig, ReplicaSet
+from .proc import FollowerSystem, ProcessReplica, ShmRing
 from .replica import ClusterTicket, Replica
 from .router import (QueueAwareRouter, RoundRobinRouter, Router, make_router,
                      stable_query_hash)
@@ -21,8 +22,9 @@ from .trainer import TrainerConfig, TrainerLoop, candidate_recall, probe_recall
 
 __all__ = [
     "Admission", "AdmissionController", "ClusterConfig", "ClusterTicket",
-    "QueueAwareRouter", "Replica", "ReplicaSet", "RoundRobinRouter",
-    "Router", "ServedTrafficTap", "ServiceLevel", "Shed", "TrainerConfig",
-    "TrainerLoop", "UCostEstimator", "candidate_recall", "make_router",
-    "probe_recall", "stable_query_hash",
+    "FollowerSystem", "ProcessReplica", "QueueAwareRouter", "Replica",
+    "ReplicaSet", "RoundRobinRouter", "Router", "ServedTrafficTap",
+    "ServiceLevel", "Shed", "ShmRing", "TrainerConfig", "TrainerLoop",
+    "UCostEstimator", "candidate_recall", "make_router", "probe_recall",
+    "stable_query_hash",
 ]

@@ -28,6 +28,17 @@ learned online from the traffic the fleet actually serves — a new
 policy version starts from the previous version's estimates as its
 prior and re-learns its own costs (a deeper-scanning v7 must not be
 priced with v6's numbers).
+
+Live indexes add a second axis: a query whose terms have postings in
+the head epoch's **delta segment** scans more (or different) blocks
+than the mmapped base alone, so its realized u drifts away from the
+base-learned table between merges.  The estimator keeps a per-(level,
+category) *delta correction* — an EMA of the realized-u / table-value
+ratio learned ONLY from epoch-stamped outcomes observed at the current
+head epoch (a stale stamp describes a delta that no longer exists) —
+and multiplies it into the estimate whenever the query's terms hit the
+head delta.  Base buckets stay base-only; a merge empties the delta,
+the hit probe goes false, and pricing falls back to the clean table.
 """
 from __future__ import annotations
 
@@ -114,6 +125,14 @@ class UCostEstimator:
         self._shape = (len(EXECUTED_LEVELS), n_cats, n_df_bins)
         self._tables: Dict[int, np.ndarray] = {}
         self._seen: Dict[int, np.ndarray] = {}
+        # Delta-aware pricing (live indexes): multiplicative correction
+        # per (level, category) applied when the query's terms have
+        # postings in the head epoch's delta; 1.0 = base pricing.
+        self._delta_corr = np.ones((len(EXECUTED_LEVELS), n_cats))
+        self._delta_seen = np.zeros((len(EXECUTED_LEVELS), n_cats),
+                                    dtype=np.int64)
+        self._delta_terms: frozenset = frozenset()
+        self._delta_terms_version = -1
         self._lock = threading.Lock()
         self._init_version(0)
 
@@ -181,34 +200,77 @@ class UCostEstimator:
         df_bin = int(np.searchsorted(self._edges, df_frac[qid]))
         return cat, df_bin
 
+    # ------------------------------------------------------- delta pricing
+    def _head_delta(self) -> Tuple[int, frozenset]:
+        """(head epoch version, delta term set) — cached per epoch; a
+        static system answers (-1, ∅) and never prices a correction."""
+        store = getattr(self._system, "index_epoch_store", None)
+        if store is None:
+            return -1, frozenset()
+        epoch = store.snapshot()
+        with self._lock:
+            if epoch.version != self._delta_terms_version:
+                self._delta_terms = epoch.view.delta.terms_present()
+                self._delta_terms_version = epoch.version
+            return self._delta_terms_version, self._delta_terms
+
+    def delta_hit(self, qid: int) -> bool:
+        """True when any of the query's terms has postings in the HEAD
+        epoch's delta segment — i.e. serving it scans delta blocks the
+        base-learned table never saw."""
+        _, terms = self._head_delta()
+        if not terms:
+            return False
+        log = self._system.log
+        qid = int(qid)
+        ts = log.terms[qid, : log.n_terms[qid]]
+        return any(int(t) in terms for t in ts)
+
     def estimate(self, qid: int,
                  level: ServiceLevel = ServiceLevel.FULL,
                  version: Optional[int] = None) -> float:
         if level not in EXECUTED_LEVELS:
             raise ValueError(f"no u estimate for non-executed level {level!r}")
         cat, df_bin = self.features(qid)
+        hit = self.delta_hit(qid)
         with self._lock:
-            return float(self._tables[self._resolve(version)][
+            est = float(self._tables[self._resolve(version)][
                 int(level), cat, df_bin])
+            if hit:
+                est *= float(self._delta_corr[int(level), cat])
+            return est
 
     def estimates(self, qid: int,
                   version: Optional[int] = None) -> Tuple[float, float]:
         """(FULL, SHALLOW) estimates in one feature lookup and one lock
         acquisition — the admission hot path prices both rungs."""
         cat, df_bin = self.features(qid)
+        hit = self.delta_hit(qid)
         with self._lock:
             col = self._tables[self._resolve(version)][:, cat, df_bin]
-            return (float(col[int(ServiceLevel.FULL)]),
-                    float(col[int(ServiceLevel.SHALLOW)]))
+            corr = self._delta_corr[:, cat] if hit else None
+            full = float(col[int(ServiceLevel.FULL)])
+            shallow = float(col[int(ServiceLevel.SHALLOW)])
+            if corr is not None:
+                full *= float(corr[int(ServiceLevel.FULL)])
+                shallow *= float(corr[int(ServiceLevel.SHALLOW)])
+            return full, shallow
 
     def observe(self, qid: int, u: float,
                 level: ServiceLevel = ServiceLevel.FULL,
-                version: Optional[int] = None) -> None:
+                version: Optional[int] = None,
+                index_epoch: Optional[int] = None) -> None:
         """Feed one served response's realized u back (online learning
-        from the traffic the fleet actually serves)."""
+        from the traffic the fleet actually serves).  ``index_epoch``
+        is the epoch stamp the response carries; delta-touching
+        outcomes train the per-category correction instead of the base
+        table, and only when stamped at the current head (a stale
+        stamp priced a delta that has since merged or grown)."""
         if level not in EXECUTED_LEVELS:
             return                       # cached/shed responses cost no u
         cat, df_bin = self.features(qid)
+        head_epoch, _terms = self._head_delta()
+        hit = self.delta_hit(qid)
         with self._lock:
             if version is None:
                 version = max(self._tables)
@@ -218,6 +280,21 @@ class UCostEstimator:
                 self._init_version(version)
             idx = (int(level), cat, df_bin)
             table, seen = self._tables[version], self._seen[version]
+            if hit:
+                # Keep the base table base-only: this outcome includes
+                # delta scanning, so it trains the correction ratio —
+                # and only when observed AT the head epoch.
+                if index_epoch is None or index_epoch != head_epoch:
+                    return
+                ratio = float(u) / max(float(table[idx]), 1e-9)
+                cidx = (int(level), cat)
+                if self._delta_seen[cidx] == 0:
+                    self._delta_corr[cidx] = ratio
+                else:
+                    self._delta_corr[cidx] += self.ema * (
+                        ratio - self._delta_corr[cidx])
+                self._delta_seen[cidx] += 1
+                return
             if seen[idx] == 0:
                 table[idx] = float(u)    # drop the (inherited) prior
             else:
@@ -234,6 +311,9 @@ class UCostEstimator:
                 "versions": sorted(self._tables),
                 "buckets_seen": int((self._seen[latest] > 0).sum()),
                 "table": self._tables[latest].round(1).tolist(),
+                "delta_corr": self._delta_corr.round(3).tolist(),
+                "delta_obs": int(self._delta_seen.sum()),
+                "delta_terms_epoch": self._delta_terms_version,
             }
 
 
@@ -338,16 +418,19 @@ class AdmissionController:
     def release(self, reserved_u: float, actual_u: Optional[float] = None,
                 qid: Optional[int] = None,
                 level: ServiceLevel = ServiceLevel.FULL,
-                version: Optional[int] = None) -> None:
+                version: Optional[int] = None,
+                index_epoch: Optional[int] = None) -> None:
         """Return a reservation; with the realized u (non-cached
         responses only), feed the estimator for the (level, snapshot
-        version) that served it."""
+        version) that served it — ``index_epoch`` stamps the outcome
+        for the estimator's delta-aware correction."""
         with self._lock:
             self.reserved_u = max(0.0, self.reserved_u - reserved_u)
             self._g_reserved.set(self.reserved_u)
         if actual_u is not None and qid is not None:
             self.estimator.observe(qid, actual_u, level=level,
-                                   version=version)
+                                   version=version,
+                                   index_epoch=index_epoch)
 
     def stats(self) -> dict:
         with self._lock:

@@ -55,6 +55,15 @@ Result = Union[ServeResponse, Shed]
 @dataclasses.dataclass(frozen=True)
 class ClusterConfig:
     n_replicas: int = 2
+    # "thread": N ServeEngines on worker threads in this process (the
+    # default and the parity oracle).  "process": N worker processes,
+    # each mmapping the cell's saved base generation (one physical
+    # copy fleet-wide), fed over binary shared-memory rings with
+    # policy/epoch publishes relayed per-worker (repro.cluster.proc).
+    backend: str = "thread"
+    proc_ring_slots: int = 64             # per-direction SPSC ring slots
+    proc_storage_dir: Optional[str] = None  # cell dir (tempdir when None)
+    max_worker_restarts: int = 2          # respawns before shedding
     routing: str = "queue_aware"          # or "round_robin"
     spill_margin: int = 4                 # depth gap before spilling
     owner_spill_depth: Optional[int] = 32  # sticky-owner saturation gauge
@@ -110,11 +119,20 @@ class ReplicaSet:
                                     degraded_boost=cfg.tap_degraded_boost,
                                     holdout_every=cfg.tap_holdout_every,
                                     holdout_capacity=cfg.tap_holdout_capacity)
-        self.replicas: List[Replica] = [
-            Replica(i, system, store, engine_cfg,
-                    on_complete=self._on_complete, tracer=tracer)
-            for i in range(cfg.n_replicas)
-        ]
+        self._engine_cfg = engine_cfg
+        self._unsubscribes: List = []
+        if cfg.backend == "thread":
+            self.replicas: List[Replica] = [
+                Replica(i, system, store, engine_cfg,
+                        on_complete=self._on_complete, tracer=tracer)
+                for i in range(cfg.n_replicas)
+            ]
+        elif cfg.backend == "process":
+            self.replicas = self._build_process_cell(engine_cfg)
+        else:
+            raise ValueError(
+                f"unknown replica backend {cfg.backend!r} "
+                "(expected 'thread' or 'process')")
         self._lock = threading.Lock()
         # (key, policy_version, index_epoch) -> replica whose result
         # cache owns it (LRU-bounded); repeats route back there
@@ -134,14 +152,122 @@ class ReplicaSet:
         self.n_shed = 0
         self._started = False
 
+    # -------------------------------------------------------- process cell
+    def _build_process_cell(self, engine_cfg: EngineConfig) -> List:
+        """Spawn-side of ``backend="process"``: save the base index
+        once (every worker ``np.memmap``s that ONE copy), build the
+        per-replica spec factory, and subscribe relay fan-outs so each
+        policy snapshot / index epoch publish reaches every worker over
+        its control pipe."""
+        import tempfile
+        from pathlib import Path
+
+        from repro.index.live.segments import BaseSegment, MANIFEST_NAME
+
+        from .proc import ProcessReplica
+
+        self._proc_root = Path(self.cfg.proc_storage_dir
+                               or tempfile.mkdtemp(prefix="repro-proc-cell-"))
+        base_dir = self._proc_root / "base"
+        if not (base_dir / MANIFEST_NAME).exists():
+            # system.index is the PRISTINE corpus-built index even on a
+            # live system (LiveIndex wraps a copy as generation 0) — the
+            # workers derive their deterministic query log from it.
+            BaseSegment.from_index(self.system.index).save(base_dir)
+        self._proc_base_dir = str(base_dir)
+        replicas = [
+            ProcessReplica(i, self._worker_spec,
+                           on_complete=self._on_complete,
+                           keep=engine_cfg.keep,
+                           ring_slots=self.cfg.proc_ring_slots,
+                           max_restarts=self.cfg.max_worker_restarts,
+                           cache_mirror_capacity=engine_cfg.cache_capacity)
+            for i in range(self.cfg.n_replicas)
+        ]
+        return replicas
+
+    def _epoch_gen_dir(self, epoch) -> str:
+        """On-disk home of an epoch's base generation — saved under the
+        cell dir once if the live index is storage-less."""
+        from repro.index.live.segments import MANIFEST_NAME
+
+        base = epoch.view.base
+        if base.path:
+            return str(base.path)
+        gen_dir = self._proc_root / f"gen-{base.generation:05d}"
+        if not (gen_dir / MANIFEST_NAME).exists():
+            base.save(gen_dir)
+        return str(gen_dir)
+
+    def _worker_spec(self, idx: int, req_info, resp_info):
+        """Capture the head serving state for one worker (re)spawn."""
+        from .proc import WorkerSpec
+
+        snap = self.store.snapshot()
+        index_store = getattr(self.system, "index_epoch_store", None)
+        live = index_store is not None
+        init_epoch = None
+        capacity = None
+        index_sb = 64
+        if live:
+            epoch = index_store.snapshot()
+            init_epoch = (epoch.version, epoch.generation,
+                          self._epoch_gen_dir(epoch), tuple(epoch.ops))
+            capacity = epoch.view.capacity_docs
+            index_sb = index_store.staleness_bound
+        return WorkerSpec(
+            replica_idx=idx,
+            sys_cfg=self.system.cfg,
+            base_dir=self._proc_base_dir,
+            live=live,
+            capacity_docs=capacity,
+            init_epoch=init_epoch,
+            # MappingProxyType snapshots aren't picklable; plain dicts
+            # are (policies pickle via their registered pytree leaves).
+            init_policy=(snap.version, dict(snap.policies),
+                         dict(snap.fallbacks)),
+            l1_params=self.system.l1_params,
+            bins=self.system.bins,
+            qcfg=self.system.qcfg,
+            engine_cfg=self._engine_cfg,
+            policy_staleness_bound=self.store.staleness_bound,
+            index_staleness_bound=index_sb,
+            req_ring=req_info,
+            resp_ring=resp_info)
+
+    def _subscribe_relays(self) -> None:
+        """Fan every publish out to the worker processes.  Deliveries
+        run on the publisher's thread; per-worker pipes keep FIFO order,
+        so a worker always applies versions monotonically."""
+        def relay_policy(snap) -> None:
+            policies, fallbacks = dict(snap.policies), dict(snap.fallbacks)
+            for r in self.replicas:
+                r.relay_policy(snap.version, policies, fallbacks)
+
+        self._unsubscribes.append(self.store.subscribe(relay_policy))
+        index_store = getattr(self.system, "index_epoch_store", None)
+        if index_store is not None:
+            def relay_epoch(epoch) -> None:
+                gen_dir = self._epoch_gen_dir(epoch)
+                for r in self.replicas:
+                    r.relay_epoch(epoch.version, epoch.generation,
+                                  gen_dir, tuple(epoch.ops))
+
+            self._unsubscribes.append(index_store.subscribe(relay_epoch))
+
     # ------------------------------------------------------------ control
     def start(self) -> "ReplicaSet":
         for r in self.replicas:
             r.start()
+        if self.cfg.backend == "process":
+            self._subscribe_relays()
         self._started = True
         return self
 
     def stop(self, drain: bool = True) -> None:
+        for unsub in self._unsubscribes:
+            unsub()
+        self._unsubscribes = []
         for r in self.replicas:
             r.stop(drain=drain)
         self._started = False
@@ -155,7 +281,7 @@ class ReplicaSet:
     def warmup(self) -> int:
         """Pre-compile every replica's executables (serially, before the
         worker threads race the compiler); returns total compiles."""
-        return sum(r.engine.warmup() for r in self.replicas)
+        return sum(r.warmup() for r in self.replicas)
 
     # ------------------------------------------------------------- submit
     def submit(self, qid: int) -> ClusterTicket:
@@ -185,7 +311,7 @@ class ReplicaSet:
         # invalidated by a swap, the request must load-balance like any
         # other miss — pinning dead keys to a busy owner is exactly
         # how tails grow.
-        if owner is not None and not self.replicas[owner].engine.cache_has(key):
+        if owner is not None and not self.replicas[owner].cache_has(key):
             owner = None
         # The SHALLOW rung is only real if the head snapshot ships a
         # fallback policy for this category (they travel together).
@@ -269,7 +395,8 @@ class ReplicaSet:
                 ticket.reserved_u,
                 actual_u=None if result.cached else result.u,
                 qid=ticket.qid, level=result.level,
-                version=result.policy_version)
+                version=result.policy_version,
+                index_epoch=result.index_epoch)
             lag = max(0, self.store.version - result.policy_version)
             # Freshness lag: epochs between the index that produced the
             # response and the head — how stale the answer's view of
@@ -301,6 +428,13 @@ class ReplicaSet:
                                 reason=getattr(result, "reason", None))
 
     # -------------------------------------------------------------- stats
+    @property
+    def proc_cell_dir(self):
+        """Storage dir shared by the process cell's workers (the mmap'd
+        base + generation segments); None on the thread backend."""
+        root = getattr(self, "_proc_root", None)
+        return str(root) if root is not None else None
+
     def metrics_snapshot(self) -> dict:
         """The fleet metrics view: every replica registry (request/
         latency/u/queue-wait instruments, cache counters) folded into
@@ -308,7 +442,7 @@ class ReplicaSet:
         histograms add, gauges take the max.  JSON-serializable; this
         is what ``--metrics-json`` writes."""
         return merge_snapshots(
-            [r.engine.telemetry.registry.snapshot() for r in self.replicas]
+            [r.metrics_snapshot() for r in self.replicas]
             + [self.registry.snapshot()])
 
     def version_lag(self) -> dict:

@@ -1,0 +1,22 @@
+"""Process-backed serving cell: GIL-free replicas over one mmap-shared
+index.
+
+`ReplicaSet(..., ClusterConfig(backend="process"))` swaps each
+thread-backed `Replica` for a :class:`ProcessReplica` — a worker
+process that mmaps the cell's saved base generation (one page-cache
+copy fleet-wide), receives tickets over a binary shared-memory ring
+(`ShmRing`), and follows policy/index publishes relayed over its
+control pipe (`FollowerSystem`).  docs/cluster.md has the full
+architecture section.
+"""
+from .follower import FollowerSystem
+from .messages import (REQUEST_BYTES, decode_request, decode_response,
+                       encode_request, encode_response, response_bytes)
+from .replica import ProcessReplica
+from .ring import RingClosed, RingFull, ShmRing
+from .worker import WorkerSpec, worker_main
+
+__all__ = ["FollowerSystem", "ProcessReplica", "REQUEST_BYTES",
+           "RingClosed", "RingFull", "ShmRing", "WorkerSpec",
+           "decode_request", "decode_response", "encode_request",
+           "encode_response", "response_bytes", "worker_main"]

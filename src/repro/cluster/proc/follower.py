@@ -1,0 +1,113 @@
+"""Worker-side read replica of the live index.
+
+A process-backed replica cannot reach into the parent's `LiveIndex` —
+it follows it instead.  The parent relays every published
+:class:`~repro.index.live.live_index.IndexEpoch` over the control
+channel as a compact payload: ``(version, generation, gen_dir, ops)``.
+The worker mmaps the base generation from ``gen_dir`` (zero-copy —
+every worker in the cell maps the SAME physical pages the parent
+wrote) and rebuilds the cheap in-memory :class:`DeltaSegment` from the
+committed op log, then republishes the epoch into a local
+`IndexEpochStore` **under the producer's version numbering**, so
+staleness bounds and epoch-lag accounting mean the same thing on both
+sides of the process boundary.  Gaps are legal (a respawned worker
+jumps straight to the head epoch it is sent); duplicates — e.g. the
+subscribe-time replay of an epoch the spawn spec already carried — are
+skipped.
+
+The serving read path (`EpochReadMixin`) is the exact code the
+in-process `LiveRetrievalSystem` serves with; only the epoch *source*
+differs.  What is NOT followed: query-log appends
+(``append_queries``).  The follower serves the seed log; freshness
+workloads that append queries need the thread backend today
+(docs/cluster.md records the limitation).
+"""
+from __future__ import annotations
+
+import dataclasses
+from collections import OrderedDict
+from typing import Optional, Sequence, Tuple
+
+from repro.index.live.live_index import IndexEpochStore, IndexView
+from repro.index.live.segments import BaseSegment, DeltaOp, DeltaSegment
+from repro.index.live.system import EpochReadMixin
+from repro.system import RetrievalSystem, SystemConfig
+
+__all__ = ["FollowerSystem"]
+
+#: Base generations kept mapped — the head epoch's plus the previous
+#: one, so a pinned view keeps working across one merge relay.
+_BASES_KEPT = 2
+
+
+class FollowerSystem(EpochReadMixin, RetrievalSystem):
+    """`RetrievalSystem` whose index epochs arrive over IPC.
+
+    ``base_dir`` is the PRISTINE corpus-built generation the parent
+    saved once for the whole cell: the deterministic query log, idf
+    table and env shapes are derived from it, so they are bit-identical
+    to the parent's regardless of how many merges have happened by the
+    time this worker (re)spawns.  ``init_epoch`` is the head epoch at
+    spawn time, applied before the first query is served.
+    """
+
+    def __init__(self, cfg: SystemConfig, base_dir, *,
+                 capacity_docs: int,
+                 init_epoch: Tuple[int, int, str, Sequence[DeltaOp]],
+                 staleness_bound: int = 64):
+        pristine = BaseSegment.load(base_dir)
+        super().__init__(cfg, index=pristine.index)
+        bd = pristine.index.block_docs
+        if capacity_docs % bd != 0:
+            raise ValueError(f"capacity_docs {capacity_docs} not a "
+                             f"multiple of block_docs {bd}")
+        self.capacity_docs = capacity_docs
+        self.capacity_blocks = capacity_docs // bd
+        # Fixed shapes across epochs, same as LiveRetrievalSystem.
+        self.env_cfg = dataclasses.replace(self.env_cfg,
+                                           n_blocks=self.capacity_blocks)
+        self._bases: "OrderedDict[str, BaseSegment]" = OrderedDict()
+        self._store = IndexEpochStore(staleness_bound=staleness_bound)
+        self._init_epoch_reader()
+        version, generation, gen_dir, ops = init_epoch
+        base = self._load_base(gen_dir)
+        delta = DeltaSegment(base, list(ops))
+        view = IndexView(base, delta, capacity_docs)
+        self._store.publish(view, generation, ops=ops, version=version)
+        self.static_rank, self.doc_len = self._epoch_planes(
+            self._store.snapshot())
+
+    # ----------------------------------------------------------- epoching
+    @property
+    def index_epoch_store(self) -> IndexEpochStore:
+        return self._store
+
+    @property
+    def index_epoch(self) -> int:
+        return self._store.version
+
+    def apply_epoch(self, version: int, generation: int, gen_dir,
+                    ops: Sequence[DeltaOp]) -> int:
+        """Install one relayed epoch; returns the local head version.
+        Out-of-order or duplicate relays (≤ the local head) are skipped
+        — the relay stream is monotone per producer, but a respawn's
+        spec and the subscribe replay can both carry the same head."""
+        if version <= self._store.version:
+            return self._store.version
+        base = self._load_base(gen_dir)
+        delta = DeltaSegment(base, list(ops))
+        view = IndexView(base, delta, self.capacity_docs)
+        return self._store.publish(view, generation, ops=ops,
+                                   version=version)
+
+    def _load_base(self, gen_dir) -> BaseSegment:
+        key = str(gen_dir)
+        base = self._bases.get(key)
+        if base is None:
+            base = BaseSegment.load(gen_dir)      # np.memmap, mode="r"
+            self._bases[key] = base
+            while len(self._bases) > _BASES_KEPT:
+                self._bases.popitem(last=False)
+        else:
+            self._bases.move_to_end(key)
+        return base

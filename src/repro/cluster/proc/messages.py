@@ -1,0 +1,98 @@
+"""Fixed-layout binary codecs for the process cell's data plane.
+
+Requests and responses cross the router↔worker boundary through
+`ShmRing` slots as packed structs — no pickle on the hot path.  Slot
+capacity is fixed at ring creation, so the response codec is sized for
+the engine's ``keep`` (top-k width) and anything larger is rejected at
+encode time (the ring raises before a partial write can happen).
+
+Control-plane traffic (policy snapshots, index epochs, worker stats)
+is low-rate and structurally rich; it travels pickled over the
+worker's `multiprocessing.Pipe` instead — see
+`repro.cluster.proc.worker` for the message grammar.
+"""
+from __future__ import annotations
+
+import struct
+from typing import Optional, Tuple, Union
+
+import numpy as np
+
+from repro.cluster.admission import Shed
+from repro.serving import ServiceLevel
+from repro.serving.engine import ServeResponse
+
+__all__ = ["REQUEST_BYTES", "decode_request", "decode_response",
+           "encode_request", "encode_response", "response_bytes"]
+
+# ticket u64 | qid i64 | level i32 | category i32
+_REQ = struct.Struct("<Qqii")
+REQUEST_BYTES = _REQ.size
+
+# ticket u64 | qid i64 | category i32 | level i32 | status u8 | cached u8
+# | pad u16 | u i32 | cand_cnt i32 | policy_version i32 | index_epoch i32
+# | n_docs i32 | latency f64 | reason char[48]
+_RESP_HDR = struct.Struct("<QqiiBBHiiiiid48s")
+_REASON_BYTES = 48
+
+_STATUS_OK = 0
+_STATUS_SHED = 1
+
+Result = Union[ServeResponse, Shed]
+
+
+def response_bytes(keep: int) -> int:
+    """Slot payload size for responses carrying up to ``keep`` docs."""
+    return _RESP_HDR.size + keep * 8          # keep × (i32 id + f32 score)
+
+
+# ------------------------------------------------------------- requests
+def encode_request(ticket_id: int, qid: int, level: ServiceLevel,
+                   category: int) -> bytes:
+    return _REQ.pack(ticket_id, qid, int(level), category)
+
+
+def decode_request(payload: bytes) -> Tuple[int, int, ServiceLevel, int]:
+    ticket_id, qid, level, category = _REQ.unpack(payload)
+    return ticket_id, qid, ServiceLevel(level), category
+
+
+# ------------------------------------------------------------ responses
+def encode_response(ticket_id: int, result: Result, keep: int) -> bytes:
+    if isinstance(result, Shed):
+        reason = result.reason.encode("utf-8")[:_REASON_BYTES]
+        return _RESP_HDR.pack(
+            ticket_id, result.qid, result.category, 0, _STATUS_SHED,
+            0, 0, 0, 0, 0, 0, 0, float(result.est_u), reason)
+    r = result
+    ids = np.asarray(r.doc_ids, dtype=np.int32)
+    scores = np.asarray(r.scores, dtype=np.float32)
+    n = ids.shape[0]
+    if n > keep:
+        raise ValueError(f"response carries {n} docs but the ring was "
+                         f"sized for keep={keep}")
+    hdr = _RESP_HDR.pack(
+        ticket_id, r.qid, r.category, int(r.level), _STATUS_OK,
+        1 if r.cached else 0, 0, int(r.u), int(r.cand_cnt),
+        int(r.policy_version), int(r.index_epoch), n,
+        float(r.latency_s), b"")
+    return hdr + ids.tobytes() + scores.tobytes()
+
+
+def decode_response(payload: bytes) -> Tuple[int, Result]:
+    (ticket_id, qid, category, level, status, cached, _pad, u, cand_cnt,
+     policy_version, index_epoch, n, lat_or_est_u,
+     reason) = _RESP_HDR.unpack_from(payload)
+    if status == _STATUS_SHED:
+        return ticket_id, Shed(qid, category, lat_or_est_u,
+                               reason.rstrip(b"\x00").decode("utf-8"))
+    off = _RESP_HDR.size
+    ids = np.frombuffer(payload, np.int32, count=n, offset=off).copy()
+    scores = np.frombuffer(payload, np.float32, count=n,
+                           offset=off + 4 * n).copy()
+    return ticket_id, ServeResponse(
+        request_id=ticket_id, qid=qid, category=category,
+        doc_ids=ids, scores=scores, u=u, cand_cnt=cand_cnt,
+        cached=bool(cached), latency_s=lat_or_est_u,
+        policy_version=policy_version, index_epoch=index_epoch,
+        level=ServiceLevel(level))

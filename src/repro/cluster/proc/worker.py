@@ -1,0 +1,269 @@
+"""Worker process: one `ServeEngine` behind two shared-memory rings.
+
+Spawned (never forked — JAX is fork-unsafe) with a :class:`WorkerSpec`
+that carries everything needed to rebuild the serving state
+deterministically:
+
+- the `SystemConfig` (corpus + query log regenerate bit-identically),
+- the path of the cell's saved base generation, opened via
+  ``np.memmap`` so N workers map ONE physical copy of the postings,
+- the trained L1 parameters / state bins / Q-config (host arrays),
+- the head policy snapshot and (live cells) the head index epoch at
+  spawn time, applied before the first ticket is served.
+
+The main loop mirrors `repro.cluster.replica.Replica._run`: drain
+control messages (policy/epoch relays — staleness is enforced HERE, by
+the worker-local stores), pop request records off the inbound ring,
+submit them with the same shed/retry semantics the thread replica uses,
+flush when the ring runs dry (latency path) or step full buckets
+otherwise, then push fixed-layout response records back.  The worker
+also stamps a heartbeat and publishes its engine queue depth into the
+ring header, which is the parent-side router's load signal.
+"""
+from __future__ import annotations
+
+import dataclasses
+import os
+import time
+import traceback
+from collections import deque
+from typing import Any, Dict, List, Optional, Tuple
+
+from repro.serving.levels import ServiceLevel
+
+from .messages import decode_request, encode_response
+from .ring import RingClosed, ShmRing
+
+__all__ = ["WorkerSpec", "worker_main"]
+
+#: Per-iteration cap on ring pops — control messages and completions
+#: must keep flowing under a request flood.
+_DRAIN_LIMIT = 256
+_IDLE_WAIT_S = 0.002
+
+
+@dataclasses.dataclass
+class WorkerSpec:
+    """Everything a worker needs to reconstruct its replica state."""
+    replica_idx: int
+    sys_cfg: Any                      # repro.system.SystemConfig
+    base_dir: str                     # pristine corpus-built generation
+    live: bool                        # follow relayed index epochs?
+    capacity_docs: Optional[int]
+    init_epoch: Optional[Tuple]       # (version, generation, gen_dir, ops)
+    init_policy: Tuple                # (version, policies, fallbacks)
+    l1_params: Any
+    bins: Any
+    qcfg: Any
+    engine_cfg: Any                   # repro.serving.EngineConfig
+    policy_staleness_bound: int
+    index_staleness_bound: int
+    req_ring: Tuple[str, int, int]    # (shm name, n_slots, slot_bytes)
+    resp_ring: Tuple[str, int, int]
+
+
+def worker_main(spec: WorkerSpec, conn) -> None:
+    """Process entry point (spawn target — must be module-level)."""
+    try:
+        _serve(spec, conn)
+    except BaseException:                         # noqa: BLE001
+        # The parent's collector turns this into a respawn (or a shed
+        # of the outstanding tickets once restarts are exhausted).
+        try:
+            conn.send(("died", traceback.format_exc()))
+        except Exception:                         # noqa: BLE001
+            pass
+        raise
+    finally:
+        try:
+            conn.close()
+        except Exception:                         # noqa: BLE001
+            pass
+
+
+def _build_system(spec: WorkerSpec):
+    # Imports happen here, inside the spawned child, so module import
+    # of proc/ stays light in the parent.
+    from repro.index.live.segments import BaseSegment
+    from repro.system import RetrievalSystem
+
+    from .follower import FollowerSystem
+
+    if spec.live:
+        system = FollowerSystem(
+            spec.sys_cfg, spec.base_dir,
+            capacity_docs=spec.capacity_docs,
+            init_epoch=spec.init_epoch,
+            staleness_bound=spec.index_staleness_bound)
+    else:
+        base = BaseSegment.load(spec.base_dir)    # np.memmap, shared
+        system = RetrievalSystem(spec.sys_cfg, index=base.index)
+    # Trained artifacts travel with the spec — the worker must serve
+    # with the parent's exact L1/bins, not retrain its own.
+    system.l1_params = spec.l1_params
+    system.bins = spec.bins
+    system.qcfg = spec.qcfg
+    return system
+
+
+def _serve(spec: WorkerSpec, conn) -> None:
+    from repro.policies import PolicyStore
+    from repro.serving import AdmissionError, CacheOnlyMiss, ServeEngine
+    from repro.core.versioned import StaleVersionError
+
+    req = ShmRing.attach(*spec.req_ring)
+    resp = ShmRing.attach(*spec.resp_ring)
+    system = _build_system(spec)
+
+    store = PolicyStore(staleness_bound=spec.policy_staleness_bound)
+    version, policies, fallbacks = spec.init_policy
+    store.publish(policies, fallbacks=fallbacks, version=version)
+    engine = ServeEngine(system, store, spec.engine_cfg)
+    keep = spec.engine_cfg.keep
+
+    # engine rid -> (ticket id, qid, category): enough to shed
+    # outstanding work explicitly when a batch poisons the engine.
+    rid2ticket: Dict[int, Tuple[int, int, int]] = {}
+    retry: deque = deque()                        # stale-raced submissions
+    stopping = False
+    drain = True
+    failures = 0
+    max_failures = 3
+
+    def shed(ticket_id: int, qid: int, category: int, reason: str) -> None:
+        resp.push(encode_response(
+            ticket_id, _mk_shed(qid, category, reason), keep))
+
+    def shed_outstanding(reason: str) -> None:
+        engine.cancel([rid for rid in rid2ticket])
+        for rid, (tid, qid, category) in list(rid2ticket.items()):
+            shed(tid, qid, category, reason)
+        rid2ticket.clear()
+        while retry:
+            tid, qid, _level, category = retry.popleft()
+            shed(tid, qid, category, reason)
+
+    def submit_one(ticket_id: int, qid: int, level: ServiceLevel,
+                   category: int) -> None:
+        try:
+            rid = engine.submit(qid, level)
+        except AdmissionError:
+            shed(ticket_id, qid, category, "replica_queue_full")
+            return
+        except CacheOnlyMiss:
+            shed(ticket_id, qid, category, "cached_only_miss")
+            return
+        except StaleVersionError:
+            # A relay raced between refresh and the staleness check —
+            # retry after the next control drain applies the publish.
+            retry.append((ticket_id, qid, level, category))
+            return
+        except Exception as e:                    # noqa: BLE001
+            shed(ticket_id, qid, category,
+                 f"replica_error:{type(e).__name__}")
+            return
+        rid2ticket[rid] = (ticket_id, qid, category)
+        r = engine.take_response(rid)             # cache hits are inline
+        if r is not None:
+            resp.push(encode_response(rid2ticket.pop(rid)[0], r, keep))
+
+    def handle_control(msg) -> None:
+        nonlocal stopping, drain
+        kind = msg[0]
+        if kind == "policy":
+            _, ver, pols, fbs = msg
+            if ver > store.version:
+                store.publish(pols, fallbacks=fbs, version=ver)
+            conn.send(("applied", "policy", store.version))
+        elif kind == "epoch":
+            _, ver, generation, gen_dir, ops = msg
+            head = system.apply_epoch(ver, generation, gen_dir, ops)
+            conn.send(("applied", "epoch", head))
+        elif kind == "warmup":
+            conn.send(("warmed", engine.warmup()))
+        elif kind == "stats":
+            conn.send(_stats_msg(engine, req, resp))
+        elif kind == "stop":
+            stopping, drain = True, bool(msg[1])
+
+    conn.send(("ready", os.getpid(), engine.policy_version,
+               engine.index_epoch))
+
+    while True:
+        progressed = False
+        while conn.poll():
+            handle_control(conn.recv())
+            progressed = True
+        if stopping and not drain:
+            # Fast shutdown: abandon with explicit sheds, never serve.
+            shed_outstanding("replica_shutdown")
+            break
+        n_polled = 0
+        for payload in req.pop_many(limit=_DRAIN_LIMIT):
+            submit_one(*decode_request(payload))
+            n_polled += 1
+        if n_polled:
+            progressed = True
+        if retry:
+            batch = list(retry)
+            retry.clear()
+            for item in batch:
+                submit_one(*item)
+        try:
+            if req.occupancy() == 0:
+                engine.flush()                    # latency path
+            else:
+                engine.step()                     # full buckets only
+            failures = 0
+        except StaleVersionError:
+            pass                                  # re-served after refresh
+        except Exception as e:                    # noqa: BLE001
+            failures += 1
+            if failures >= max_failures:
+                shed_outstanding(f"replica_error:{type(e).__name__}")
+                failures = 0
+        for rid in list(rid2ticket):
+            r = engine.take_response(rid)
+            if r is not None:
+                resp.push(encode_response(rid2ticket.pop(rid)[0], r, keep))
+                progressed = True
+        req.set_depth_hint(engine.queue_depth + engine.inflight
+                           + len(retry))
+        req.stamp_heartbeat()
+        if (stopping and not rid2ticket and not retry
+                and req.occupancy() == 0):
+            break
+        if not progressed:
+            # Park on the control pipe: wakes instantly for relays,
+            # times out quickly enough to poll the request ring.
+            conn.poll(_IDLE_WAIT_S)
+
+    # Final state for the parent: the post-mortem stats/metrics the
+    # obs plane folds after the worker is gone.
+    try:
+        conn.send(_stats_msg(engine, req, resp))
+        conn.send(("stopped",))
+    except Exception:                             # noqa: BLE001
+        pass
+    req.close()
+    resp.close()
+
+
+def _mk_shed(qid: int, category: int, reason: str):
+    from repro.cluster.admission import Shed
+    return Shed(qid, category, 0.0, reason)
+
+
+def _stats_msg(engine, req: ShmRing, resp: ShmRing) -> tuple:
+    snap = engine.telemetry.registry.snapshot()
+    # Ring contention counters ride the same mergeable snapshot: the
+    # request ring's consumer side and the response ring's producer
+    # side are this worker's (the parent owns the other two halves).
+    for ring, ring_label in ((req, "req"), (resp, "resp")):
+        for stat, v in ring.park_stats().items():
+            snap[f"ring.{stat}{{ring={ring_label}}}"] = {
+                "type": "counter", "value": int(v)}
+        snap[f"ring.occupancy{{ring={ring_label}}}"] = {
+            "type": "gauge", "value": float(ring.occupancy()),
+            "max": float(ring.occupancy())}
+    return ("stats", engine.summary(), snap)

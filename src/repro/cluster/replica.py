@@ -57,13 +57,24 @@ class ClusterTicket:
         self.t_submit = Telemetry.now()
         self.t_done: Optional[float] = None
         self._event = threading.Event()
+        self._done_lock = threading.Lock()
         self._result: Optional[Result] = None
         self._inbox_work = 0          # 1 while counted as a likely miss
 
-    def complete(self, result: Result) -> None:
-        self.t_done = Telemetry.now()
-        self._result = result
-        self._event.set()
+    def complete(self, result: Result) -> bool:
+        """Install the result; the FIRST completion wins.  Returns False
+        for late duplicates — e.g. the original response of a ticket
+        that was requeued after a worker death and already answered by
+        the respawned worker.  Callers that do per-completion accounting
+        (telemetry, tap records, ledger releases) must gate on the
+        return value, or a retried ticket is double-counted."""
+        with self._done_lock:
+            if self._event.is_set():
+                return False
+            self.t_done = Telemetry.now()
+            self._result = result
+            self._event.set()
+            return True
 
     def done(self) -> bool:
         return self._event.is_set()
@@ -177,6 +188,19 @@ class Replica:
     def index_epoch(self) -> int:
         return self.engine.index_epoch
 
+    # Replica protocol (shared with cluster.proc.ProcessReplica): the
+    # ReplicaSet talks to replicas only through these, never through
+    # ``.engine`` directly — a process-backed replica has no in-process
+    # engine to reach into.
+    def cache_has(self, base_key) -> bool:
+        return self.engine.cache_has(base_key)
+
+    def warmup(self) -> int:
+        return self.engine.warmup()
+
+    def metrics_snapshot(self) -> dict:
+        return self.engine.telemetry.registry.snapshot()
+
     def summary(self) -> dict:
         out = self.engine.summary()
         out.update(replica=self.idx, n_enqueued=self.n_enqueued,
@@ -246,7 +270,8 @@ class Replica:
                 self._finish(self._rid2ticket.pop(rid), resp)
 
     def _finish(self, ticket: ClusterTicket, result: Result) -> None:
-        ticket.complete(result)
+        if not ticket.complete(result):
+            return                    # a retry already answered it
         self.n_completed += 1
         if self.on_complete is not None:
             self.on_complete(ticket, result)

@@ -82,13 +82,25 @@ class VersionedStore:
         self._subscribers: List[Subscriber] = []
 
     # ------------------------------------------------------------ publish
-    def _publish_snapshot(self, build: Callable[[Optional[Any], int], Any]) -> int:
+    def _publish_snapshot(self, build: Callable[[Optional[Any], int], Any],
+                          version: Optional[int] = None) -> int:
         """Install ``build(previous_snapshot, next_version)`` as the new
         head and notify subscribers (outside the lock); returns the new
         version.  The builder runs under the store lock, so it must be
-        cheap — assemble heavy payloads before publishing."""
+        cheap — assemble heavy payloads before publishing.
+
+        ``version`` pins an explicit head version instead of the default
+        head+1 — the cross-process relay uses this so a worker-local
+        store mirrors the producer's numbering exactly (a respawned
+        worker jumps straight to the head version it is sent; gaps are
+        legal, regressions are not)."""
         with self._lock:
-            version = (self._snapshot.version if self._snapshot else 0) + 1
+            head = self._snapshot.version if self._snapshot else 0
+            if version is None:
+                version = head + 1
+            elif version <= head:
+                raise ValueError(
+                    f"explicit version {version} must exceed head {head}")
             snap = build(self._snapshot, version)
             assert snap.version == version, "builder must stamp the version"
             self._snapshot = snap

@@ -18,6 +18,7 @@ parity exact *at equal capacity* (docs/index.md).
 """
 from __future__ import annotations
 
+import pickle
 import threading
 import time
 from pathlib import Path
@@ -35,7 +36,10 @@ from repro.obs import NULL_TRACER, MetricsRegistry, Tracer
 from .segments import BaseSegment, DeltaOp, DeltaSegment, _canon_fields
 
 __all__ = ["IndexEpoch", "IndexEpochStore", "IndexView", "LiveIndex",
-           "StaleIndexEpochError", "MERGE_MS_EDGES"]
+           "StaleIndexEpochError", "MERGE_MS_EDGES", "OPLOG_NAME"]
+
+#: Op-log checkpoint file, written next to the generation dirs.
+OPLOG_NAME = "oplog.ckpt"
 
 # Merge wall-time histogram buckets (ms): spans tiny test merges to
 # multi-second 1M-doc compactions.
@@ -162,14 +166,21 @@ class IndexView:
 class IndexEpoch:
     """One published index version: readers pin it like a policy
     snapshot (immutable; ``version`` is the epoch id the result cache
-    keys on, ``generation`` counts merges)."""
+    keys on, ``generation`` counts merges).
 
-    __slots__ = ("version", "generation", "view")
+    ``ops`` is the committed delta op log the epoch's view was built
+    from — the compact payload the process cell relays to worker
+    processes, which mmap the base generation themselves and rebuild
+    the (cheap, in-memory) delta from these ops."""
 
-    def __init__(self, version: int, generation: int, view: IndexView):
+    __slots__ = ("version", "generation", "view", "ops")
+
+    def __init__(self, version: int, generation: int, view: IndexView,
+                 ops: Tuple[DeltaOp, ...] = ()):
         self.version = version
         self.generation = generation
         self.view = view
+        self.ops = tuple(ops)
 
     def describe(self) -> dict:
         return {"version": self.version, "generation": self.generation,
@@ -178,14 +189,22 @@ class IndexEpoch:
 
 class IndexEpochStore(VersionedStore):
     """`VersionedStore` over :class:`IndexEpoch` — EVERY visible index
-    mutation (delta commit or merge) bumps the epoch."""
+    mutation (delta commit or merge) bumps the epoch.
+
+    ``version`` pins an explicit epoch id: the process cell's workers
+    republish relayed epochs into their local store under the
+    producer's numbering (gaps are legal — a respawned worker jumps
+    straight to the head epoch it is sent)."""
 
     stale_error = StaleIndexEpochError
     artifact = "index epoch"
 
-    def publish(self, view: IndexView, generation: int) -> int:
+    def publish(self, view: IndexView, generation: int,
+                ops: Sequence[DeltaOp] = (),
+                version: Optional[int] = None) -> int:
         return self._publish_snapshot(
-            lambda prev, version: IndexEpoch(version, generation, view))
+            lambda prev, ver: IndexEpoch(ver, generation, view, ops),
+            version=version)
 
 
 class LiveIndex:
@@ -317,7 +336,7 @@ class LiveIndex:
         delta = DeltaSegment(base, ops)
         view = IndexView(base, delta, self.capacity_docs,
                          account=self._account)
-        version = self.store.publish(view, base.generation)
+        version = self.store.publish(view, base.generation, ops=ops)
         self._g_delta.set(delta.n_docs_owned)
         self._g_epoch.set(version)
         self._g_generation.set(base.generation)
@@ -364,9 +383,68 @@ class LiveIndex:
             dt_ms = (time.perf_counter() - t0) * 1e3
             self._h_merge.record(dt_ms)
             self._gc_generations()
+            # A merge changes which generation the op log is relative
+            # to: an existing checkpoint must follow, or a crash after
+            # the merge would leave a stale checkpoint whose residual
+            # ops restore() has to discard.
+            if (self.storage_dir
+                    and (self.storage_dir / OPLOG_NAME).exists()):
+                self.checkpoint()
             span.end(epoch=version, generation=merged.generation,
                      merged_ops=n_merged, ms=round(dt_ms, 2))
         return version
+
+    # ----------------------------------------------------- checkpointing
+    def checkpoint(self) -> Path:
+        """Persist the op log (committed-but-unmerged AND pending ops —
+        neither tier lives in any on-disk generation) next to the
+        generation manifests; :meth:`restore` replays it after a
+        restart.  Atomic: written to a temp file and renamed, so a crash
+        mid-write leaves the previous checkpoint intact."""
+        if not self.storage_dir:
+            raise RuntimeError("checkpoint() needs a storage_dir")
+        with self._mu:
+            payload = pickle.dumps({
+                "generation": self._base.generation,
+                "n_committed": self._n_committed,
+                "next_doc": self._next_doc,
+                "ops": list(self._ops),
+            }, protocol=4)
+        path = self.storage_dir / OPLOG_NAME
+        tmp = path.with_suffix(".tmp")
+        tmp.write_bytes(payload)
+        tmp.replace(path)
+        return path
+
+    @classmethod
+    def restore(cls, storage_dir, **kwargs) -> "LiveIndex":
+        """Reopen a live index from ``storage_dir``: load the newest
+        base generation (mmapped) and replay the op-log checkpoint —
+        committed ops are republished as an epoch (bit-parity with the
+        never-crashed index's head view), pending ops wait for the next
+        ``commit``.  A checkpoint written against an older generation
+        than the newest on disk is stale (the crash hit between a merge
+        and its checkpoint refresh) and is discarded."""
+        storage_dir = Path(storage_dir)
+        gens = sorted(storage_dir.glob("gen-*"))
+        if not gens:
+            raise FileNotFoundError(f"no gen-* under {storage_dir}")
+        base = BaseSegment.load(gens[-1])
+        li = cls(base, storage_dir=storage_dir, **kwargs)
+        ckpt = storage_dir / OPLOG_NAME
+        if not ckpt.exists():
+            return li
+        data = pickle.loads(ckpt.read_bytes())
+        if data["generation"] != base.generation:
+            return li                    # stale: ops already merged
+        with li._mu:
+            li._ops = list(data["ops"])
+            li._n_committed = int(data["n_committed"])
+            li._next_doc = int(data["next_doc"])
+            if li._n_committed:
+                li._publish_locked(li._base,
+                                   li._ops[: li._n_committed])
+        return li
 
     @staticmethod
     def _compact(base: BaseSegment, ops: List[DeltaOp]) -> BaseSegment:

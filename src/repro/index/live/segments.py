@@ -261,6 +261,14 @@ class DeltaSegment:
         :attr:`tomb_mask`, its current terms live here)."""
         return self._postings[field].get(int(term), self._EMPTY)
 
+    def terms_present(self) -> frozenset:
+        """Terms with at least one delta posting in any field — the
+        admission plane's "does this query touch the delta" probe."""
+        out = set()
+        for per_term in self._postings:
+            out.update(per_term)
+        return frozenset(out)
+
     @property
     def n_docs_owned(self) -> int:
         """Docs whose current truth lives in the delta."""

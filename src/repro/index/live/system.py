@@ -37,45 +37,28 @@ from repro.system import RetrievalSystem, SystemConfig
 
 from .live_index import IndexEpoch, LiveIndex
 
-__all__ = ["LiveRetrievalSystem"]
+__all__ = ["EpochReadMixin", "LiveRetrievalSystem"]
 
 _PLANES_LRU = 4   # epochs worth of device planes kept warm
 
 
-class LiveRetrievalSystem(RetrievalSystem):
-    def __init__(self, cfg: SystemConfig, *,
-                 capacity_docs: Optional[int] = None,
-                 storage_dir=None,
-                 staleness_bound: int = 64,
-                 registry: Optional[MetricsRegistry] = None,
-                 tracer: Tracer = NULL_TRACER):
-        super().__init__(cfg)
-        self.live = LiveIndex(self.index, capacity_docs=capacity_docs,
-                              staleness_bound=staleness_bound,
-                              storage_dir=storage_dir,
-                              registry=registry, tracer=tracer)
-        # Fixed shapes across epochs: rollouts always span capacity.
-        self.env_cfg = dataclasses.replace(
-            self.env_cfg, n_blocks=self.live.capacity_blocks)
+class EpochReadMixin:
+    """Read side of an epoch-versioned system: epoch-pinned batch
+    inputs plus capacity-padded per-epoch device planes.
+
+    Shared by the writer-side :class:`LiveRetrievalSystem` (whose
+    epochs come from its own `LiveIndex`) and the process cell's
+    worker-side follower (`repro.cluster.proc.follower`), whose epochs
+    arrive over the control channel and are republished into a local
+    store.  Hosts must provide ``index_epoch_store`` (an
+    `IndexEpochStore`) and the `RetrievalSystem` attributes the batch
+    path reads (``log``, ``idf_all``, ``l1_params``), and call
+    :meth:`_init_epoch_reader` before the first batch."""
+
+    def _init_epoch_reader(self) -> None:
         self._planes: "OrderedDict[int, Tuple[jnp.ndarray, jnp.ndarray]]" = \
             OrderedDict()
         self._planes_mu = threading.Lock()
-        self._log_mu = threading.Lock()
-        # Base-class paths (fit_l1, feature extraction) read
-        # self.static_rank / self.doc_len directly: re-point them at
-        # the capacity-padded epoch-1 planes so their shapes match the
-        # capacity-spanning occupancy every live batch produces.
-        self.static_rank, self.doc_len = self._epoch_planes(
-            self.live.store.snapshot())
-
-    # ----------------------------------------------------------- epoching
-    @property
-    def index_epoch_store(self):
-        return self.live.store
-
-    @property
-    def index_epoch(self) -> int:
-        return self.live.epoch
 
     # ------------------------------------------------------------- planes
     def _epoch_planes(self, epoch: IndexEpoch):
@@ -107,7 +90,7 @@ class LiveRetrievalSystem(RetrievalSystem):
         """Occupancy + L1 scores + masks at one pinned index epoch
         (head epoch when omitted — single-threaded callers)."""
         if epoch is None:
-            epoch = self.live.store.snapshot()
+            epoch = self.index_epoch_store.snapshot()
         view = epoch.view
         qids = np.asarray(query_ids)
         log = self.log                      # capture refs: appends swap
@@ -122,6 +105,40 @@ class LiveRetrievalSystem(RetrievalSystem):
                 self.l1_params, o, i, t, static_rank, doc_len)
         )(occ, idf, term_present)
         return occ, scores, term_present
+
+
+class LiveRetrievalSystem(EpochReadMixin, RetrievalSystem):
+    def __init__(self, cfg: SystemConfig, *,
+                 capacity_docs: Optional[int] = None,
+                 storage_dir=None,
+                 staleness_bound: int = 64,
+                 registry: Optional[MetricsRegistry] = None,
+                 tracer: Tracer = NULL_TRACER):
+        super().__init__(cfg)
+        self.live = LiveIndex(self.index, capacity_docs=capacity_docs,
+                              staleness_bound=staleness_bound,
+                              storage_dir=storage_dir,
+                              registry=registry, tracer=tracer)
+        # Fixed shapes across epochs: rollouts always span capacity.
+        self.env_cfg = dataclasses.replace(
+            self.env_cfg, n_blocks=self.live.capacity_blocks)
+        self._init_epoch_reader()
+        self._log_mu = threading.Lock()
+        # Base-class paths (fit_l1, feature extraction) read
+        # self.static_rank / self.doc_len directly: re-point them at
+        # the capacity-padded epoch-1 planes so their shapes match the
+        # capacity-spanning occupancy every live batch produces.
+        self.static_rank, self.doc_len = self._epoch_planes(
+            self.live.store.snapshot())
+
+    # ----------------------------------------------------------- epoching
+    @property
+    def index_epoch_store(self):
+        return self.live.store
+
+    @property
+    def index_epoch(self) -> int:
+        return self.live.epoch
 
     # ------------------------------------------------------------- writes
     def add_documents(self, docs, static_rank=None) -> List[int]:

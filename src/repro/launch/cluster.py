@@ -16,6 +16,15 @@ response or an explicit Shed (zero dropped), that the trainer consumed
 ONLY the served-traffic tap, and — under a moderate burst against a
 finite u budget — that the ladder degraded (some SHALLOW) without a
 single hard SHED.
+
+``--replica-backend process --smoke`` is the process-cell gate
+(``make proc-smoke``): a LIVE system serves through worker processes
+while documents commit (two index epochs) and the trainer publishes
+(three policy versions) mid-stream; asserts zero dropped tickets, that
+every worker applied >= 3 policy versions and >= 2 index epochs (via
+its control-channel acks), and — from /proc/<pid>/smaps — that the
+workers' index mappings hold ZERO private-dirty pages, i.e. the fleet
+shares ONE physical copy of the base generation.
 """
 from __future__ import annotations
 
@@ -25,6 +34,48 @@ import time
 from pathlib import Path
 
 import numpy as np
+
+
+def _cell_mapping_stats(pids, cell_root: str) -> dict:
+    """Per-worker Rss/Pss/Private_Dirty (kB) of every mapping under the
+    process cell's storage dir, straight from /proc/<pid>/smaps."""
+    per_worker = []
+    for pid in pids:
+        rss = pss = private = 0
+        n_maps = 0
+        in_cell = False
+        try:
+            with open(f"/proc/{pid}/smaps") as fh:
+                for line in fh:
+                    fields = line.split()
+                    if line[0] != ' ' and '-' in fields[0]:  # mapping header
+                        in_cell = len(fields) >= 6 and \
+                            fields[-1].startswith(cell_root)
+                        n_maps += in_cell
+                    elif in_cell and fields[0] in ("Rss:", "Pss:",
+                                                   "Private_Dirty:"):
+                        kb = int(fields[1])
+                        if fields[0] == "Rss:":
+                            rss += kb
+                        elif fields[0] == "Pss:":
+                            pss += kb
+                        else:
+                            private += kb
+        except OSError:
+            continue
+        per_worker.append({"pid": pid, "n_mappings": n_maps,
+                           "rss_kb": rss, "pss_kb": pss,
+                           "private_dirty_kb": private})
+    return {"workers": per_worker,
+            "rss_kb_total": sum(w["rss_kb"] for w in per_worker),
+            "pss_kb_total": sum(w["pss_kb"] for w in per_worker),
+            "private_dirty_kb_total": sum(w["private_dirty_kb"]
+                                          for w in per_worker)}
+
+
+def _rand_doc(rng, vocab: int):
+    return [np.unique(rng.integers(0, vocab, size=k)).astype(np.int32)
+            for k in (1, 2, 8, 3)]
 
 
 def main() -> None:
@@ -37,6 +88,11 @@ def main() -> None:
     ap.add_argument("--train-batch", type=int, default=32)
     ap.add_argument("--backend", default="xla",
                     help="index-scan backend (training AND serving)")
+    ap.add_argument("--replica-backend", default="thread",
+                    choices=["thread", "process"],
+                    help="replica execution: in-process threads (default) "
+                         "or worker processes over shm rings + one mmap-"
+                         "shared index (docs/cluster.md)")
     ap.add_argument("--routing", default="queue_aware",
                     choices=["queue_aware", "round_robin"])
     ap.add_argument("--staleness-bound", type=int, default=2)
@@ -65,11 +121,16 @@ def main() -> None:
                     help="CI gate: tiny sizes + zero-dropped assertion")
     args = ap.parse_args()
 
+    proc = args.replica_backend == "process"
     if args.smoke:
         args.replicas = 2
         args.n_docs, args.n_queries = 2048, 200
         args.iters, args.publish_every = 8, 4      # exactly 2 publish cycles
         args.train_batch, args.batch = 16, 16
+        if proc:
+            # the process gate also exercises index-epoch relays, so it
+            # trims sizes further — worker spawn + JIT dominate on CI
+            args.n_docs, args.n_queries = 1024, 128
 
     from repro.cluster import (ClusterConfig, ReplicaSet, ServiceLevel, Shed,
                                TrainerConfig, TrainerLoop)
@@ -82,13 +143,21 @@ def main() -> None:
 
     tracer = Tracer() if args.trace_out else NULL_TRACER
 
-    sys_ = RetrievalSystem(SystemConfig(
+    sys_cfg = SystemConfig(
         corpus=CorpusConfig(n_docs=args.n_docs, vocab_size=1024, seed=0),
         querylog=QueryLogConfig(n_queries=args.n_queries, seed=0),
         block_docs=256, p_bins=512, u_budget=1024,
         l1_steps=150 if not args.smoke else 80,
         backend=args.backend,
-    ))
+    )
+    if proc:
+        # live system so the smoke can commit documents mid-stream and
+        # prove epoch relays land inside the worker processes
+        from repro.index.live import LiveRetrievalSystem
+        sys_ = LiveRetrievalSystem(sys_cfg,
+                                   capacity_docs=args.n_docs + 512)
+    else:
+        sys_ = RetrievalSystem(sys_cfg)
     sys_.fit_l1(n_queries=96)
     sys_.fit_state_bins(n_queries=64)
     print(f"[build] {sys_.index.n_docs} docs / {sys_.log.n_queries} queries "
@@ -105,6 +174,7 @@ def main() -> None:
     trainer.publish_now()                 # v1 up before replicas construct
     cluster = ReplicaSet(sys_, store, ClusterConfig(
         n_replicas=args.replicas, routing=args.routing,
+        backend=args.replica_backend,
         u_inflight_budget=args.u_budget_inflight,
         ladder=not args.no_ladder,
         tap_holdout_every=4,              # eval holdout for the gate
@@ -123,17 +193,56 @@ def main() -> None:
     with cluster:
         trainer.start()
         waves = 0
-        while trainer.alive or waves == 0:
+        while trainer.alive or waves < (3 if proc else 1):
             qids = rng.integers(0, sys_.log.n_queries, size=args.batch)
             results.extend(cluster.serve(qids))
             waves += 1
+            if proc and waves in (1, 2):
+                # two commits mid-stream -> two index epochs the cell
+                # must relay into every worker over its control pipe
+                sys_.add_documents([_rand_doc(rng, 1024) for _ in range(4)])
+                sys_.commit_index()
         trainer.join()
-        # final wave on the last published version
+        # final wave on the last published version (and, on the process
+        # backend, the last committed epoch)
         results.extend(cluster.serve(
             rng.integers(0, sys_.log.n_queries, size=args.batch)))
         waves += 1
 
-        if args.smoke and not args.no_ladder:
+        proc_stats = None
+        if proc:
+            import os
+
+            # relays are async — wait for every worker to ack the head
+            # epoch and policy version before asserting on them
+            head_epoch = sys_.index_epoch
+            head_version = store.version
+            deadline = time.time() + 60.0
+            while time.time() < deadline:
+                st = cluster.stats()
+                lag = cluster.version_lag()
+                if (min(st["replica_index_epochs"]) >= head_epoch
+                        and min(lag["replica_versions"]) >= head_version):
+                    break
+                time.sleep(0.1)
+            summaries = cluster.stats()["replicas"]
+            worker_pids = [s["worker_pid"] for s in summaries]
+            proc_stats = {
+                "n_cpus": os.cpu_count(),
+                "worker_pids": worker_pids,
+                "worker_restarts": [s["n_restarts"] for s in summaries],
+                "head_index_epoch": head_epoch,
+                "replica_index_epochs":
+                    cluster.stats()["replica_index_epochs"],
+                "head_policy_version": head_version,
+                "replica_policy_versions":
+                    cluster.version_lag()["replica_versions"],
+                "cell_dir": cluster.proc_cell_dir,
+                "mappings": _cell_mapping_stats(worker_pids,
+                                                cluster.proc_cell_dir),
+            }
+
+        if args.smoke and not args.no_ladder and not proc:
             # Moderate burst against a finite budget: size the ledger
             # so the FULL rung saturates after a few queries while the
             # SHALLOW rung provably fits the whole burst — the ladder
@@ -170,6 +279,8 @@ def main() -> None:
         "trainer_log_batches": trainer.log_batches,
         "cluster": stats,
     }
+    if proc_stats is not None:
+        out["proc"] = proc_stats
     print(f"[serve] {len(results)} results over {waves} waves "
           f"({out['qps']:.1f} qps), {n_shed} shed, "
           f"versions {trainer.versions_published}, "
@@ -189,7 +300,7 @@ def main() -> None:
         assert trainer.tap_batches > 0 and trainer.log_batches == 0, \
             (f"trainer must train from served traffic only "
              f"(tap={trainer.tap_batches}, log={trainer.log_batches})")
-        if not args.no_ladder:
+        if not args.no_ladder and not proc:
             # graceful degradation under the burst: zero hard SHEDs,
             # pressure visibly absorbed by the SHALLOW rung
             hard_sheds = [r for r in burst_results if isinstance(r, Shed)]
@@ -200,6 +311,48 @@ def main() -> None:
             out["burst_mix"] = mix
             assert mix["SHALLOW"] > 0, f"expected SHALLOW under burst: {mix}"
             print(f"[smoke] burst mix {mix} (zero hard sheds)")
+        if proc:
+            ps = out["proc"]
+            # >= 3 policy versions applied IN the workers (relayed over
+            # the control pipe, acked back)
+            assert min(ps["replica_policy_versions"]) >= 3, \
+                f"workers behind on policy: {ps['replica_policy_versions']}"
+            # >= 2 index epochs beyond the initial one (two mid-stream
+            # commits), every worker at the head
+            assert ps["head_index_epoch"] >= 3, ps["head_index_epoch"]
+            assert min(ps["replica_index_epochs"]) >= \
+                ps["head_index_epoch"], \
+                f"workers behind on epochs: {ps['replica_index_epochs']}"
+            import os
+            assert len(set(ps["worker_pids"])) == args.replicas and \
+                os.getpid() not in ps["worker_pids"], \
+                f"expected {args.replicas} distinct worker processes"
+            # a crash+respawn mid-run is recovery working, but the gate
+            # demands a clean run — worker deaths here are real bugs
+            assert sum(ps["worker_restarts"]) == 0, \
+                f"workers died during smoke: {ps['worker_restarts']}"
+            # single-mapping proof: every worker mmaps the cell's base
+            # generation, and across the fleet those mappings hold ZERO
+            # private-dirty pages — nobody copied the index, the page
+            # cache holds one physical copy (sum Pss << sum Rss)
+            maps = ps["mappings"]
+            assert all(w["n_mappings"] > 0 and w["rss_kb"] > 0
+                       for w in maps["workers"]), maps
+            assert maps["private_dirty_kb_total"] == 0, \
+                (f"workers hold private copies of the index: "
+                 f"{maps['private_dirty_kb_total']} kB private-dirty")
+            # Pss divides each page by its mapper count, so N workers
+            # over one physical copy show sum(Pss) ~ sum(Rss)/N
+            assert maps["pss_kb_total"] <= 0.75 * maps["rss_kb_total"], \
+                f"index pages not physically shared: {maps}"
+            print(f"[smoke] proc cell OK: versions "
+                  f"{ps['replica_policy_versions']}, epochs "
+                  f"{ps['replica_index_epochs']} (head "
+                  f"{ps['head_index_epoch']}), index mappings "
+                  f"rss={maps['rss_kb_total']}kB "
+                  f"pss={maps['pss_kb_total']}kB private_dirty=0 "
+                  f"across {len(maps['workers'])} workers "
+                  f"({ps['n_cpus']} cpus)")
         print("[smoke] OK: zero dropped non-shed queries, "
               f"{len(trainer.versions_published)} versions trained from "
               f"the served tap, lag <= {args.staleness_bound}")

@@ -74,7 +74,8 @@ class PolicyStore(VersionedStore):
 
     # ------------------------------------------------------------ publish
     def publish(self, policies: Dict[int, Policy],
-                fallbacks: Optional[Dict[int, Policy]] = None) -> int:
+                fallbacks: Optional[Dict[int, Policy]] = None,
+                version: Optional[int] = None) -> int:
         """Install a new snapshot; returns its (strictly increasing)
         version id and notifies subscribers.
 
@@ -83,6 +84,11 @@ class PolicyStore(VersionedStore):
         When omitted, the previous snapshot's fallbacks are carried
         forward — live policies and their fallbacks always travel in
         the same snapshot, so replicas hot-swap them atomically.
+
+        ``version`` pins an explicit version id (must exceed the head):
+        the process-cell relay republishes the producer's snapshots into
+        worker-local stores under the producer's own numbering, so
+        version-lag accounting means the same thing on both sides.
         """
         _validate_policies(policies)
         if fallbacks is not None:
@@ -91,9 +97,9 @@ class PolicyStore(VersionedStore):
         fb_frozen = (MappingProxyType(dict(fallbacks))
                      if fallbacks is not None else None)
 
-        def build(prev: Optional[PolicySnapshot], version: int) -> PolicySnapshot:
+        def build(prev: Optional[PolicySnapshot], ver: int) -> PolicySnapshot:
             fb = fb_frozen if fb_frozen is not None else (
                 prev.fallbacks if prev else _EMPTY)
-            return PolicySnapshot(version, frozen, fb)
+            return PolicySnapshot(ver, frozen, fb)
 
-        return self._publish_snapshot(build)
+        return self._publish_snapshot(build, version=version)

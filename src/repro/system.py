@@ -65,11 +65,18 @@ class RetrievalSystem:
     def index_epoch(self) -> int:
         return 0
 
-    def __init__(self, cfg: SystemConfig):
+    def __init__(self, cfg: SystemConfig,
+                 index: Optional[InvertedIndex] = None):
         self.cfg = cfg
         t0 = time.time()
         self.corpus: Corpus = generate_corpus(cfg.corpus)
-        self.index: InvertedIndex = build_index(self.corpus, block_docs=cfg.block_docs)
+        # ``index`` injects a pre-built index instead of building one —
+        # the process cell hands each worker the parent's saved base
+        # generation (np.memmap'd read-only), so N worker processes map
+        # ONE physical copy of the postings and skip the build entirely.
+        self.index: InvertedIndex = (
+            index if index is not None
+            else build_index(self.corpus, block_docs=cfg.block_docs))
         self.log: QueryLog = generate_querylog(self.corpus, self.index, cfg.querylog)
         self.ruleset: RuleSet = default_rule_library(cfg.rule_du_scale, cfg.rule_dv_scale)
         self.plans: Dict[str, MatchPlan] = production_plans(self.ruleset)
