@@ -45,11 +45,16 @@ proc-smoke:
 	$(PYTHON) -m repro.launch.cluster --smoke --replica-backend process \
 		--out results/proc_smoke.json
 
-# cluster-smoke with the observability plane on: emits a Chrome trace
-# (Perfetto-loadable) + merged fleet metrics snapshot, then validates
-# both — well-formed events, matched B/E pairs, monotone ts, a full
-# admit->queue->batch->execute->respond ticket chain, a trainer publish
-# span, and per-(level,category) latency histograms (docs/observability.md)
+# cluster-smoke with the observability plane on, BOTH backends.
+# Thread: emits a Chrome trace (Perfetto-loadable) + merged fleet
+# metrics snapshot, then validates both — well-formed events, matched
+# B/E pairs, monotone ts, a full admit->queue->batch->execute->respond
+# ticket chain, a trainer publish span, and per-(level,category)
+# latency histograms.  Process: the same run through worker processes,
+# additionally asserting the CROSS-PROCESS chain — at least one ticket
+# whose merged track carries admit->ring->worker->execute->respond
+# with worker spans tagged by pid, across >= 2 distinct worker pids —
+# plus a statusz dump (docs/observability.md).
 trace-smoke:
 	$(PYTHON) -m repro.launch.cluster --smoke \
 		--trace-out results/trace_smoke.json \
@@ -57,6 +62,14 @@ trace-smoke:
 		--out results/cluster_smoke.json
 	$(PYTHON) tools/check_trace.py results/trace_smoke.json \
 		--require-chain --metrics results/metrics_smoke.json
+	$(PYTHON) -m repro.launch.cluster --smoke --replica-backend process \
+		--trace-out results/trace_smoke_proc.json \
+		--metrics-json results/metrics_smoke_proc.json \
+		--statusz-out results/statusz_smoke.json \
+		--out results/proc_trace_smoke.json
+	$(PYTHON) tools/check_trace.py results/trace_smoke_proc.json \
+		--require-proc-chain --metrics results/metrics_smoke_proc.json
+	$(PYTHON) tools/obsctl.py statusz results/statusz_smoke.json
 
 # CI smoke for the tiered live index (docs/index.md): serve a
 # freshness workload through the replica set while documents are

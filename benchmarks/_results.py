@@ -9,6 +9,7 @@ PRs is diffable from a single place::
 from __future__ import annotations
 
 import json
+import os
 import subprocess
 from pathlib import Path
 
@@ -33,8 +34,10 @@ def git_rev() -> str:
 def record(name: str, config: dict, metrics: dict) -> Path:
     """Write one benchmark result in the shared schema; returns the path."""
     RESULTS_DIR.mkdir(parents=True, exist_ok=True)
+    # n_cpus stamps the host's parallelism into every row — QPS and
+    # wall-clock numbers are not comparable across machines without it.
     out = {"name": name, "config": config, "metrics": metrics,
-           "git_rev": git_rev()}
+           "git_rev": git_rev(), "n_cpus": os.cpu_count()}
     path = RESULTS_DIR / f"{name}.json"
     path.write_text(json.dumps(out, indent=1))
     return path

@@ -200,6 +200,59 @@ def obs_overhead(sys_, policies, batches, repeats: int = 3) -> dict:
     }
 
 
+def proc_obs_overhead(sys_, policies, batches, repeats: int = 3,
+                      n_replicas: int = 2) -> dict:
+    """Observability cost across the PROCESS boundary: the same stream
+    through two identical 2-worker process cells, one with tracing off
+    and one shipping full cross-pid span chains (trace context on every
+    ring record, worker-side span recording, delta shipping over the
+    control pipe, parent-side rebasing).  Spawn + compile cost is paid
+    outside the timed region; each mode takes its best-of-N wall time.
+    The gate: the whole cross-process obs plane must cost < 5% QPS."""
+    from repro.cluster import ClusterConfig, ReplicaSet
+    from repro.obs import NULL_TRACER, Tracer
+    from repro.policies import PolicyStore
+    from repro.serving import EngineConfig
+
+    batch = len(batches[0])
+    bucket = 1 << (batch - 1).bit_length()
+    volume = batch * (len(batches) - 1)
+    qps, n_entries = {}, 0
+    for mode in ("tracing_off", "tracing_on"):
+        tracer = Tracer() if mode == "tracing_on" else NULL_TRACER
+        store = PolicyStore()
+        store.publish(policies)
+        cluster = ReplicaSet(sys_, store, ClusterConfig(
+            n_replicas=n_replicas, backend="process"),
+            EngineConfig(min_bucket=bucket, max_bucket=bucket,
+                         cache_capacity=0),
+            tracer=tracer)
+        with cluster:
+            cluster.warmup()
+            for qids in batches[:1]:                # post-compile warm
+                cluster.serve(qids)
+            best = float("inf")
+            for _ in range(repeats):
+                t0 = time.time()
+                for qids in batches[1:]:
+                    cluster.serve(qids)
+                best = min(best, time.time() - t0)
+            if mode == "tracing_on":
+                n_entries = len(cluster.trace_entries())
+        qps[mode] = volume / best
+    penalty = 1.0 - qps["tracing_on"] / qps["tracing_off"]
+    assert penalty < 0.05, \
+        (f"process-cell tracing overhead {penalty:.1%} >= 5% "
+         f"(off={qps['tracing_off']:.1f} qps, "
+         f"on={qps['tracing_on']:.1f} qps)")
+    return {
+        "qps_tracing_off": qps["tracing_off"],
+        "qps_tracing_on": qps["tracing_on"],
+        "qps_penalty_frac": penalty,
+        "trace_entries_merged": n_entries,
+    }
+
+
 def build_system(n_docs: int, n_queries: int, iters: int):
     from repro.data.querylog import CAT1, CAT2, QueryLogConfig
     from repro.index.corpus import CorpusConfig
@@ -303,6 +356,16 @@ def main(fast: bool = False,
     for k, v in obs.items():
         print(f"serve_bench.obs.{k},{v:.4f}" if isinstance(v, float)
               else f"serve_bench.obs.{k},{v}")
+
+    # Same gate across the process boundary: trace context on the ring
+    # records + worker span shipping + parent-side merge must also stay
+    # under 5% of fleet QPS (the cross-pid plane is the expensive half).
+    proc_obs = proc_obs_overhead(sys_, policies,
+                                 batches[: warm + max(2, n_batches // 3)])
+    out["proc_obs"] = proc_obs
+    for k, v in proc_obs.items():
+        print(f"serve_bench.proc_obs.{k},{v:.4f}" if isinstance(v, float)
+              else f"serve_bench.proc_obs.{k},{v}")
 
     from benchmarks._results import record
     record("serve_bench",

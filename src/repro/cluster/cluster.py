@@ -34,7 +34,10 @@ from typing import Deque, List, Optional, Sequence, Union
 
 import numpy as np
 
-from repro.obs import NULL_TRACER, MetricsRegistry, Tracer, merge_snapshots
+from repro.obs import (NULL_TRACER, EventLog, FlightRecorder,
+                       HeartbeatWatchdog, MetricsRegistry, Tracer,
+                       merge_snapshots, write_chrome_entries)
+from repro.obs import health as _health
 from repro.policies import PolicyStore
 from repro.serving import EngineConfig, ServiceLevel
 from repro.serving.cache import canonical_query_key
@@ -102,6 +105,20 @@ class ReplicaSet:
         self._c_submitted = self.registry.counter("cluster.submitted")
         self._c_shed = self.registry.counter("cluster.shed",
                                              where="admission")
+        self._c_shed_replica = self.registry.counter("cluster.shed",
+                                                     where="replica")
+        # Flight recorder: bounded structured event ring (publishes,
+        # epoch swaps, level transitions, sheds, worker restarts) that
+        # ships inside postmortem bundles when a worker dies.
+        self.events = EventLog(registry=self.registry)
+        self.recorder = FlightRecorder(
+            self.events,
+            config={"backend": cfg.backend, "n_replicas": cfg.n_replicas,
+                    "routing": cfg.routing, "ladder": cfg.ladder,
+                    "u_inflight_budget": cfg.u_inflight_budget,
+                    "max_worker_restarts": cfg.max_worker_restarts})
+        self._last_level: Optional[int] = None
+        self._last_generation: Optional[int] = None
         self.router = make_router(cfg.routing, spill_margin=cfg.spill_margin,
                                   owner_spill_depth=cfg.owner_spill_depth,
                                   registry=self.registry)
@@ -175,13 +192,18 @@ class ReplicaSet:
             # workers derive their deterministic query log from it.
             BaseSegment.from_index(self.system.index).save(base_dir)
         self._proc_base_dir = str(base_dir)
+        # Postmortem bundles land next to the cell's segments — one
+        # durable artifact per salvaged worker death (obs.FlightRecorder).
+        self.recorder.bundle_dir = self._proc_root / "postmortem"
         replicas = [
             ProcessReplica(i, self._worker_spec,
                            on_complete=self._on_complete,
                            keep=engine_cfg.keep,
                            ring_slots=self.cfg.proc_ring_slots,
                            max_restarts=self.cfg.max_worker_restarts,
-                           cache_mirror_capacity=engine_cfg.cache_capacity)
+                           cache_mirror_capacity=engine_cfg.cache_capacity,
+                           tracer=self.tracer,
+                           recorder=self.recorder)
             for i in range(self.cfg.n_replicas)
         ]
         return replicas
@@ -233,7 +255,8 @@ class ReplicaSet:
             policy_staleness_bound=self.store.staleness_bound,
             index_staleness_bound=index_sb,
             req_ring=req_info,
-            resp_ring=resp_info)
+            resp_ring=resp_info,
+            trace=self.tracer.enabled)
 
     def _subscribe_relays(self) -> None:
         """Fan every publish out to the worker processes.  Deliveries
@@ -255,12 +278,43 @@ class ReplicaSet:
 
             self._unsubscribes.append(index_store.subscribe(relay_epoch))
 
+    def _subscribe_events(self) -> None:
+        """Record every publish into the flight recorder (both
+        backends): policy publishes, and index epoch swaps split into
+        plain swaps vs merges (a merge publishes a NEW base generation
+        — the generation bump is the tell)."""
+        def on_policy(snap) -> None:
+            self.events.record("policy_publish", version=snap.version,
+                               n_policies=len(snap.policies),
+                               n_fallbacks=len(snap.fallbacks))
+
+        self._unsubscribes.append(self.store.subscribe(on_policy))
+        index_store = getattr(self.system, "index_epoch_store", None)
+        if index_store is not None:
+            with self._lock:
+                if self._last_generation is None:
+                    self._last_generation = index_store.snapshot().generation
+
+            def on_epoch(epoch) -> None:
+                gen = epoch.generation
+                with self._lock:
+                    merged = (self._last_generation is not None
+                              and gen > self._last_generation)
+                    self._last_generation = gen
+                self.events.record(
+                    "index_merge" if merged else "epoch_swap",
+                    version=epoch.version, generation=gen,
+                    n_ops=len(epoch.ops))
+
+            self._unsubscribes.append(index_store.subscribe(on_epoch))
+
     # ------------------------------------------------------------ control
     def start(self) -> "ReplicaSet":
         for r in self.replicas:
             r.start()
         if self.cfg.backend == "process":
             self._subscribe_relays()
+        self._subscribe_events()
         self._started = True
         return self
 
@@ -323,8 +377,25 @@ class ReplicaSet:
         ticket.est_u = adm.est_u
         ticket.reserved_u = adm.reserved_u
         ticket.level = adm.level
+        # Service-level transitions are fleet state changes worth a
+        # flight-recorder entry: record when the admitted level CHANGES
+        # (FULL→SHALLOW means pressure arrived; back again means it
+        # passed), not per ticket — the ring must hold history, not QPS.
+        with self._lock:
+            level_changed = self._last_level != int(adm.level)
+            prev_level = self._last_level
+            self._last_level = int(adm.level)
+        if level_changed:
+            self.events.record(
+                "level_transition",
+                level=ServiceLevel(adm.level).name,
+                prev=(ServiceLevel(prev_level).name
+                      if prev_level is not None else None),
+                qid=qid)
         if adm.level == ServiceLevel.SHED:
             self._c_shed.inc()
+            self.events.record("shed", where="admission",
+                               reason="u_budget_hot", qid=qid)
             with self._lock:
                 self.n_shed += 1
             self.tap.record(qid, cat, ServiceLevel.SHED,
@@ -418,6 +489,10 @@ class ReplicaSet:
                                 index_epoch=result.index_epoch)
         else:  # shed inside the replica (queue full / shutdown / error)
             self.admission.release(ticket.reserved_u)
+            self._c_shed_replica.inc()
+            self.events.record("shed", where="replica",
+                               reason=getattr(result, "reason", None),
+                               qid=ticket.qid, replica=ticket.replica)
             with self._lock:
                 self.n_shed += 1
             self.tap.record(ticket.qid, ticket.category, ServiceLevel.SHED,
@@ -439,11 +514,35 @@ class ReplicaSet:
         """The fleet metrics view: every replica registry (request/
         latency/u/queue-wait instruments, cache counters) folded into
         one snapshot with the cluster-plane instruments — counters and
-        histograms add, gauges take the max.  JSON-serializable; this
+        histograms add, gauges take their declared aggregation (max by
+        default, sum for depth-style gauges).  JSON-serializable; this
         is what ``--metrics-json`` writes."""
         return merge_snapshots(
             [r.metrics_snapshot() for r in self.replicas]
             + [self.registry.snapshot()])
+
+    def statusz(self, watchdog: Optional[HeartbeatWatchdog] = None) -> dict:
+        """One-page cell introspection JSON (repro.obs.health)."""
+        return _health.statusz(self, watchdog)
+
+    def trace_entries(self) -> list:
+        """The fleet's merged span entries: the parent tracer's log
+        (admit/route/ring spans, thread-replica engine spans) plus every
+        process replica's rebased worker tail — one coherent timeline on
+        the parent clock."""
+        entries: list = []
+        if self.tracer.enabled:
+            entries.extend(self.tracer.log.snapshot())
+        for r in self.replicas:
+            entries.extend(r.trace_entries())
+        return entries
+
+    def write_trace(self, path, process_name: str = "repro-cluster") -> int:
+        """Export the merged fleet timeline as one Chrome/Perfetto
+        trace; returns the number of span entries written."""
+        entries = self.trace_entries()
+        write_chrome_entries(path, entries, process_name=process_name)
+        return len(entries)
 
     def version_lag(self) -> dict:
         """Current per-replica lag vs the store head, plus the response

@@ -25,8 +25,11 @@ from repro.serving.engine import ServeResponse
 __all__ = ["REQUEST_BYTES", "decode_request", "decode_response",
            "encode_request", "encode_response", "response_bytes"]
 
-# ticket u64 | qid i64 | level i32 | category i32
-_REQ = struct.Struct("<Qqii")
+# ticket u64 | qid i64 | level i32 | category i32 | trace_root u64
+# trace_root is the ticket's root span id (0 = tracing off): the trace
+# context that rides the data plane so worker-side spans can join the
+# parent's per-ticket Perfetto track (docs/observability.md).
+_REQ = struct.Struct("<QqiiQ")
 REQUEST_BYTES = _REQ.size
 
 # ticket u64 | qid i64 | category i32 | level i32 | status u8 | cached u8
@@ -48,13 +51,13 @@ def response_bytes(keep: int) -> int:
 
 # ------------------------------------------------------------- requests
 def encode_request(ticket_id: int, qid: int, level: ServiceLevel,
-                   category: int) -> bytes:
-    return _REQ.pack(ticket_id, qid, int(level), category)
+                   category: int, trace_root: int = 0) -> bytes:
+    return _REQ.pack(ticket_id, qid, int(level), category, trace_root)
 
 
-def decode_request(payload: bytes) -> Tuple[int, int, ServiceLevel, int]:
-    ticket_id, qid, level, category = _REQ.unpack(payload)
-    return ticket_id, qid, ServiceLevel(level), category
+def decode_request(payload: bytes) -> Tuple[int, int, ServiceLevel, int, int]:
+    ticket_id, qid, level, category, trace_root = _REQ.unpack(payload)
+    return ticket_id, qid, ServiceLevel(level), category, trace_root
 
 
 # ------------------------------------------------------------ responses

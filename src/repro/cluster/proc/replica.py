@@ -29,11 +29,12 @@ from __future__ import annotations
 import multiprocessing as mp
 import threading
 import time
-from collections import OrderedDict
+from collections import OrderedDict, deque
 from typing import Callable, Dict, Optional, Tuple
 
 from repro.cluster.admission import Shed
 from repro.cluster.replica import ClusterTicket, Result
+from repro.obs import NULL_TRACER, Tracer, adjust_remote_entries
 
 from .messages import (REQUEST_BYTES, decode_response, encode_request,
                        response_bytes)
@@ -44,6 +45,8 @@ __all__ = ["ProcessReplica"]
 _READY_TIMEOUT_S = 600.0      # child imports jax + rebuilds the system
 _REPLY_TIMEOUT_S = 600.0      # warmup compiles on the worker
 _DEAD_DEPTH = 1 << 30         # router poison for an exhausted replica
+_N_PINGS = 4                  # clock-handshake samples per (re)spawn
+_TRACE_TAIL = 8192            # merged worker trace entries kept parent-side
 
 
 class ProcessReplica:
@@ -52,7 +55,9 @@ class ProcessReplica:
                  *, keep: int, ring_slots: int = 64,
                  max_restarts: int = 2,
                  cache_mirror_capacity: int = 4096,
-                 drain_timeout_s: float = 120.0):
+                 drain_timeout_s: float = 120.0,
+                 tracer: Tracer = NULL_TRACER,
+                 recorder=None):
         self.idx = idx
         self.spec_factory = spec_factory
         self.on_complete = on_complete
@@ -60,6 +65,10 @@ class ProcessReplica:
         self.ring_slots = ring_slots
         self.max_restarts = max_restarts
         self.drain_timeout_s = drain_timeout_s
+        self.tracer = tracer
+        #: obs.FlightRecorder (optional): state-transition events plus
+        #: the postmortem bundle written when a dead worker is salvaged.
+        self.recorder = recorder
 
         self._mp = mp.get_context("spawn")        # fork is unsafe with JAX
         self._proc: Optional[mp.process.BaseProcess] = None
@@ -87,6 +96,14 @@ class ProcessReplica:
         self._last_death: Optional[str] = None    # worker's last traceback
         self._collector: Optional[threading.Thread] = None
         self._collector_exit = threading.Event()
+        # Cross-process trace collection: worker entry deltas arrive on
+        # the control pipe and are rebased here — onto the parent clock
+        # via the ping-handshake offset (min-RTT sample wins) and into
+        # a per-worker id range so span ids never collide.
+        self._clock_offset = 0.0
+        self._offset_rtt = float("inf")
+        self._trace_tail: deque = deque(maxlen=_TRACE_TAIL)
+        self.last_bundle_path = None
         self.n_enqueued = 0
         self.n_completed = 0
         self.n_restarts = 0
@@ -131,6 +148,14 @@ class ProcessReplica:
                         self._policy_version = pv
                         self._index_epoch = epoch
                         self._worker_stopped = False
+                        # Fresh worker, fresh handshake: forget the old
+                        # offset sample so a respawn re-estimates.
+                        self._offset_rtt = float("inf")
+                    if self.tracer.enabled:
+                        # Clock handshake (async — pongs land in the
+                        # collector): several samples, min RTT wins.
+                        for _ in range(_N_PINGS):
+                            self._send(("ping", time.perf_counter()))
                     if getattr(self, "_pending_warmup", False):
                         self._pending_warmup = False
                         self._send(("warmup",))   # fire-and-forget pre-start
@@ -211,8 +236,18 @@ class ProcessReplica:
             # span covers route → ring push instead.
             ticket.inbox_span.end()
             ticket.inbox_span = None
+        trace_root = 0
+        if ticket.span:
+            # Trace context rides the data plane: the worker opens its
+            # span on track ``ticket #<trace_root>``, so its engine
+            # children join this ticket's Perfetto row.  The parent-side
+            # ring span (push → response pop) encloses everything the
+            # worker records, which keeps the merged stack nested even
+            # before clock-offset correction.
+            trace_root = ticket.span.span_id
+            ticket.ring_span = ticket.span.child("ring", replica=self.idx)
         payload = encode_request(tid, ticket.qid, ticket.level,
-                                 ticket.category)
+                                 ticket.category, trace_root)
         try:
             self._req.push(payload, alive=self._alive)
         except (RingClosed, ValueError, TypeError):
@@ -223,6 +258,11 @@ class ProcessReplica:
             pass
 
     def _finish(self, ticket: ClusterTicket, result: Result) -> None:
+        if ticket.ring_span:
+            # Ends at response pop (or shed): the parent-side cover for
+            # everything the worker recorded about this ticket.
+            ticket.ring_span.end()
+            ticket.ring_span = None
         if not ticket.complete(result):
             return                    # a requeue's duplicate answer
         with self._mu:
@@ -392,11 +432,24 @@ class ProcessReplica:
                     else:
                         self._index_epoch = max(self._index_epoch, version)
             elif kind == "stats":
-                _, summary, snap = msg
+                _, summary, snap, trace_entries = msg
                 with self._mu:
                     self._last_summary = summary
                     self._last_metrics = snap
+                if trace_entries:
+                    self._ingest_trace(trace_entries)
                 self._stats_evt.set()
+            elif kind == "pong":
+                # One clock-handshake sample: offset = midpoint of the
+                # round trip minus the worker's stamp; the minimum-RTT
+                # sample bounds the error by rtt/2 (NTP's estimator).
+                _, t0, t_worker = msg
+                t1 = time.perf_counter()
+                rtt = t1 - t0
+                with self._mu:
+                    if rtt < self._offset_rtt:
+                        self._offset_rtt = rtt
+                        self._clock_offset = (t0 + t1) / 2.0 - t_worker
             elif kind == "warmed":
                 self._warm_result = msg[1]
                 self._warm_evt.set()
@@ -414,10 +467,21 @@ class ProcessReplica:
         the rest — or, past ``max_restarts``, shed them explicitly."""
         self._drain_responses()
         self._drain_conn()
+        # Postmortem bundle FIRST, while the salvaged state (last stats
+        # + trace tail + event ring + traceback) is still coherent.
+        if self.recorder is not None:
+            self.recorder.record(
+                "worker_dead", replica=self.idx, worker_pid=self.worker_pid,
+                n_restarts=self.n_restarts,
+                n_outstanding=len(self._outstanding))
+            self._dump_postmortem("worker_dead")
         with self._mu:
             if self.n_restarts >= self.max_restarts:
                 self._dead = True
         if self._dead:
+            if self.recorder is not None:
+                self.recorder.record("replica_dead", replica=self.idx,
+                                     n_restarts=self.n_restarts)
             self._shed_outstanding("replica_dead")
             return
         with self._mu:
@@ -436,6 +500,10 @@ class ProcessReplica:
                 self._dead = True
             self._shed_outstanding("replica_dead")
             return
+        if self.recorder is not None:
+            self.recorder.record("worker_restart", replica=self.idx,
+                                 worker_pid=self.worker_pid,
+                                 n_restarts=self.n_restarts)
         # Requeue in ticket order; duplicate answers (the original
         # response raced the death detection) are absorbed by the
         # first-completion-wins ticket contract.
@@ -443,8 +511,9 @@ class ProcessReplica:
             pending = sorted(self._outstanding.items())
         for tid, ticket in pending:
             try:
+                root = ticket.span.span_id if ticket.span else 0
                 self._req.push(encode_request(tid, ticket.qid, ticket.level,
-                                              ticket.category),
+                                              ticket.category, root),
                                alive=self._alive)
             except RingClosed:
                 return                # died again; next pass handles it
@@ -456,3 +525,86 @@ class ProcessReplica:
         for _tid, ticket in pending:
             self._finish(ticket, Shed(ticket.qid, ticket.category,
                                       ticket.est_u, reason))
+
+    # ---------------------------------------------------- observability
+    def _ingest_trace(self, entries) -> None:
+        """Rebase one worker trace delta into the parent's frame:
+        shift onto the parent clock, move span ids into a per-worker
+        range, and tag ticket-track entries with the worker pid (they
+        must keep the parent's track name to share its Perfetto row)."""
+        pid = self.worker_pid or 0
+        with self._mu:
+            dt = self._clock_offset
+        adjusted = adjust_remote_entries(
+            entries, dt=dt, id_offset=(pid & 0xFFFFFFFF) << 32,
+            pid=pid, ticket_args={"wpid": pid})
+        with self._mu:
+            self._trace_tail.extend(adjusted)
+
+    def trace_entries(self) -> list:
+        """Rebased worker span entries (bounded tail, oldest first)."""
+        with self._mu:
+            return list(self._trace_tail)
+
+    def clock_offset(self) -> Tuple[float, float]:
+        """(offset_s, rtt_s) of the best handshake sample so far."""
+        with self._mu:
+            return self._clock_offset, self._offset_rtt
+
+    def _dump_postmortem(self, reason: str):
+        rec = self.recorder
+        if rec is None:
+            return None
+        with self._mu:
+            payload = {
+                "reason": reason,
+                "replica": self.idx,
+                "backend": "process",
+                "worker_pid": self.worker_pid,
+                "n_restarts": self.n_restarts,
+                "n_outstanding": len(self._outstanding),
+                "death_traceback": self._last_death,
+                "summary": dict(self._last_summary),
+                "metrics": dict(self._last_metrics),
+                "trace_tail": list(self._trace_tail),
+            }
+        path = rec.dump(f"postmortem-r{self.idx}", payload)
+        if path is not None:
+            self.last_bundle_path = path
+        return path
+
+    def health(self) -> dict:
+        """Liveness + load signals for the statusz plane.  Heartbeat
+        age comes from the ring header the worker stamps every loop
+        (``time.monotonic`` — a system-wide clock, so parent-readable);
+        ``pending`` folds ring occupancy with the worker's published
+        engine depth so the watchdog can tell a parked idle consumer
+        (stale heartbeat, nothing to do) from a wedged one."""
+        with self._mu:
+            dead = self._dead
+            n_restarts = self.n_restarts
+            pid = self.worker_pid
+        alive = self._alive() and not dead
+        h = {
+            "backend": "process", "replica": self.idx, "alive": alive,
+            "worker_pid": pid, "n_restarts": n_restarts,
+            "heartbeat_age_s": None, "pending": 0,
+        }
+        req, resp = self._req, self._resp
+        if req is not None and alive:
+            try:
+                hb = req.heartbeat()
+                if hb > 0:
+                    h["heartbeat_age_s"] = max(0.0, time.monotonic() - hb)
+                occ = req.occupancy()
+                hint = req.depth_hint()
+                h["pending"] = occ + hint
+                h["ring"] = {
+                    "req_occupancy": occ, "depth_hint": hint,
+                    "req": req.park_stats(),
+                    "resp_occupancy": resp.occupancy(),
+                    "resp": resp.park_stats(),
+                }
+            except (RingClosed, ValueError, TypeError):
+                pass                  # ring mid-swap during a respawn
+        return h

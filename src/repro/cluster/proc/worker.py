@@ -19,6 +19,16 @@ flush when the ring runs dry (latency path) or step full buckets
 otherwise, then push fixed-layout response records back.  The worker
 also stamps a heartbeat and publishes its engine queue depth into the
 ring header, which is the parent-side router's load signal.
+
+Observability across the boundary: when the spec enables tracing, the
+worker opens a ``worker`` span on the ticket's track (the trace-root
+id rides the request record) and passes it to ``engine.submit`` so the
+engine's queue/batch/execute/respond children land on the SAME
+Perfetto row the parent's admit/ring spans live on.  Finished entries
+ship as deltas piggybacked on stats replies (and a periodic
+unsolicited stats message, which doubles as the freshness feed for
+postmortem bundles); the parent rebases them with the clock offset it
+measured from the ``ping``→``pong`` handshake at startup.
 """
 from __future__ import annotations
 
@@ -40,6 +50,10 @@ __all__ = ["WorkerSpec", "worker_main"]
 #: must keep flowing under a request flood.
 _DRAIN_LIMIT = 256
 _IDLE_WAIT_S = 0.002
+#: Unsolicited stats/trace cadence: keeps the parent's last-known
+#: metrics + trace tail fresh enough that a SIGKILL's postmortem
+#: bundle holds recent state, not just whatever stats() last pulled.
+_STATS_INTERVAL_S = 1.0
 
 
 @dataclasses.dataclass
@@ -60,6 +74,8 @@ class WorkerSpec:
     index_staleness_bound: int
     req_ring: Tuple[str, int, int]    # (shm name, n_slots, slot_bytes)
     resp_ring: Tuple[str, int, int]
+    trace: bool = False               # record worker-side spans
+    trace_capacity: int = 16384       # worker TraceLog ring size
 
 
 def worker_main(spec: WorkerSpec, conn) -> None:
@@ -107,6 +123,7 @@ def _build_system(spec: WorkerSpec):
 
 
 def _serve(spec: WorkerSpec, conn) -> None:
+    from repro.obs import NULL_TRACER, TraceLog, Tracer
     from repro.policies import PolicyStore
     from repro.serving import AdmissionError, CacheOnlyMiss, ServeEngine
     from repro.core.versioned import StaleVersionError
@@ -118,54 +135,80 @@ def _serve(spec: WorkerSpec, conn) -> None:
     store = PolicyStore(staleness_bound=spec.policy_staleness_bound)
     version, policies, fallbacks = spec.init_policy
     store.publish(policies, fallbacks=fallbacks, version=version)
-    engine = ServeEngine(system, store, spec.engine_cfg)
+    tracer = (Tracer(log=TraceLog(capacity=spec.trace_capacity))
+              if spec.trace else NULL_TRACER)
+    engine = ServeEngine(system, store, spec.engine_cfg, tracer=tracer)
     keep = spec.engine_cfg.keep
 
-    # engine rid -> (ticket id, qid, category): enough to shed
-    # outstanding work explicitly when a batch poisons the engine.
-    rid2ticket: Dict[int, Tuple[int, int, int]] = {}
+    # engine rid -> (ticket id, qid, category, worker span): enough to
+    # shed outstanding work explicitly when a batch poisons the engine.
+    rid2ticket: Dict[int, Tuple[int, int, int, Any]] = {}
     retry: deque = deque()                        # stale-raced submissions
     stopping = False
     drain = True
     failures = 0
     max_failures = 3
+    trace_cursor = 0
 
-    def shed(ticket_id: int, qid: int, category: int, reason: str) -> None:
+    def trace_delta() -> list:
+        nonlocal trace_cursor
+        if not tracer.enabled:
+            return []
+        entries, trace_cursor = tracer.log.drain_since(trace_cursor)
+        return entries
+
+    def stats_msg() -> tuple:
+        return ("stats", engine.summary(),
+                _metrics_with_rings(engine, req, resp), trace_delta())
+
+    def shed(ticket_id: int, qid: int, category: int, reason: str,
+             span=None) -> None:
+        if span:
+            span.end(error=reason)
         resp.push(encode_response(
             ticket_id, _mk_shed(qid, category, reason), keep))
 
     def shed_outstanding(reason: str) -> None:
         engine.cancel([rid for rid in rid2ticket])
-        for rid, (tid, qid, category) in list(rid2ticket.items()):
-            shed(tid, qid, category, reason)
+        for rid, (tid, qid, category, span) in list(rid2ticket.items()):
+            shed(tid, qid, category, reason, span)
         rid2ticket.clear()
         while retry:
-            tid, qid, _level, category = retry.popleft()
-            shed(tid, qid, category, reason)
+            tid, qid, _level, category, span = retry.popleft()
+            shed(tid, qid, category, reason, span)
 
     def submit_one(ticket_id: int, qid: int, level: ServiceLevel,
-                   category: int) -> None:
+                   category: int, span=None) -> None:
         try:
-            rid = engine.submit(qid, level)
+            rid = engine.submit(qid, level, span=span)
         except AdmissionError:
-            shed(ticket_id, qid, category, "replica_queue_full")
+            shed(ticket_id, qid, category, "replica_queue_full", span)
             return
         except CacheOnlyMiss:
-            shed(ticket_id, qid, category, "cached_only_miss")
+            shed(ticket_id, qid, category, "cached_only_miss", span)
             return
         except StaleVersionError:
             # A relay raced between refresh and the staleness check —
             # retry after the next control drain applies the publish.
-            retry.append((ticket_id, qid, level, category))
+            retry.append((ticket_id, qid, level, category, span))
             return
         except Exception as e:                    # noqa: BLE001
             shed(ticket_id, qid, category,
-                 f"replica_error:{type(e).__name__}")
+                 f"replica_error:{type(e).__name__}", span)
             return
-        rid2ticket[rid] = (ticket_id, qid, category)
+        rid2ticket[rid] = (ticket_id, qid, category, span)
         r = engine.take_response(rid)             # cache hits are inline
         if r is not None:
-            resp.push(encode_response(rid2ticket.pop(rid)[0], r, keep))
+            push_response(rid, r)
+
+    def push_response(rid: int, r) -> None:
+        tid, _qid, _cat, span = rid2ticket.pop(rid)
+        resp.push(encode_response(tid, r, keep))
+        if span:
+            # The worker span covers decode → response-on-ring; its
+            # engine children (queue/batch/execute/respond) are already
+            # in the log on the same ticket track.
+            span.end(cached=r.cached, u=r.u)
 
     def handle_control(msg) -> None:
         nonlocal stopping, drain
@@ -182,12 +225,18 @@ def _serve(spec: WorkerSpec, conn) -> None:
         elif kind == "warmup":
             conn.send(("warmed", engine.warmup()))
         elif kind == "stats":
-            conn.send(_stats_msg(engine, req, resp))
+            conn.send(stats_msg())
+        elif kind == "ping":
+            # Clock handshake: echo the parent's stamp alongside our
+            # own clock reading; the parent halves the round trip and
+            # keeps the minimum-RTT offset sample (NTP's trick).
+            conn.send(("pong", msg[1], time.perf_counter()))
         elif kind == "stop":
             stopping, drain = True, bool(msg[1])
 
     conn.send(("ready", os.getpid(), engine.policy_version,
                engine.index_epoch))
+    last_stats = time.monotonic()
 
     while True:
         progressed = False
@@ -200,7 +249,11 @@ def _serve(spec: WorkerSpec, conn) -> None:
             break
         n_polled = 0
         for payload in req.pop_many(limit=_DRAIN_LIMIT):
-            submit_one(*decode_request(payload))
+            tid, qid, level, category, trace_root = decode_request(payload)
+            span = (tracer.span("worker", track=f"ticket #{trace_root}",
+                                qid=qid)
+                    if trace_root and tracer.enabled else None)
+            submit_one(tid, qid, level, category, span)
             n_polled += 1
         if n_polled:
             progressed = True
@@ -225,11 +278,15 @@ def _serve(spec: WorkerSpec, conn) -> None:
         for rid in list(rid2ticket):
             r = engine.take_response(rid)
             if r is not None:
-                resp.push(encode_response(rid2ticket.pop(rid)[0], r, keep))
+                push_response(rid, r)
                 progressed = True
         req.set_depth_hint(engine.queue_depth + engine.inflight
                            + len(retry))
         req.stamp_heartbeat()
+        if time.monotonic() - last_stats >= _STATS_INTERVAL_S:
+            # Unsolicited: keeps the parent's postmortem view fresh.
+            conn.send(stats_msg())
+            last_stats = time.monotonic()
         if (stopping and not rid2ticket and not retry
                 and req.occupancy() == 0):
             break
@@ -238,10 +295,10 @@ def _serve(spec: WorkerSpec, conn) -> None:
             # times out quickly enough to poll the request ring.
             conn.poll(_IDLE_WAIT_S)
 
-    # Final state for the parent: the post-mortem stats/metrics the
-    # obs plane folds after the worker is gone.
+    # Final state for the parent: the post-mortem stats/metrics (and
+    # the trace tail) the obs plane folds after the worker is gone.
     try:
-        conn.send(_stats_msg(engine, req, resp))
+        conn.send(stats_msg())
         conn.send(("stopped",))
     except Exception:                             # noqa: BLE001
         pass
@@ -254,7 +311,7 @@ def _mk_shed(qid: int, category: int, reason: str):
     return Shed(qid, category, 0.0, reason)
 
 
-def _stats_msg(engine, req: ShmRing, resp: ShmRing) -> tuple:
+def _metrics_with_rings(engine, req: ShmRing, resp: ShmRing) -> dict:
     snap = engine.telemetry.registry.snapshot()
     # Ring contention counters ride the same mergeable snapshot: the
     # request ring's consumer side and the response ring's producer
@@ -263,7 +320,8 @@ def _stats_msg(engine, req: ShmRing, resp: ShmRing) -> tuple:
         for stat, v in ring.park_stats().items():
             snap[f"ring.{stat}{{ring={ring_label}}}"] = {
                 "type": "counter", "value": int(v)}
+        # Depth-style gauge: fleet ring occupancy sums across workers.
         snap[f"ring.occupancy{{ring={ring_label}}}"] = {
             "type": "gauge", "value": float(ring.occupancy()),
-            "max": float(ring.occupancy())}
-    return ("stats", engine.summary(), snap)
+            "max": float(ring.occupancy()), "agg": "sum"}
+    return snap

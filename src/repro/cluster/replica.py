@@ -51,9 +51,14 @@ class ClusterTicket:
         self.replica: Optional[int] = None
         # Trace context (repro.obs): the cluster opens ``span`` (the
         # ticket's root) at admission and ends it at completion;
-        # ``inbox_span`` covers route → replica-thread pickup.
+        # ``inbox_span`` covers route → replica-thread pickup (or, on
+        # the process backend, route → ring push); ``ring_span`` is the
+        # process backend's parent-side cover of the worker round trip
+        # (ring push → response pop), which encloses every span the
+        # worker records for this ticket.
         self.span = None
         self.inbox_span = None
+        self.ring_span = None
         self.t_submit = Telemetry.now()
         self.t_done: Optional[float] = None
         self._event = threading.Event()
@@ -206,6 +211,25 @@ class Replica:
         out.update(replica=self.idx, n_enqueued=self.n_enqueued,
                    n_completed=self.n_completed, depth=self.depth())
         return out
+
+    def health(self) -> dict:
+        """Statusz liveness signals, shape-compatible with
+        `ProcessReplica.health`.  A thread replica shares the parent's
+        fault domain, so liveness is just the worker thread's and the
+        heartbeat age is definitionally zero while it runs."""
+        alive = self._thread is not None and self._thread.is_alive()
+        return {
+            "backend": "thread", "replica": self.idx, "alive": alive,
+            "worker_pid": None, "n_restarts": 0,
+            "heartbeat_age_s": 0.0 if alive else None,
+            "pending": self.depth(),
+        }
+
+    def trace_entries(self) -> list:
+        """Protocol parity with `ProcessReplica`: a thread replica's
+        spans land directly in the shared tracer's log — nothing to
+        merge."""
+        return []
 
     # -------------------------------------------------------------- worker
     def _take_inbox(self):

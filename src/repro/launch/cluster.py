@@ -117,6 +117,17 @@ def main() -> None:
                     help="write the merged fleet metrics snapshot "
                          "(counters/gauges/per-(level,category) "
                          "histograms) to this path")
+    ap.add_argument("--statusz-out", default=None,
+                    help="write the cell's statusz introspection JSON "
+                         "(head versions, per-worker health/watchdog "
+                         "verdicts, ring stats) to this path")
+    ap.add_argument("--slo-target", type=float, default=None,
+                    help="enable the read-only SLO burn-rate monitor at "
+                         "this availability target (e.g. 0.999); the "
+                         "verdict lands in the output JSON under 'slo'")
+    ap.add_argument("--slo-latency-ms", type=float, default=50.0,
+                    help="latency threshold for the SLO's goodness "
+                         "criterion (snapped up to a histogram edge)")
     ap.add_argument("--smoke", action="store_true",
                     help="CI gate: tiny sizes + zero-dropped assertion")
     args = ap.parse_args()
@@ -136,7 +147,7 @@ def main() -> None:
                                TrainerConfig, TrainerLoop)
     from repro.data.querylog import CAT1, CAT2, QueryLogConfig
     from repro.index.corpus import CorpusConfig
-    from repro.obs import NULL_TRACER, Tracer
+    from repro.obs import NULL_TRACER, SLOConfig, SLOMonitor, Tracer
     from repro.policies import PolicyStore
     from repro.serving import EngineConfig
     from repro.system import RetrievalSystem, SystemConfig
@@ -187,6 +198,15 @@ def main() -> None:
     trainer.source = cluster.tap          # train on served traffic only
     cluster.warmup()
 
+    slo_mon = None
+    if args.slo_target is not None:
+        # Read-only: observes fleet snapshots between waves, publishes
+        # slo.* gauges into the cluster registry, never touches admission.
+        slo_mon = SLOMonitor(
+            SLOConfig(target=args.slo_target,
+                      latency_slo_ms=args.slo_latency_ms),
+            registry=cluster.registry)
+
     rng = np.random.default_rng(0)
     results, t0 = [], time.time()
     burst_results, burst_tickets = [], []
@@ -197,6 +217,8 @@ def main() -> None:
             qids = rng.integers(0, sys_.log.n_queries, size=args.batch)
             results.extend(cluster.serve(qids))
             waves += 1
+            if slo_mon is not None:
+                slo_mon.observe(cluster.metrics_snapshot())
             if proc and waves in (1, 2):
                 # two commits mid-stream -> two index epochs the cell
                 # must relay into every worker over its control pipe
@@ -208,6 +230,17 @@ def main() -> None:
         results.extend(cluster.serve(
             rng.integers(0, sys_.log.n_queries, size=args.batch)))
         waves += 1
+        if slo_mon is not None:
+            slo_mon.observe(cluster.metrics_snapshot())
+
+        if args.statusz_out:
+            # Must be written while workers are alive — statusz reads
+            # ring-header heartbeats and process liveness.
+            p = Path(args.statusz_out)
+            p.parent.mkdir(parents=True, exist_ok=True)
+            p.write_text(json.dumps(cluster.statusz(), indent=1,
+                                    default=str))
+            print(f"[statusz] cell status -> {args.statusz_out}")
 
         proc_stats = None
         if proc:
@@ -281,6 +314,13 @@ def main() -> None:
     }
     if proc_stats is not None:
         out["proc"] = proc_stats
+    if slo_mon is not None:
+        out["slo"] = slo_mon.check()
+        print(f"[slo] verdict={out['slo']['verdict']} "
+              f"burn_fast={out['slo']['burn_fast']:.2f} "
+              f"burn_slow={out['slo']['burn_slow']:.2f} "
+              f"(target {args.slo_target}, latency <= "
+              f"{out['slo']['effective_latency_slo_ms']:g} ms)")
     print(f"[serve] {len(results)} results over {waves} waves "
           f"({out['qps']:.1f} qps), {n_shed} shed, "
           f"versions {trainer.versions_published}, "
@@ -361,8 +401,11 @@ def main() -> None:
     Path(args.out).write_text(json.dumps(out, indent=1, default=str))
 
     if args.trace_out:
-        tracer.log.write_chrome(args.trace_out, process_name="repro-cluster")
-        print(f"[trace] {len(tracer.log)} events -> {args.trace_out} "
+        # Merged fleet timeline: parent spans + every worker's rebased
+        # tail (process backend) in one Perfetto-loadable file.
+        n_entries = cluster.write_trace(args.trace_out,
+                                        process_name="repro-cluster")
+        print(f"[trace] {n_entries} entries -> {args.trace_out} "
               f"(open at ui.perfetto.dev)")
     if args.metrics_json:
         p = Path(args.metrics_json)

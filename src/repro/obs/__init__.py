@@ -1,10 +1,16 @@
-"""Observability plane: unified metrics registry + ticket-scoped tracing.
+"""Observability plane: metrics, tracing, health, SLO, flight recorder.
 
 `metrics` holds the mergeable counters/gauges/histograms every serving
 layer records into; `trace` holds the Span/Tracer/TraceLog machinery
-that follows a ticket from admission to kernel and exports a
-Perfetto-loadable Chrome trace.  See docs/observability.md.
+that follows a ticket from admission to kernel — across the process
+boundary — and exports a Perfetto-loadable Chrome trace; `health` is
+the statusz/watchdog introspection plane; `slo` computes multi-window
+error-budget burn over merged snapshots; `events` is the bounded
+flight-recorder ring behind postmortem bundles.  See
+docs/observability.md.
 """
+from .events import EventLog, FlightRecorder
+from .health import HeartbeatWatchdog, statusz
 from .metrics import (
     Counter,
     Gauge,
@@ -13,15 +19,35 @@ from .metrics import (
     merge_snapshots,
     metric_key,
 )
-from .trace import NULL_SPAN, NULL_TRACER, Span, TraceLog, Tracer
+from .slo import SLOConfig, SLOMonitor, fold_snapshot
+from .trace import (
+    NULL_SPAN,
+    NULL_TRACER,
+    Span,
+    TraceLog,
+    Tracer,
+    adjust_remote_entries,
+    export_chrome_entries,
+    write_chrome_entries,
+)
 
 __all__ = [
     "Counter",
+    "EventLog",
+    "FlightRecorder",
     "Gauge",
+    "HeartbeatWatchdog",
     "Histogram",
     "MetricsRegistry",
+    "SLOConfig",
+    "SLOMonitor",
+    "adjust_remote_entries",
+    "export_chrome_entries",
+    "fold_snapshot",
     "merge_snapshots",
     "metric_key",
+    "statusz",
+    "write_chrome_entries",
     "NULL_SPAN",
     "NULL_TRACER",
     "Span",

@@ -61,14 +61,26 @@ class Counter:
 
 
 class Gauge:
-    """A level that moves both ways; remembers its peak."""
+    """A level that moves both ways; remembers its peak.
 
-    __slots__ = ("_lock", "value", "max")
+    ``agg`` declares how replicas' snapshots of this gauge fold in
+    ``merge_snapshots``: ``"max"`` (default) answers "how hot is the
+    hottest replica" — right for saturation gauges like reserved u —
+    while ``"sum"`` answers "how much is pending fleet-wide" — right
+    for depth gauges, where max-of-replicas undercounts capacity math
+    by a factor of N.  The tag rides the snapshot so merging stays a
+    pure fold over JSON.
+    """
 
-    def __init__(self):
+    __slots__ = ("_lock", "value", "max", "agg")
+
+    def __init__(self, agg: str = "max"):
+        if agg not in ("max", "sum"):
+            raise ValueError(f"gauge agg must be 'max' or 'sum', got {agg!r}")
         self._lock = threading.Lock()
         self.value = 0.0
         self.max = 0.0
+        self.agg = agg
 
     def set(self, v: float) -> None:
         with self._lock:
@@ -77,7 +89,8 @@ class Gauge:
                 self.max = v
 
     def snapshot(self) -> dict:
-        return {"type": "gauge", "value": self.value, "max": self.max}
+        return {"type": "gauge", "value": self.value, "max": self.max,
+                "agg": self.agg}
 
 
 class Histogram:
@@ -164,8 +177,12 @@ class MetricsRegistry:
     def counter(self, name: str, **labels) -> Counter:
         return self._get(Counter, name, labels)
 
-    def gauge(self, name: str, **labels) -> Gauge:
-        return self._get(Gauge, name, labels)
+    def gauge(self, name: str, agg: str = "max", **labels) -> Gauge:
+        g = self._get(Gauge, name, labels, agg)
+        if g.agg != agg:
+            raise ValueError(f"gauge {metric_key(name, labels)!r} already "
+                             f"registered with agg={g.agg!r}, not {agg!r}")
+        return g
 
     def histogram(self, name: str, edges: Sequence[float],
                   **labels) -> Histogram:
@@ -195,10 +212,20 @@ def _merge_two(a: dict, b: dict) -> dict:
     if a["type"] == "counter":
         return {"type": "counter", "value": a["value"] + b["value"]}
     if a["type"] == "gauge":
-        # max, not sum: a merged gauge answers "how hot is the hottest
-        # replica", which is the admission/routing question
+        agg = a.get("agg", "max")
+        if agg != b.get("agg", "max"):
+            raise ValueError(f"cannot merge gauge agg={agg!r} with "
+                             f"agg={b.get('agg', 'max')!r}")
+        if agg == "sum":
+            # Fleet-wide level: depth gauges add across replicas (the
+            # per-replica peaks add too — an upper bound on the worst
+            # co-occurring fleet level, not an observed instant).
+            return {"type": "gauge", "value": a["value"] + b["value"],
+                    "max": a["max"] + b["max"], "agg": "sum"}
+        # max: a merged gauge answers "how hot is the hottest replica",
+        # which is the admission/routing question
         return {"type": "gauge", "value": max(a["value"], b["value"]),
-                "max": max(a["max"], b["max"])}
+                "max": max(a["max"], b["max"]), "agg": "max"}
     if a["edges"] != b["edges"]:
         raise ValueError("cannot merge histograms with different edges")
     mins = [m for m in (a["min"], b["min"]) if m is not None]
@@ -212,9 +239,10 @@ def _merge_two(a: dict, b: dict) -> dict:
 
 def merge_snapshots(snapshots: Iterable[Dict[str, dict]]) -> Dict[str, dict]:
     """Associative, commutative fold over registry snapshots: counters
-    and histograms add, gauges take the max.  ``ClusterStats`` is this
-    fold over replica snapshots; a multi-process fleet will be the same
-    fold over JSON shipped across the IPC seam."""
+    and histograms add, gauges take the max (or the sum, when declared
+    ``agg="sum"`` — depth gauges).  ``ClusterStats`` is this fold over
+    replica snapshots; the multi-process fleet is the same fold over
+    JSON shipped across the IPC seam."""
     out: Dict[str, dict] = {}
     for snap in snapshots:
         for key, m in snap.items():

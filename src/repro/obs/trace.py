@@ -34,6 +34,19 @@ Ring eviction drops oldest-ended spans first; because a parent always
 ends after its children, eviction can orphan a surviving span's
 ``parent_id`` — :meth:`TraceLog.snapshot` re-roots those instead of
 exporting dangling ids.
+
+Multi-process cells merge several logs into one timeline: each worker
+ships entry deltas (:meth:`TraceLog.drain_since`) over its control
+pipe, the parent rebases them onto its own clock and id space
+(:func:`adjust_remote_entries` — the offset comes from a ping handshake
+at worker startup), and :func:`export_chrome_entries` namespaces tracks
+by (pid, track) so worker threads from different processes never share
+a tid.  Entries whose track is a ticket track (``ticket #<id>``) keep
+the parent's pid — the worker-side execute/respond spans land on the
+SAME Perfetto row as the parent's admit/ring spans.  Residual
+clock-offset error is absorbed at export by clamping a shipped span to
+the bounds of the span that encloses it on its track, so B/E stacks
+nest by construction no matter how skewed the estimate was.
 """
 from __future__ import annotations
 
@@ -42,9 +55,16 @@ import json
 import threading
 import time
 from collections import deque
-from typing import Dict, List, Optional
+from typing import Dict, Iterable, List, Optional, Tuple
 
-__all__ = ["Span", "TraceLog", "Tracer", "NULL_SPAN", "NULL_TRACER"]
+__all__ = ["Span", "TraceLog", "Tracer", "NULL_SPAN", "NULL_TRACER",
+           "adjust_remote_entries", "export_chrome_entries",
+           "write_chrome_entries"]
+
+#: Track-name prefix of per-ticket rows (``Tracer.root_span("ticket")``
+#: makes ``ticket #<id>``); merged remote entries on these tracks join
+#: the parent process's row instead of opening a per-worker one.
+TICKET_TRACK_PREFIX = "ticket #"
 
 
 class Span:
@@ -185,59 +205,190 @@ class TraceLog:
                  "t0": t0, "t1": t1, "args": args}
                 for kind, name, track, sid, parent, t0, t1, args in entries]
 
+    def drain_since(self, cursor: int) -> Tuple[List[dict], int]:
+        """Entries recorded after ``cursor`` (a previous return's new
+        cursor; 0 for everything), as snapshot-shaped dicts.  The
+        worker→parent shipping primitive: each control-pipe stats reply
+        carries only the delta, and entries the ring already evicted
+        are silently skipped (the parent's tail is best-effort by
+        design).  Parent ids are NOT re-rooted here — earlier deltas
+        may hold the parent; the exporter re-roots whatever is still
+        dangling at merge time."""
+        with self._lock:
+            total = self.n_recorded
+            ring = list(self._ring)
+        start = max(int(cursor), total - len(ring))
+        entries = ring[len(ring) - (total - start):] if start < total else []
+        return ([{"kind": kind, "name": name, "track": track, "id": sid,
+                  "parent": parent, "t0": t0, "t1": t1, "args": args}
+                 for kind, name, track, sid, parent, t0, t1, args in entries],
+                total)
+
     def export_chrome(self, process_name: str = "repro") -> dict:
-        """Chrome trace-event JSON (Perfetto-loadable).
-
-        Every span becomes a matched B/E pair on its track's tid;
-        instants become ``i`` events.  Events are sorted by timestamp
-        with closes before opens at equal ts, so per-tid B/E stacks
-        nest by construction.  Timestamps are µs from the earliest
-        entry.
-        """
-        entries = self.snapshot()
-        tids: Dict[str, int] = {}
-        for e in entries:
-            tids.setdefault(e["track"], len(tids) + 1)
-        t_min = min((e["t0"] for e in entries), default=0.0)
-        us = lambda t: (t - t_min) * 1e6
-
-        events = []
-        # priority orders equal-ts events: E closes before i, i before
-        # B opens — adjacent spans sharing a boundary still nest.
-        for e in entries:
-            tid = tids[e["track"]]
-            args = e["args"] or {}
-            if e["parent"] is not None:
-                args = {**args, "parent_span": e["parent"]}
-            if e["kind"] == "instant":
-                events.append((us(e["t0"]), 1, {
-                    "name": e["name"], "ph": "i", "s": "t",
-                    "ts": us(e["t0"]), "pid": 1, "tid": tid, "args": args}))
-            else:
-                common = {"name": e["name"], "pid": 1, "tid": tid}
-                if e["id"] is not None:
-                    args = {**args, "span_id": e["id"]}
-                events.append((us(e["t0"]), 2, {
-                    **common, "ph": "B", "ts": us(e["t0"]), "args": args}))
-                events.append((us(e["t1"]), 0, {
-                    **common, "ph": "E", "ts": us(e["t1"])}))
-        events.sort(key=lambda ev: (ev[0], ev[1]))
-
-        meta = [{"name": "process_name", "ph": "M", "ts": 0, "pid": 1,
-                 "tid": 0, "args": {"name": process_name}}]
-        for track, tid in sorted(tids.items(), key=lambda kv: kv[1]):
-            meta.append({"name": "thread_name", "ph": "M", "ts": 0,
-                         "pid": 1, "tid": tid, "args": {"name": track}})
-            meta.append({"name": "thread_sort_index", "ph": "M", "ts": 0,
-                         "pid": 1, "tid": tid, "args": {"sort_index": tid}})
-        return {"traceEvents": meta + [ev for _, _, ev in events],
-                "displayTimeUnit": "ms"}
+        """Chrome trace-event JSON (Perfetto-loadable) of this log's
+        entries — see :func:`export_chrome_entries`."""
+        return export_chrome_entries(self.snapshot(),
+                                     process_name=process_name)
 
     def write_chrome(self, path, process_name: str = "repro") -> None:
-        from pathlib import Path
-        p = Path(path)
-        p.parent.mkdir(parents=True, exist_ok=True)
-        p.write_text(json.dumps(self.export_chrome(process_name)))
+        write_chrome_entries(path, self.snapshot(),
+                             process_name=process_name)
+
+
+# ---------------------------------------------------------------- merge
+def adjust_remote_entries(entries: Iterable[dict], *, dt: float = 0.0,
+                          id_offset: int = 0, pid: Optional[int] = None,
+                          ticket_args: Optional[dict] = None) -> List[dict]:
+    """Rebase another process's trace entries into the local timeline.
+
+    - ``dt`` shifts every timestamp onto the local clock (local ≈
+      remote + dt, estimated from the ping handshake's min-RTT sample);
+    - ``id_offset`` moves span/parent ids into a per-worker range so
+      two processes' independent id counters can't collide;
+    - entries on ticket tracks (``ticket #<id>``) stay pid-less — they
+      join the parent's Perfetto row under the parent-side ring span —
+      and pick up ``ticket_args`` (e.g. ``{"wpid": 1234}``) so the
+      chain checker can count worker pids; every other track is stamped
+      with ``pid`` and becomes its own (pid, track) row at export.
+    """
+    out = []
+    for e in entries:
+        e = dict(e)
+        e["t0"] = e["t0"] + dt
+        if e["t1"] is not None:
+            e["t1"] = e["t1"] + dt
+        if e["id"] is not None:
+            e["id"] = e["id"] + id_offset
+        if e["parent"] is not None:
+            e["parent"] = e["parent"] + id_offset
+        if e["track"].startswith(TICKET_TRACK_PREFIX):
+            if ticket_args:
+                e["args"] = {**(e["args"] or {}), **ticket_args}
+        elif pid is not None:
+            e["pid"] = pid
+        out.append(e)
+    return out
+
+
+def _clamp_nesting(entries: List[dict]) -> None:
+    """Clamp partially-overlapping spans per (pid, track) so B/E events
+    nest.  Cross-process spans are aligned by an *estimated* clock
+    offset; the residual error can push a shipped span past the bounds
+    of the span that logically encloses it.  Snapping the child into
+    the enclosing span's window keeps every track a proper tree without
+    reordering — the invariant check_trace.py asserts.
+
+    Each span is also stamped with its stack depth (``_depth``).
+    Clamping routinely makes a child share its parent's exact boundary,
+    and at equal timestamps only containment can order the B/E events —
+    the exporter breaks those ties with the depth (deepest E closes
+    first, shallowest B opens first)."""
+    by_track: Dict[tuple, List[dict]] = {}
+    for e in entries:
+        if e["kind"] == "span":
+            by_track.setdefault((e.get("pid"), e["track"]), []).append(e)
+    for spans in by_track.values():
+        # At equal t0 the longer span is the parent; it must sort first.
+        spans.sort(key=lambda e: (e["t0"], -(e["t1"] - e["t0"])))
+        stack: List[dict] = []
+        for e in spans:
+            while stack and stack[-1]["t1"] <= e["t0"]:
+                stack.pop()
+            if stack:
+                top = stack[-1]
+                if e["t0"] < top["t0"]:
+                    e["t0"] = top["t0"]
+                if e["t1"] > top["t1"]:
+                    e["t1"] = top["t1"]
+                if e["t1"] < e["t0"]:
+                    e["t1"] = e["t0"]
+            e["_depth"] = len(stack)
+            stack.append(e)
+
+
+def export_chrome_entries(entries: Iterable[dict],
+                          process_name: str = "repro",
+                          pid_names: Optional[Dict[int, str]] = None) -> dict:
+    """Chrome trace-event JSON (Perfetto-loadable) from snapshot-shaped
+    entries, possibly merged from several processes.
+
+    Every span becomes a matched B/E pair; instants become ``i``
+    events.  Events are sorted by timestamp with closes before opens at
+    equal ts, so per-tid B/E stacks nest by construction.  Timestamps
+    are µs from the earliest entry.
+
+    Entries may carry an optional ``pid`` (absent/None = the exporting
+    process, emitted as pid 1).  Tids are assigned per **(pid, track)**
+    — worker threads from different processes never share a tid even
+    when their thread names collide — and each pid gets its own
+    ``process_name`` metadata row (``pid_names`` overrides the default
+    ``<process_name>/pid <pid>`` label)."""
+    entries = [dict(e) if e["kind"] == "span" else e for e in entries]
+    _clamp_nesting(entries)
+    # Deltas shipped ring-by-ring can strand a parent id whose entry
+    # was evicted remotely — re-root those like TraceLog.snapshot does.
+    live = {e["id"] for e in entries if e["id"] is not None}
+
+    tids: Dict[tuple, int] = {}
+    for e in entries:
+        tids.setdefault((e.get("pid"), e["track"]), len(tids) + 1)
+    t_min = min((e["t0"] for e in entries), default=0.0)
+    us = lambda t: (t - t_min) * 1e6
+
+    events = []
+    # priority orders equal-ts events: E closes before i, i before
+    # B opens — adjacent spans sharing a boundary still nest.  Within a
+    # priority class, clamp depth breaks the tie: a clamped child shares
+    # its parent's exact boundary, where only containment can order the
+    # events — the deepest E closes first, the shallowest B opens first.
+    for e in entries:
+        pid = e.get("pid") or 1
+        tid = tids[(e.get("pid"), e["track"])]
+        args = e["args"] or {}
+        depth = e.get("_depth", 0)
+        if e["parent"] is not None and e["parent"] in live:
+            args = {**args, "parent_span": e["parent"]}
+        if e["kind"] == "instant":
+            events.append((us(e["t0"]), 1, 0, {
+                "name": e["name"], "ph": "i", "s": "t",
+                "ts": us(e["t0"]), "pid": pid, "tid": tid, "args": args}))
+        else:
+            common = {"name": e["name"], "pid": pid, "tid": tid}
+            if e["id"] is not None:
+                args = {**args, "span_id": e["id"]}
+            events.append((us(e["t0"]), 2, depth, {
+                **common, "ph": "B", "ts": us(e["t0"]), "args": args}))
+            events.append((us(e["t1"]), 0, -depth, {
+                **common, "ph": "E", "ts": us(e["t1"])}))
+    events.sort(key=lambda ev: ev[:3])
+
+    pids = sorted({p for p, _track in tids}, key=lambda p: (p is not None, p))
+    meta = []
+    for p in pids:
+        emitted = p or 1
+        name = (process_name if p is None
+                else (pid_names or {}).get(p, f"{process_name}/pid {p}"))
+        meta.append({"name": "process_name", "ph": "M", "ts": 0,
+                     "pid": emitted, "tid": 0, "args": {"name": name}})
+    for (p, track), tid in sorted(tids.items(), key=lambda kv: kv[1]):
+        emitted = p or 1
+        meta.append({"name": "thread_name", "ph": "M", "ts": 0,
+                     "pid": emitted, "tid": tid, "args": {"name": track}})
+        meta.append({"name": "thread_sort_index", "ph": "M", "ts": 0,
+                     "pid": emitted, "tid": tid,
+                     "args": {"sort_index": tid}})
+    return {"traceEvents": meta + [ev for *_, ev in events],
+            "displayTimeUnit": "ms"}
+
+
+def write_chrome_entries(path, entries: Iterable[dict],
+                         process_name: str = "repro",
+                         pid_names: Optional[Dict[int, str]] = None) -> None:
+    from pathlib import Path
+    p = Path(path)
+    p.parent.mkdir(parents=True, exist_ok=True)
+    p.write_text(json.dumps(export_chrome_entries(
+        entries, process_name=process_name, pid_names=pid_names)))
 
 
 class Tracer:

@@ -67,8 +67,12 @@ class Telemetry:
         self._c_requests = self.registry.counter("serve.requests")
         self._c_cached = self.registry.counter("serve.cached")
         self._c_rejected = self.registry.counter("serve.rejected")
-        self._g_queue_depth = self.registry.gauge("serve.queue_depth")
-        self._g_inflight = self.registry.gauge("serve.inflight")
+        # Depth gauges fold as SUMS across replicas: the fleet's merged
+        # queue depth is total pending work (capacity math), not the
+        # hottest replica's — peak-style gauges keep the max default.
+        self._g_queue_depth = self.registry.gauge("serve.queue_depth",
+                                                  agg="sum")
+        self._g_inflight = self.registry.gauge("serve.inflight", agg="sum")
         self._level_counters: Dict[int, Counter] = {}
         self._hists: Dict[tuple, object] = {}
 

@@ -30,6 +30,17 @@ def integers(min_value: int, max_value: int) -> _Strategy:
     return _Strategy(lambda rng: int(rng.integers(min_value, max_value + 1)))
 
 
+def floats(min_value: float, max_value: float, **_kw) -> _Strategy:
+    # Endpoints are the classic boundary bugs — visit them first, like
+    # real hypothesis's shrink targets, then sample the interior.
+    edges = iter((min_value, max_value))
+    def sample(rng):
+        for e in edges:
+            return float(e)
+        return float(rng.uniform(min_value, max_value))
+    return _Strategy(sample)
+
+
 def settings(deadline=None, max_examples: int = _DEFAULT_MAX_EXAMPLES, **_kw):
     def deco(fn):
         fn._shim_max_examples = max_examples
@@ -72,6 +83,7 @@ def install() -> None:
     mod = types.ModuleType("hypothesis")
     st_mod = types.ModuleType("hypothesis.strategies")
     st_mod.integers = integers
+    st_mod.floats = floats
     mod.given = given
     mod.settings = settings
     mod.strategies = st_mod

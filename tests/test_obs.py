@@ -392,3 +392,376 @@ def test_cluster_trace_spans_cross_threads(tmp_path, tiny_system):
     merged = cluster.metrics_snapshot()
     lat = [k for k in merged if k.startswith("serve.latency_ms{")]
     assert lat and sum(merged[k]["count"] for k in lat) == 24
+
+
+# ------------------------------------------------------- gauge aggregation
+def test_gauge_sum_aggregation_and_mismatch():
+    """Depth-style gauges declare agg="sum" and merge by adding;
+    mixing aggregations for one key must fail loudly, at registration
+    and at merge."""
+    r1, r2 = MetricsRegistry(), MetricsRegistry()
+    r1.gauge("depth", agg="sum").set(3.0)
+    r2.gauge("depth", agg="sum").set(4.0)
+    snap1 = r1.snapshot()
+    assert snap1["depth"]["agg"] == "sum"
+    m = merge_snapshots([snap1, r2.snapshot()])
+    assert m["depth"]["value"] == 7.0          # sums, not max
+    assert m["depth"]["max"] == 7.0
+    assert m["depth"]["agg"] == "sum"          # survives the fold
+    # default stays max-aggregated (peaks must not add across replicas)
+    r1.gauge("peak").set(5.0)
+    r2.gauge("peak").set(2.0)
+    assert merge_snapshots([r1.snapshot(),
+                            r2.snapshot()])["peak"]["value"] == 5.0
+    with pytest.raises(ValueError):
+        r1.gauge("depth")                      # agg mismatch at re-get
+    with pytest.raises(ValueError):
+        Gauge(agg="median")                    # unknown aggregation
+    r3 = MetricsRegistry()
+    r3.gauge("depth").set(1.0)                 # max-agg under the same key
+    with pytest.raises(ValueError):
+        merge_snapshots([snap1, r3.snapshot()])
+
+
+def test_fleet_depth_gauges_sum_across_replicas():
+    """The two serving depth gauges ride snapshots as sum-aggregated —
+    fleet queue depth is the SUM of per-replica depths, not the max."""
+    from repro.serving.telemetry import Telemetry
+
+    snaps = []
+    for depth in (3, 4):
+        t = Telemetry()
+        t.observe_gauges(queue_depth=depth, inflight=1)
+        snaps.append(t.registry.snapshot())
+    m = merge_snapshots(snaps)
+    assert m["serve.queue_depth"]["agg"] == "sum"
+    assert m["serve.queue_depth"]["value"] == 7.0
+    assert m["serve.inflight"]["value"] == 2.0
+
+
+# ------------------------------------------------- cross-process merging
+def test_export_namespaces_tids_by_pid():
+    """Satellite regression: two processes both have a thread named
+    "worker" — their spans must land on DIFFERENT tids (and pids), while
+    ticket-track entries merged from a worker keep the parent's row."""
+    from repro.obs import adjust_remote_entries, export_chrome_entries
+
+    parent = Tracer(clock=iter(np.arange(0.0, 100.0, 0.5)).__next__)
+    t = parent.root_span("ticket")
+    track = t.track
+    ring = t.child("ring")
+
+    def worker_entries(seed):
+        wtr = Tracer(clock=iter(np.arange(1.0 + seed, 50.0, 0.25)).__next__)
+        with wtr.span("worker", track=track):
+            pass
+        with wtr.span("step", track="worker-loop"):
+            pass
+        return wtr.log.snapshot()
+
+    merged = []
+    for pid in (101, 202):
+        merged.extend(adjust_remote_entries(
+            worker_entries(pid % 7), id_offset=pid << 32, pid=pid,
+            ticket_args={"wpid": pid}))
+    ring.end()
+    t.end()
+    doc = export_chrome_entries(parent.log.snapshot() + merged,
+                                process_name="unit")
+    evs = doc["traceEvents"]
+    # each worker's "worker-loop" track gets its own (pid, tid)
+    loops = {(e["pid"], e["tid"]) for e in evs
+             if e["ph"] == "M" and e["name"] == "thread_name"
+             and e["args"]["name"] == "worker-loop"}
+    assert len(loops) == 2
+    assert len({pid for pid, _ in loops}) == 2
+    # ticket-track spans from BOTH workers share the parent's row (pid 1)
+    ticket_b = [e for e in evs if e["ph"] == "B" and e["name"] == "worker"]
+    assert len(ticket_b) == 2
+    assert all(e["pid"] == 1 for e in ticket_b)
+    assert {e["args"]["wpid"] for e in ticket_b} == {101, 202}
+    # per-pid process_name metadata rows exist
+    pnames = {e["pid"]: e["args"]["name"] for e in evs
+              if e["ph"] == "M" and e["name"] == "process_name"}
+    assert set(pnames) == {1, 101, 202}
+    assert pnames[101] == "unit/pid 101"
+
+
+def _assert_trace_doc_wellformed(doc):
+    """Inline version of tools/check_trace.py's core checks: monotone
+    timestamps and per-(pid, tid) matched B/E nesting."""
+    last = None
+    stacks = {}
+    for ev in doc["traceEvents"]:
+        if ev["ph"] == "M":
+            continue
+        assert last is None or ev["ts"] >= last, "ts went backwards"
+        last = ev["ts"]
+        key = (ev["pid"], ev["tid"])
+        if ev["ph"] == "B":
+            stacks.setdefault(key, []).append(ev["name"])
+        elif ev["ph"] == "E":
+            assert stacks.get(key), f"E without B on {key}"
+            assert stacks[key].pop() == ev["name"], "bad nesting"
+    assert all(not s for s in stacks.values()), "unclosed B at EOF"
+
+
+def test_clamped_shared_boundary_closes_inner_span_first():
+    """Regression (caught live by the process trace-smoke): when the
+    clamp snaps a shipped worker span's t1 onto its enclosing ring
+    span's t1 exactly, the two E events tie on timestamp — the export
+    must close the INNER span first (depth tie-break), or the checker
+    sees `E 'ring' closes B 'submit'`."""
+    from repro.obs import adjust_remote_entries, export_chrome_entries
+
+    parent = Tracer(clock=lambda: 0.0)
+    t = parent.root_span("ticket")
+    t.t0 = 0.0
+    ring = t.child("ring")
+    ring.t0 = 1.0
+    ring.end(t1=5.0)
+    t.end(t1=6.0)
+    wtr = Tracer(clock=lambda: 0.0)
+    sub = wtr.span("submit", track=t.track)
+    sub.t0 = 2.0
+    sub.end(t1=5.5)              # skew pushed it past the ring's close
+    entries = parent.log.snapshot() + adjust_remote_entries(
+        wtr.log.snapshot(), id_offset=9 << 32, pid=9,
+        ticket_args={"wpid": 9})
+    _assert_trace_doc_wellformed(export_chrome_entries(entries))
+
+
+@settings(deadline=None, max_examples=40)
+@given(st.floats(-3.0, 3.0, allow_nan=False),
+       st.floats(0.0, 0.2, allow_nan=False))
+def test_clock_skew_alignment_property(err, jitter):
+    """Property: whatever the residual clock-offset estimation error —
+    including skews large enough to push the worker's spans entirely
+    outside (or onto the exact boundaries of) the parent-side ring span
+    — rebasing with adjust_remote_entries and exporting the merged
+    timeline yields monotone, properly nested B/E stacks."""
+    from repro.obs import adjust_remote_entries, export_chrome_entries
+
+    parent = Tracer(clock=lambda: 0.0)
+    t = parent.root_span("ticket")
+    t.t0 = 0.0
+    ring = t.child("ring")
+    ring.t0 = 2.0
+
+    # Worker clock: worker_time = parent_time - true_offset
+    true_offset = 37.0
+    wtr = Tracer(clock=lambda: 0.0)
+    w = wtr.span("worker", track=t.track)
+    w.t0 = 3.0 + jitter - true_offset
+    ex = wtr.span("execute", track=t.track, parent=w)
+    ex.t0 = 4.0 - true_offset
+    ex.end(t1=6.0 - true_offset)
+    w.end(t1=7.0 - jitter - true_offset)
+
+    ring.end(t1=8.0)
+    t.end(t1=10.0)
+
+    # The parent's estimate is off by `err` — spans land shifted.
+    entries = parent.log.snapshot() + adjust_remote_entries(
+        wtr.log.snapshot(), dt=true_offset + err,
+        id_offset=7 << 32, pid=7, ticket_args={"wpid": 7})
+    ids = [e["id"] for e in entries if e["id"] is not None]
+    assert len(ids) == len(set(ids)), "id collision after offsetting"
+    doc = export_chrome_entries(entries)
+    _assert_trace_doc_wellformed(doc)
+    # everything stays on the single ticket row
+    tids = {e["tid"] for e in doc["traceEvents"] if e["ph"] != "M"}
+    assert len(tids) == 1
+
+
+# ------------------------------------------------------ health / watchdog
+def test_watchdog_state_machine():
+    from repro.obs import HeartbeatWatchdog
+
+    wd = HeartbeatWatchdog(stale_after_s=1.0, wedge_after_s=10.0)
+    assert wd.assess(alive=False, heartbeat_age_s=0.0, pending=5) == "dead"
+    assert wd.assess(alive=True, heartbeat_age_s=0.2, pending=9) == "healthy"
+    assert wd.assess(alive=True, heartbeat_age_s=None, pending=0) == "healthy"
+    # THE no-false-positive case: stale heartbeat + empty ring = parked
+    assert wd.assess(alive=True, heartbeat_age_s=300.0,
+                     pending=0) == "parked_idle"
+    assert wd.assess(alive=True, heartbeat_age_s=5.0, pending=3) == "busy"
+    assert wd.assess(alive=True, heartbeat_age_s=11.0, pending=3) == "wedged"
+
+
+def test_watchdog_no_false_positive_on_idle_parked_ring():
+    """A real ring whose consumer stopped stamping with nothing pending
+    must classify parked_idle forever — never wedged."""
+    import time as _time
+
+    from repro.cluster.proc import ShmRing
+    from repro.obs import HeartbeatWatchdog
+
+    wd = HeartbeatWatchdog(stale_after_s=0.01, wedge_after_s=0.05)
+    ring = ShmRing.create(4, slot_bytes=16)
+    try:
+        ring.stamp_heartbeat()                 # last sign of life
+        ring.set_depth_hint(0)
+        _time.sleep(0.08)                      # way past wedge_after_s
+        age = _time.monotonic() - ring.heartbeat()
+        pending = ring.occupancy() + ring.depth_hint()
+        assert wd.assess(alive=True, heartbeat_age_s=age,
+                         pending=pending) == "parked_idle"
+        # the same silence WITH queued work is a wedge
+        ring.push(b"x")
+        pending = ring.occupancy() + ring.depth_hint()
+        assert wd.assess(alive=True, heartbeat_age_s=age,
+                         pending=pending) == "wedged"
+    finally:
+        ring.close()
+
+
+def test_statusz_shape_on_thread_backend(tiny_system):
+    from repro.cluster import ClusterConfig, ReplicaSet
+    from repro.data.querylog import CAT1, CAT2
+    from repro.policies import PolicyStore, TabularQPolicy
+
+    policies = {cat: TabularQPolicy(
+        tiny_system.train_policy(cat, iters=4, batch=16)[0])
+        for cat in (CAT1, CAT2)}
+    store = PolicyStore(staleness_bound=2)
+    store.publish(dict(policies))
+    cluster = ReplicaSet(tiny_system, store, ClusterConfig(n_replicas=2))
+    with cluster:
+        cluster.serve(list(range(8)))
+        doc = cluster.statusz()
+        assert doc["backend"] == "thread" and doc["n_replicas"] == 2
+        assert doc["state"] == "healthy"
+        assert doc["head_policy_version"] == store.version
+        for r in doc["replicas"]:
+            assert r["state"] == "healthy" and r["alive"]
+            assert r["policy_lag"] == 0
+        json.dumps(doc, default=str)           # JSON-clean
+    # after stop the fleet is dead, and statusz says so
+    assert cluster.statusz()["state"] == "dead"
+
+
+# ------------------------------------------------------------------- SLO
+def _mk_snapshot(latencies_ms, n_shed=0):
+    reg = MetricsRegistry()
+    from repro.serving.telemetry import LATENCY_MS_EDGES
+
+    h = reg.histogram("serve.latency_ms", LATENCY_MS_EDGES,
+                      category=1, level=0)
+    for v in latencies_ms:
+        h.record(v)
+    if n_shed:
+        reg.counter("cluster.shed", where="admission").inc(n_shed)
+    return reg.snapshot()
+
+
+def test_slo_fold_snapshot_threshold_snapping():
+    from repro.obs import fold_snapshot
+
+    snap = _mk_snapshot([1.0, 4.0, 30.0, 70.0, 2000.0], n_shed=2)
+    fold = fold_snapshot(snap, latency_slo_ms=50.0)
+    # 50 is an exact 1-2-5 edge: good = everything <= 50
+    assert fold["effective_latency_slo_ms"] == 50.0
+    assert fold["served"] == 5 and fold["slow"] == 2 and fold["shed"] == 2
+    assert fold["total"] == 7 and fold["good"] == 3 and fold["bad"] == 4
+    # a threshold between edges snaps UP (bucket counts can only answer
+    # "how many were <= an edge")
+    fold = fold_snapshot(snap, latency_slo_ms=60.0)
+    assert fold["effective_latency_slo_ms"] == 100.0
+    assert fold["slow"] == 1                    # only the 2000 ms one
+
+
+def test_slo_monitor_burn_and_multiwindow_verdict():
+    from repro.obs import SLOConfig, SLOMonitor
+
+    clock = iter(np.arange(0.0, 10000.0, 10.0)).__next__
+    reg = MetricsRegistry()
+    mon = SLOMonitor(SLOConfig(target=0.9, latency_slo_ms=50.0,
+                               fast_window_s=30.0, slow_window_s=300.0),
+                     registry=reg, clock=clock)
+    lats = []
+    # healthy traffic: 100 fast requests over a few observations
+    for _ in range(4):
+        lats.extend([5.0] * 25)
+        mon.observe(_mk_snapshot(lats))
+    v = mon.check()
+    assert v["verdict"] == "ok"
+    assert v["burn_fast"] == 0.0 and v["burn_slow"] == 0.0
+    # cliff: every new request is slow -> both windows burn past page
+    for _ in range(40):
+        lats.extend([500.0] * 25)
+        mon.observe(_mk_snapshot(lats))
+    v = mon.check()
+    assert v["error_rate_fast"] == pytest.approx(1.0)
+    assert v["burn_fast"] == pytest.approx(10.0)   # 1.0 / (1 - 0.9)
+    assert v["verdict"] == "page"
+    # the verdict rides the registry as slo.* gauges
+    snap = reg.snapshot()
+    assert snap["slo.burn_rate{window=fast}"]["value"] == \
+        pytest.approx(v["burn_fast"])
+
+    # recovery: the fast window clears first -> page downgrades to warn
+    # (the slow window still carries most of the cliff)
+    for _ in range(3):
+        lats.extend([5.0] * 25)
+        mon.observe(_mk_snapshot(lats))
+    v = mon.check()
+    assert v["burn_fast"] < mon.cfg.page_burn
+    assert v["burn_fast"] < v["burn_slow"]
+    assert v["verdict"] == "warn"
+
+
+def test_slo_config_validation():
+    from repro.obs import SLOConfig
+
+    with pytest.raises(ValueError):
+        SLOConfig(target=1.0)
+    with pytest.raises(ValueError):
+        SLOConfig(fast_window_s=600.0, slow_window_s=60.0)
+
+
+# -------------------------------------------------------- flight recorder
+def test_event_log_bounded_ring_and_counters():
+    from repro.obs import EventLog
+
+    reg = MetricsRegistry()
+    log = EventLog(capacity=4, registry=reg)
+    for i in range(10):
+        log.record("publish", version=i)
+    log.record("shed", reason="queue_full")
+    assert len(log) == 4 and log.n_recorded == 11 and log.n_evicted == 7
+    tail = log.tail(2)
+    assert [e["kind"] for e in tail] == ["publish", "shed"]
+    assert tail[0]["version"] == 9             # oldest evicted first
+    assert all("t" in e and "t_wall" in e for e in tail)
+    snap = reg.snapshot()
+    assert snap["events.recorded{kind=publish}"]["value"] == 10
+    assert snap["events.recorded{kind=shed}"]["value"] == 1
+
+
+def test_flight_recorder_bundles(tmp_path):
+    from repro.obs import EventLog, FlightRecorder
+
+    # no bundle_dir: events still record, dump is a no-op
+    rec = FlightRecorder(config={"backend": "thread"})
+    rec.record("restart", replica=0)
+    assert rec.dump("postmortem", {"x": 1}) is None
+
+    rec = FlightRecorder(EventLog(capacity=8),
+                         bundle_dir=tmp_path / "pm",
+                         config={"backend": "process", "n_replicas": 2})
+    for i in range(12):
+        rec.record("publish", version=i)
+    trace_tail = [{"name": f"s{i}"} for i in range(1000)]
+    p1 = rec.dump("postmortem-r0", {"reason": "worker_dead",
+                                    "trace_tail": trace_tail,
+                                    "metrics": {"serve.requests": 8}})
+    p2 = rec.dump("postmortem-r0", {"reason": "worker_dead"})
+    assert p1 != p2 and rec.last_bundle_path == p2     # seq-numbered
+    doc = json.loads(p1.read_text())
+    assert doc["config"]["n_replicas"] == 2
+    assert doc["events_recorded"] == 12
+    assert len(doc["events_tail"]) == 8        # ring bound, not lifetime
+    assert len(doc["trace_tail"]) == FlightRecorder.TRACE_TAIL
+    assert doc["trace_tail"][-1] == {"name": "s999"}   # the TAIL survives
+    assert doc["metrics"] == {"serve.requests": 8}

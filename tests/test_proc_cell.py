@@ -107,7 +107,13 @@ def test_ring_closed_raises():
 def test_request_codec_roundtrip():
     payload = encode_request(77, 1234, ServiceLevel.SHALLOW, 2)
     assert len(payload) == REQUEST_BYTES
-    assert decode_request(payload) == (77, 1234, ServiceLevel.SHALLOW, 2)
+    # trace_root defaults to 0 = tracing off
+    assert decode_request(payload) == (77, 1234, ServiceLevel.SHALLOW, 2, 0)
+    # trace context (a 64-bit span id) rides the record unchanged
+    root = (1 << 40) + 17
+    payload = encode_request(77, 1234, ServiceLevel.FULL, 1, root)
+    assert len(payload) == REQUEST_BYTES
+    assert decode_request(payload) == (77, 1234, ServiceLevel.FULL, 1, root)
 
 
 def test_response_codec_roundtrip_and_truncation_guard():
@@ -222,20 +228,92 @@ def test_process_cell_metrics_fold_worker_registries(trained):
     assert any(k.startswith("cluster.submitted") for k in keys)
 
 
+def test_process_cell_merged_trace_cross_pid(tmp_path, trained):
+    """Tentpole E2E: trace context rides the ring request structs into
+    the workers, worker spans ship back as deltas, and the parent merges
+    everything into ONE timeline — at least one ticket must carry the
+    full admit -> ring -> worker -> execute -> respond chain across the
+    process boundary, with worker spans from >= 2 distinct pids."""
+    from repro.obs import Tracer
+    from test_obs import _load_checker
+
+    sys_, policies = trained
+    tracer = Tracer()
+    cluster = ReplicaSet(sys_, _store(policies),
+                         ClusterConfig(n_replicas=2, backend="process"),
+                         EngineConfig(min_bucket=8, max_bucket=8,
+                                      cache_capacity=0),
+                         tracer=tracer)
+    rng = np.random.default_rng(11)
+    with cluster:
+        results = cluster.serve(rng.integers(0, sys_.log.n_queries,
+                                             size=24))
+        assert not any(isinstance(r, Shed) for r in results)
+
+        # the ping handshake landed a finite clock-offset sample
+        for r in cluster.replicas:
+            offset, rtt = r.clock_offset()
+            assert rtt < 10.0 and abs(offset) < 10.0
+
+        # stats round trips carry the workers' trace deltas parent-side
+        def merged_worker_pids():
+            wpids = set()
+            for e in cluster.trace_entries():
+                if str(e["track"]).startswith("ticket #") \
+                        and e["name"] == "worker":
+                    wpids.add((e["args"] or {}).get("wpid"))
+            wpids.discard(None)
+            return wpids
+
+        deadline = time.monotonic() + 60.0
+        while time.monotonic() < deadline:
+            cluster.stats()
+            if len(merged_worker_pids()) >= 2:
+                break
+            time.sleep(0.05)
+        worker_pids = merged_worker_pids()
+        assert len(worker_pids) >= 2, f"worker spans from {worker_pids}"
+        assert os.getpid() not in worker_pids
+
+        # health plane reads clean while the cell is live
+        doc = cluster.statusz()
+        assert doc["backend"] == "process" and doc["state"] != "dead"
+        assert {r["worker_pid"] for r in doc["replicas"]} >= worker_pids
+        for r in doc["replicas"]:
+            assert r["state"] in ("healthy", "parked_idle", "busy")
+
+        # the exported single file passes the cross-process chain gate
+        path = tmp_path / "proc_trace.json"
+        n = cluster.write_trace(path)
+        assert n > 0
+    out = _load_checker().check_trace(str(path), require_chain=False,
+                                      require_proc_chain=True)
+    assert out["n_proc_chain_tickets"] >= 1
+    assert len(out["worker_pids"]) >= 2
+    assert str(out["example_proc_chain_track"]).startswith("ticket #")
+
+
 def test_worker_sigkill_respawns_and_no_ticket_drops(trained):
     """SIGKILL mid-stream: outstanding tickets are requeued to the
-    respawned worker (or explicitly shed) — never dropped — and the
-    fresh worker serves correctly."""
+    respawned worker (or explicitly shed) — never dropped — the fresh
+    worker serves correctly, and the salvage leaves a postmortem bundle
+    behind (metrics snapshot + trace tail + event-ring tail)."""
+    from repro.obs import Tracer
+
     sys_, policies = trained
     cluster = ReplicaSet(sys_, _store(policies),
                          ClusterConfig(n_replicas=1, backend="process",
                                        max_worker_restarts=2),
                          EngineConfig(min_bucket=8, max_bucket=8,
-                                      cache_capacity=0))
+                                      cache_capacity=0),
+                         tracer=Tracer())
     with cluster:
         replica = cluster.replicas[0]
         first = cluster.serve(list(range(8)))
         assert not any(isinstance(r, Shed) for r in first)
+        # a stats round trip lands the first wave's metrics + worker
+        # trace delta parent-side — what the bundle must preserve
+        cluster.stats()
         pid_before = replica.worker_pid
 
         # kill with tickets in flight: the requeue path must absorb it
@@ -268,6 +346,27 @@ def test_worker_sigkill_respawns_and_no_ticket_drops(trained):
         assert stats["n_submitted"] == \
             stats["n_responses"] + stats["n_shed"]
         assert stats["replicas"][0]["n_restarts"] >= 1
+
+        # crash forensics: the salvage dumped a postmortem bundle with
+        # the dead worker's last metrics, its trace tail (rebased spans
+        # from the first wave), and the fleet event-ring tail
+        import json
+        assert replica.last_bundle_path is not None
+        bundle = json.loads(open(replica.last_bundle_path).read())
+        assert bundle["reason"] == "worker_dead"
+        assert bundle["worker_pid"] == pid_before
+        assert bundle["death_traceback"] is None   # SIGKILL leaves none
+        assert bundle["config"]["backend"] == "process"
+        assert any(k.startswith("serve.requests")
+                   for k in bundle["metrics"]), "no metrics snapshot"
+        assert bundle["trace_tail"], "no trace tail in bundle"
+        assert all("wpid" in (e["args"] or {}) for e in bundle["trace_tail"]
+                   if str(e["track"]).startswith("ticket #"))
+        kinds = [e["kind"] for e in bundle["events_tail"]]
+        assert "worker_dead" in kinds
+        # ...and the live event ring saw the respawn too
+        all_kinds = {e["kind"] for e in cluster.events.tail()}
+        assert {"worker_dead", "worker_restart"} <= all_kinds
 
 
 def test_stale_policy_relay_is_skipped_not_applied(trained):

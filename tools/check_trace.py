@@ -14,7 +14,13 @@ Checks (the `make trace-smoke` gate):
    admit → queue → batch → execute → respond span chain, and a
    trainer-side ``publish`` span exists (the smoke's acceptance
    criterion).
-5. ``--metrics`` — the metrics snapshot JSON contains at least one
+5. ``--require-proc-chain`` — the cross-PROCESS version: at least one
+   ticket track carries admit → ring → worker → execute → respond,
+   where the worker-side spans are tagged with the worker pid
+   (``args.wpid``, stamped at merge time), and the trace as a whole
+   saw spans from at least two distinct worker pids — proof that one
+   merged timeline covers the parent and a multi-worker cell.
+6. ``--metrics`` — the metrics snapshot JSON contains at least one
    per-(level, category) ``serve.latency_ms`` histogram.
 
 Exit code 0 on success; prints the first failure and exits 1 otherwise.
@@ -29,6 +35,10 @@ from collections import defaultdict
 KNOWN_PHASES = {"M", "B", "E", "i"}
 REQUIRED_KEYS = ("name", "ph", "ts", "pid", "tid")
 TICKET_CHAIN = ("admit", "queue", "batch", "execute", "respond")
+# Cross-process ticket chain: the parent records admit + ring (the
+# worker round trip), the worker contributes worker/execute/respond on
+# the same merged track.
+PROC_CHAIN = ("admit", "ring", "worker", "execute", "respond")
 
 
 def fail(msg: str) -> "None":
@@ -36,7 +46,8 @@ def fail(msg: str) -> "None":
     sys.exit(1)
 
 
-def check_trace(path: str, require_chain: bool) -> dict:
+def check_trace(path: str, require_chain: bool,
+                require_proc_chain: bool = False) -> dict:
     try:
         doc = json.loads(open(path).read())
     except (OSError, json.JSONDecodeError) as e:
@@ -51,6 +62,7 @@ def check_trace(path: str, require_chain: bool) -> dict:
     track_names = {}                      # (pid, tid) -> thread_name
     stacks = defaultdict(list)            # (pid, tid) -> open B names
     span_names = defaultdict(set)         # (pid, tid) -> completed spans
+    track_wpids = defaultdict(set)        # (pid, tid) -> worker pids seen
     last_ts = None
     n_spans = 0
     for i, ev in enumerate(events):
@@ -73,6 +85,9 @@ def check_trace(path: str, require_chain: bool) -> dict:
         key = (ev["pid"], ev["tid"])
         if ph == "B":
             stacks[key].append(ev["name"])
+            wpid = (ev.get("args") or {}).get("wpid")
+            if wpid is not None:
+                track_wpids[key].add(wpid)
         elif ph == "E":
             if not stacks[key]:
                 fail(f"event {i}: E {ev['name']!r} with no open B on "
@@ -102,6 +117,22 @@ def check_trace(path: str, require_chain: bool) -> dict:
             fail("no trainer publish span found")
         summary["n_full_chain_tickets"] = len(chained)
         summary["example_chain_track"] = chained[0]
+    if require_proc_chain:
+        proc_chained = [k for k, names in span_names.items()
+                        if all(step in names for step in PROC_CHAIN)
+                        and track_wpids.get(k)]
+        if not proc_chained:
+            fail("no ticket track carries the full cross-process "
+                 f"{' -> '.join(PROC_CHAIN)} chain with a wpid tag")
+        all_wpids = set().union(*track_wpids.values()) if track_wpids \
+            else set()
+        if len(all_wpids) < 2:
+            fail("merged trace covers worker pids "
+                 f"{sorted(all_wpids)} — need spans from >= 2 workers")
+        summary["n_proc_chain_tickets"] = len(proc_chained)
+        summary["example_proc_chain_track"] = track_names.get(
+            proc_chained[0], str(proc_chained[0]))
+        summary["worker_pids"] = sorted(all_wpids)
     return summary
 
 
@@ -128,11 +159,16 @@ def main() -> None:
     ap.add_argument("--require-chain", action="store_true",
                     help="require a full ticket span chain + a trainer "
                          "publish span")
+    ap.add_argument("--require-proc-chain", action="store_true",
+                    help="require a cross-process ticket chain "
+                         "(admit -> ring -> worker -> execute -> "
+                         "respond) spanning >= 2 worker pids")
     ap.add_argument("--metrics", default=None,
                     help="also validate a metrics snapshot JSON")
     args = ap.parse_args()
 
-    summary = check_trace(args.trace, require_chain=args.require_chain)
+    summary = check_trace(args.trace, require_chain=args.require_chain,
+                          require_proc_chain=args.require_proc_chain)
     if args.metrics:
         summary.update(check_metrics(args.metrics))
     print(f"[check_trace] OK: {json.dumps(summary)}")

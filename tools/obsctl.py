@@ -1,0 +1,174 @@
+#!/usr/bin/env python
+"""obsctl: render the observability plane's JSON artifacts.
+
+The cell writes everything as plain JSON (``repro.launch.cluster
+--statusz-out / --metrics-json / --trace-out``, postmortem bundles
+under ``<cell_dir>/postmortem/``); this tool is the read side — a
+human-oriented formatter with no repro imports, so it runs anywhere a
+bundle landed.
+
+    python tools/obsctl.py statusz results/statusz.json
+    python tools/obsctl.py metrics results/metrics.json --prefix serve.
+    python tools/obsctl.py slo results/metrics.json --target 0.999
+    python tools/obsctl.py bundle /tmp/cell/postmortem/postmortem-r0-001.json
+    python tools/obsctl.py trace results/trace.json
+
+Field reference: docs/observability.md.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+from collections import Counter
+
+
+def _load(path: str) -> dict:
+    try:
+        return json.loads(open(path).read())
+    except (OSError, json.JSONDecodeError) as e:
+        print(f"[obsctl] cannot read {path}: {e}")
+        sys.exit(1)
+
+
+def cmd_statusz(args) -> None:
+    doc = _load(args.path)
+    print(f"cell: backend={doc.get('backend')} "
+          f"replicas={doc.get('n_replicas')} "
+          f"state={doc.get('state', '?').upper()}")
+    print(f"head: policy v{doc.get('head_policy_version')} "
+          f"index epoch {doc.get('head_index_epoch')}")
+    wd = doc.get("watchdog", {})
+    print(f"watchdog: stale_after={wd.get('stale_after_s')}s "
+          f"wedge_after={wd.get('wedge_after_s')}s")
+    for r in doc.get("replicas", []):
+        hb = r.get("heartbeat_age_s")
+        hb_s = f"{hb * 1e3:.0f}ms" if hb is not None else "-"
+        print(f"  r{r.get('replica')} [{r.get('state', '?'):>11s}] "
+              f"pid={r.get('worker_pid') or '-'} hb={hb_s} "
+              f"pending={r.get('pending')} "
+              f"lag=v{r.get('policy_lag')}/e{r.get('epoch_lag')} "
+              f"restarts={r.get('n_restarts')}")
+    adm = doc.get("admission", {})
+    if adm:
+        print(f"admission: {json.dumps(adm)[:200]}")
+    kinds = doc.get("events_tail_kinds", [])
+    if kinds:
+        print(f"events: {doc.get('events_recorded')} recorded, "
+              f"tail: {' '.join(kinds)}")
+
+
+def cmd_metrics(args) -> None:
+    snap = _load(args.path)
+    for key in sorted(snap):
+        if args.prefix and not key.startswith(args.prefix):
+            continue
+        m = snap[key]
+        t = m.get("type")
+        if t == "counter":
+            print(f"{key}  {m['value']}")
+        elif t == "gauge":
+            print(f"{key}  {m['value']:g} (max {m.get('max', 0):g}, "
+                  f"agg={m.get('agg', 'max')})")
+        elif t == "histogram":
+            print(f"{key}  n={m['count']} sum={m.get('sum', 0):g}")
+            if args.buckets:
+                edges, counts = m["edges"], m["counts"]
+                for i, c in enumerate(counts):
+                    if not c:
+                        continue
+                    lo = edges[i - 1] if i else 0
+                    hi = edges[i] if i < len(edges) else "inf"
+                    print(f"    ({lo}, {hi}]: {c}")
+
+
+def cmd_slo(args) -> None:
+    """One-shot burn arithmetic over a single snapshot (cumulative
+    rates, not windowed — the in-process SLOMonitor owns windows)."""
+    sys.path.insert(0, str(__import__("pathlib").Path(
+        __file__).resolve().parent.parent / "src"))
+    from repro.obs import fold_snapshot
+
+    snap = _load(args.path)
+    fold = fold_snapshot(snap, args.latency_ms)
+    budget = 1.0 - args.target
+    rate = fold["bad"] / fold["total"] if fold["total"] else 0.0
+    print(f"target={args.target} latency<={fold['effective_latency_slo_ms']:g}ms "
+          f"(asked {args.latency_ms:g})")
+    print(f"total={fold['total']} good={fold['good']} bad={fold['bad']} "
+          f"(slow={fold['slow']} shed={fold['shed']})")
+    print(f"error_rate={rate:.6f} budget={budget:.6f} "
+          f"burn={rate / budget:.2f}" if budget else "degenerate target")
+
+
+def cmd_bundle(args) -> None:
+    doc = _load(args.path)
+    print(f"bundle: {doc.get('bundle')} seq={doc.get('seq')} "
+          f"reason={doc.get('reason')}")
+    print(f"worker: replica={doc.get('replica')} "
+          f"pid={doc.get('worker_pid')} restarts={doc.get('n_restarts')} "
+          f"outstanding={doc.get('n_outstanding')}")
+    print(f"config: {json.dumps(doc.get('config', {}))}")
+    tb = doc.get("death_traceback")
+    print(f"traceback: {'yes, ' + tb.strip().splitlines()[-1] if tb else 'none (SIGKILL leaves no traceback)'}")
+    events = doc.get("events_tail", [])
+    kinds = Counter(e.get("kind") for e in events)
+    print(f"events_tail: {len(events)} "
+          f"({', '.join(f'{k}={n}' for k, n in kinds.most_common())})")
+    trace = doc.get("trace_tail", [])
+    names = Counter(e.get("name") for e in trace)
+    print(f"trace_tail: {len(trace)} spans "
+          f"({', '.join(f'{k}={n}' for k, n in names.most_common(6))})")
+    metrics = doc.get("metrics", {})
+    print(f"metrics: {len(metrics)} keys")
+    if args.verbose:
+        print(json.dumps(doc.get("summary", {}), indent=1))
+
+
+def cmd_trace(args) -> None:
+    doc = _load(args.path)
+    events = doc.get("traceEvents", [])
+    phases = Counter(e.get("ph") for e in events)
+    pids = sorted({e.get("pid") for e in events})
+    names = Counter(e["name"] for e in events if e.get("ph") == "B")
+    print(f"{len(events)} events across pids {pids} "
+          f"({', '.join(f'{k}={n}' for k, n in sorted(phases.items()))})")
+    print(f"top spans: {', '.join(f'{k}={n}' for k, n in names.most_common(8))}")
+    print("open at ui.perfetto.dev")
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(prog="obsctl")
+    sub = ap.add_subparsers(dest="cmd", required=True)
+
+    p = sub.add_parser("statusz", help="render a statusz JSON")
+    p.add_argument("path")
+    p.set_defaults(fn=cmd_statusz)
+
+    p = sub.add_parser("metrics", help="render a metrics snapshot")
+    p.add_argument("path")
+    p.add_argument("--prefix", default=None)
+    p.add_argument("--buckets", action="store_true")
+    p.set_defaults(fn=cmd_metrics)
+
+    p = sub.add_parser("slo", help="cumulative burn over one snapshot")
+    p.add_argument("path")
+    p.add_argument("--target", type=float, default=0.999)
+    p.add_argument("--latency-ms", type=float, default=50.0)
+    p.set_defaults(fn=cmd_slo)
+
+    p = sub.add_parser("bundle", help="summarize a postmortem bundle")
+    p.add_argument("path")
+    p.add_argument("--verbose", action="store_true")
+    p.set_defaults(fn=cmd_bundle)
+
+    p = sub.add_parser("trace", help="summarize a Chrome trace export")
+    p.add_argument("path")
+    p.set_defaults(fn=cmd_trace)
+
+    args = ap.parse_args()
+    args.fn(args)
+
+
+if __name__ == "__main__":
+    main()
