@@ -1,7 +1,7 @@
 PYTHON ?= python
 export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH),)
 
-.PHONY: check compile test serve-bench cluster-bench proc-bench cluster-smoke proc-smoke trace-smoke index-smoke index-bench degrade-bench bench serve example
+.PHONY: check compile test serve-bench cluster-bench proc-bench cluster-smoke proc-smoke trace-smoke index-smoke index-bench degrade-bench hotpath-bench bench-diff bench serve example
 
 # CI gate: byte-compile everything, then the tier-1 suite
 check: compile test
@@ -91,6 +91,20 @@ index-bench:
 # loads (p99 / served fraction / recall incl. SHALLOW / level mix)
 degrade-bench:
 	$(PYTHON) -m benchmarks.cluster_bench --fast --replicas 2 --degradation-only
+
+# Batched data-plane microbenchmarks: per-stage ns/op (admission,
+# cache probe, ring hop, batcher) for the per-ticket oracle vs the
+# slab path, plus end-to-end QPS on both cluster backends
+# (docs/benchmarks.md)
+hotpath-bench:
+	$(PYTHON) -m benchmarks.hotpath_bench --fast
+
+# Perf-regression gate: coarse machine-independent invariants over
+# results/*.json checked against the committed results/baselines/
+# rows (slab >= per-ticket QPS, zero steady-state retraces, obs plane
+# under its 5% budget, no silently dropped metrics)
+bench-diff:
+	$(PYTHON) tools/bench_compare.py
 
 # Full benchmark sweep (kernels, plan executor, serving)
 bench:

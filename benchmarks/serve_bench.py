@@ -229,13 +229,18 @@ def proc_obs_overhead(sys_, policies, batches, repeats: int = 3,
             tracer=tracer)
         with cluster:
             cluster.warmup()
+            # The slab front door (`serve_many`) is the hot path now;
+            # running the gate through it keeps the <5% obs budget
+            # honest for batch-granular arrivals too (traced slabs
+            # degrade to per-ticket spans by design — that cost is
+            # exactly what this measures).
             for qids in batches[:1]:                # post-compile warm
-                cluster.serve(qids)
+                cluster.serve_many(qids)
             best = float("inf")
             for _ in range(repeats):
                 t0 = time.time()
                 for qids in batches[1:]:
-                    cluster.serve(qids)
+                    cluster.serve_many(qids)
                 best = min(best, time.time() - t0)
             if mode == "tracing_on":
                 n_entries = len(cluster.trace_entries())

@@ -200,6 +200,18 @@ class UCostEstimator:
         df_bin = int(np.searchsorted(self._edges, df_frac[qid]))
         return cat, df_bin
 
+    def features_many(self, qids) -> Tuple[np.ndarray, np.ndarray]:
+        """Vectorized :meth:`features`: (categories, df-bins) for a
+        whole slab in two gathers and one ``searchsorted``."""
+        qids = np.asarray(qids, np.int64).ravel()
+        if qids.size:
+            top = int(qids.max())
+            if (top >= len(self._df_frac) or top >= len(self._category)):
+                self._extend_features(top)
+        cats = np.asarray(self._category)[qids].astype(np.int64)
+        bins = np.searchsorted(self._edges, self._df_frac[qids])
+        return cats, bins
+
     # ------------------------------------------------------- delta pricing
     def _head_delta(self) -> Tuple[int, frozenset]:
         """(head epoch version, delta term set) — cached per epoch; a
@@ -225,6 +237,20 @@ class UCostEstimator:
         qid = int(qid)
         ts = log.terms[qid, : log.n_terms[qid]]
         return any(int(t) in terms for t in ts)
+
+    def delta_hits_many(self, qids) -> np.ndarray:
+        """Vectorized :meth:`delta_hit`: one ``np.isin`` over the
+        slab's term matrix against the head delta's term set."""
+        qids = np.asarray(qids, np.int64).ravel()
+        _, terms = self._head_delta()
+        if not terms or qids.size == 0:
+            return np.zeros(qids.size, bool)
+        log = self._system.log
+        tm = np.asarray(log.terms)[qids]
+        nt = np.asarray(log.n_terms)[qids]
+        present = np.isin(tm, np.fromiter(terms, np.int64, len(terms)))
+        valid = np.arange(tm.shape[1])[None, :] < nt[:, None]
+        return (present & valid).any(axis=1)
 
     def estimate(self, qid: int,
                  level: ServiceLevel = ServiceLevel.FULL,
@@ -255,6 +281,28 @@ class UCostEstimator:
                 full *= float(corr[int(ServiceLevel.FULL)])
                 shallow *= float(corr[int(ServiceLevel.SHALLOW)])
             return full, shallow
+
+    def estimates_many(self, qids, version: Optional[int] = None
+                       ) -> Tuple[np.ndarray, np.ndarray]:
+        """Vectorized :meth:`estimates`: (FULL, SHALLOW) estimate
+        arrays for a whole slab priced under ONE lock acquisition —
+        features and delta probes vectorize outside it, the table read
+        is a fancy-index gather inside it.  Elementwise identical to a
+        loop of scalar ``estimates`` calls (float64 throughout)."""
+        cats, bins = self.features_many(qids)
+        hits = self.delta_hits_many(qids)
+        with self._lock:
+            table = self._tables[self._resolve(version)]
+            full = table[int(ServiceLevel.FULL), cats, bins].astype(
+                np.float64, copy=True)
+            shallow = table[int(ServiceLevel.SHALLOW), cats, bins].astype(
+                np.float64, copy=True)
+            if hits.any():
+                hcats = cats[hits]
+                full[hits] *= self._delta_corr[int(ServiceLevel.FULL), hcats]
+                shallow[hits] *= self._delta_corr[
+                    int(ServiceLevel.SHALLOW), hcats]
+        return full, shallow
 
     def observe(self, qid: int, u: float,
                 level: ServiceLevel = ServiceLevel.FULL,
@@ -414,6 +462,66 @@ class AdmissionController:
             self._decision_counters[int(level)].inc()
             self._g_reserved.set(self.reserved_u)
             return Admission(level=level, est_u=est_full, reserved_u=reserve)
+
+    def decide_many(self, qids, cache_available=None,
+                    shallow_available=None):
+        """Price a whole arrival slab against the ledger under ONE lock
+        acquisition; returns ``(levels, reserves, est_full)`` arrays.
+
+        Estimation — the expensive part — vectorizes fully outside the
+        lock via :meth:`UCostEstimator.estimates_many`.  The ladder
+        walk itself stays a scalar sweep *inside* the lock because each
+        decision's headroom depends on every earlier reservation in the
+        slab; that sweep is a handful of float compares per query, and
+        running it under one acquisition is exactly what makes the
+        result bit-identical to a loop of :meth:`decide` calls (the
+        B=1 oracle) while paying one lock, one gauge store, and one
+        counter pass per slab."""
+        qids = np.asarray(qids, np.int64).ravel()
+        n = qids.size
+        cache_av = (np.zeros(n, bool) if cache_available is None
+                    else np.asarray(cache_available, bool).ravel())
+        shallow_av = (np.ones(n, bool) if shallow_available is None
+                      else np.asarray(shallow_available, bool).ravel())
+        est_full, est_shallow = self.estimator.estimates_many(qids)
+        budget = self.u_inflight_budget
+        levels = np.empty(n, np.int8)
+        reserves = np.zeros(n, np.float64)
+        with self._lock:
+            for i in range(n):
+                ef = float(est_full[i])
+                if not self.ladder:
+                    if (self.reserved_u > 0
+                            and self.reserved_u + ef > budget):
+                        level, reserve = ServiceLevel.SHED, 0.0
+                    else:
+                        level, reserve = ServiceLevel.FULL, ef
+                else:
+                    full_cap = (self.full_watermark * budget
+                                if shallow_av[i] else budget)
+                    if (self.reserved_u == 0
+                            or self.reserved_u + ef <= full_cap):
+                        level, reserve = ServiceLevel.FULL, ef
+                    elif (shallow_av[i] and self.reserved_u
+                          + float(est_shallow[i]) <= budget):
+                        level, reserve = (ServiceLevel.SHALLOW,
+                                          float(est_shallow[i]))
+                    elif cache_av[i]:
+                        level, reserve = ServiceLevel.CACHED_ONLY, 0.0
+                    else:
+                        level, reserve = ServiceLevel.SHED, 0.0
+                self.reserved_u += reserve
+                self.level_counts[int(level)] += 1
+                levels[i] = int(level)
+                reserves[i] = reserve
+            n_shed = int((levels == int(ServiceLevel.SHED)).sum())
+            self.shed += n_shed
+            self.admitted += n - n_shed
+            self._g_reserved.set(self.reserved_u)
+        vals, counts = np.unique(levels, return_counts=True)
+        for v, c in zip(vals, counts):
+            self._decision_counters[int(v)].inc(int(c))
+        return levels, reserves, est_full
 
     def release(self, reserved_u: float, actual_u: Optional[float] = None,
                 qid: Optional[int] = None,

@@ -41,6 +41,7 @@ from repro.obs import health as _health
 from repro.policies import PolicyStore
 from repro.serving import EngineConfig, ServiceLevel
 from repro.serving.cache import canonical_query_key
+from repro.serving.slab import QueryKeyCache
 from repro.serving.engine import ServeResponse
 
 from repro.serving.telemetry import pct as _pct
@@ -160,6 +161,9 @@ class ReplicaSet:
         # them), so stale affinity can't pin post-swap traffic to a
         # replica whose entry is already invalid.
         self._key_owner: "OrderedDict" = OrderedDict()
+        # qid -> canonical key memo for the slab front door (append-only
+        # log keeps it sound; bounded inside).
+        self._qkey_cache = QueryKeyCache(system.log)
         self._lags: Deque[int] = deque(maxlen=cfg.window)
         self._epoch_lags: Deque[int] = deque(maxlen=cfg.window)
         self._g_epoch_lag = self.registry.gauge("index.epoch_lag")
@@ -446,6 +450,153 @@ class ReplicaSet:
         if not self._started:
             raise RuntimeError("ReplicaSet not started (use start() or `with`)")
         tickets = [self.submit(q) for q in qids]
+        out = []
+        for t in tickets:
+            res = t.result(timeout=timeout_s)
+            if res is None:
+                raise TimeoutError(
+                    f"qid {t.qid} not served within {timeout_s}s "
+                    f"(replica {t.replica})")
+            out.append(res)
+        return out
+
+    # ------------------------------------------------------- bulk (slabs)
+    def submit_many(self, qids) -> List[ClusterTicket]:
+        """Admit a whole arrival slab; returns one ticket per query.
+
+        The batched front door: canonical keys come from the qid memo,
+        owner lookups take ONE affinity-table lock, the whole slab is
+        priced by :meth:`AdmissionController.decide_many` (one ledger
+        lock, vectorized estimation), replica depths are snapshotted
+        once and updated locally as the slab routes, and each replica
+        receives its share through ``enqueue_many`` (one condition
+        acquisition + one wake per replica instead of per ticket).
+
+        Semantics match a loop of :meth:`submit` calls: every ticket
+        completes with a ServeResponse or an explicit Shed, admission
+        levels are identical to the sequential walk (decide_many is
+        bit-parity pinned), and level-transition / shed events land in
+        the flight recorder the same way.  Routing may differ from the
+        sequential interleaving only through the depth snapshot (one
+        sweep per slab, locally incremented, instead of re-reading
+        depths between arrivals) — response content is
+        replica-independent, so parity tests pin doc ids / scores / u,
+        not placement.
+        """
+        qids = [int(q) for q in qids]
+        n = len(qids)
+        if n == 0:
+            return []
+        log = self.system.log
+        cats = np.asarray(log.category)[np.asarray(qids, np.int64)]
+        key_of = self._qkey_cache.key
+        keys = [key_of(q, int(c)) for q, c in zip(qids, cats)]
+        version = self.store.version
+        epoch = getattr(self.system, "index_epoch", 0)
+        tracing = self.tracer.enabled
+        slab_span = (self.tracer.span("slab_admit", n=n) if tracing
+                     else None)
+        tickets = []
+        for q, c, k in zip(qids, cats, keys):
+            t = ClusterTicket(q, int(c), cache_key=k)
+            if tracing:
+                t.span = self.tracer.root_span("ticket", qid=q,
+                                               category=int(c))
+            tickets.append(t)
+        self._c_submitted.inc(n)
+        with self._lock:
+            self.n_submitted += n
+            owners = [self._key_owner.get((k, version, epoch))
+                      for k in keys]
+        replicas = self.replicas
+        owners = [o if (o is not None and replicas[o].cache_has(k))
+                  else None
+                  for o, k in zip(owners, keys)]
+        fallbacks = self.store.snapshot().fallbacks
+        levels, reserves, est_full = self.admission.decide_many(
+            qids,
+            cache_available=[o is not None for o in owners],
+            shallow_available=[int(c) in fallbacks for c in cats])
+        # Flight-recorder bookkeeping: transitions on CHANGE only, same
+        # contract as the sequential path.
+        transitions = []
+        with self._lock:
+            for i in range(n):
+                lvl = int(levels[i])
+                if self._last_level != lvl:
+                    transitions.append((lvl, self._last_level, qids[i]))
+                    self._last_level = lvl
+        for lvl, prev, qid in transitions:
+            self.events.record(
+                "level_transition", level=ServiceLevel(lvl).name,
+                prev=(ServiceLevel(prev).name if prev is not None
+                      else None), qid=qid)
+        depths = None
+        shed_level = int(ServiceLevel.SHED)
+        cached_only = int(ServiceLevel.CACHED_ONLY)
+        level_of = {int(l): l for l in ServiceLevel}   # skip the enum ctor
+        n_shed = 0
+        assigned = []                       # (okey, idx) owner updates
+        groups: "OrderedDict[int, list]" = OrderedDict()
+        for i, ticket in enumerate(tickets):
+            lvl = int(levels[i])
+            ticket.est_u = float(est_full[i])
+            ticket.reserved_u = float(reserves[i])
+            ticket.level = level_of[lvl]
+            if lvl == shed_level:
+                n_shed += 1
+                self.events.record("shed", where="admission",
+                                   reason="u_budget_hot", qid=ticket.qid)
+                self.tap.record(ticket.qid, ticket.category,
+                                ServiceLevel.SHED, index_epoch=epoch)
+                ticket.complete(Shed(ticket.qid, ticket.category,
+                                     ticket.est_u, "u_budget_hot"))
+                if ticket.span:
+                    ticket.span.end(level="SHED", reason="u_budget_hot")
+                continue
+            owner = owners[i]
+            if lvl == cached_only:
+                idx = owner
+            else:
+                if depths is None:
+                    depths = [r.depth() for r in replicas]
+                idx = self.router.pick(stable_query_hash(keys[i]),
+                                       depths, owner)
+                # Local view of the work this slab already placed: the
+                # sequential path re-reads depths per arrival and sees
+                # its own earlier enqueues the same way.
+                depths[idx] += 1
+            if ticket.span:
+                ticket.span.instant("route", replica=idx,
+                                    sticky=owner is not None
+                                    and idx == owner)
+                ticket.inbox_span = ticket.span.child("inbox", replica=idx)
+            assigned.append(((keys[i], version, epoch), idx))
+            groups.setdefault(idx, []).append(ticket)
+        if n_shed:
+            self._c_shed.inc(n_shed)
+            with self._lock:
+                self.n_shed += n_shed
+        if assigned:
+            with self._lock:
+                for okey, idx in assigned:
+                    self._key_owner[okey] = idx
+                    self._key_owner.move_to_end(okey)
+                while len(self._key_owner) > self.cfg.affinity_table:
+                    self._key_owner.popitem(last=False)
+        for idx, group in groups.items():
+            replicas[idx].enqueue_many(group)
+        if slab_span:
+            slab_span.end(shed=n_shed, routed=len(assigned))
+        return tickets
+
+    def serve_many(self, qids, timeout_s: float = 120.0) -> List[Result]:
+        """Synchronous slab driver: bulk-submit, wait for every ticket,
+        return results in submission order (the batched sibling of
+        :meth:`serve`)."""
+        if not self._started:
+            raise RuntimeError("ReplicaSet not started (use start() or `with`)")
+        tickets = self.submit_many(qids)
         out = []
         for t in tickets:
             res = t.result(timeout=timeout_s)

@@ -22,8 +22,9 @@ from repro.cluster.admission import Shed
 from repro.serving import ServiceLevel
 from repro.serving.engine import ServeResponse
 
-__all__ = ["REQUEST_BYTES", "decode_request", "decode_response",
-           "encode_request", "encode_response", "response_bytes"]
+__all__ = ["REQUEST_BYTES", "REQ_DTYPE", "decode_request",
+           "decode_request_block", "decode_response", "encode_request",
+           "encode_request_block", "encode_response", "response_bytes"]
 
 # ticket u64 | qid i64 | level i32 | category i32 | trace_root u64
 # trace_root is the ticket's root span id (0 = tracing off): the trace
@@ -31,6 +32,16 @@ __all__ = ["REQUEST_BYTES", "decode_request", "decode_response",
 # parent's per-ticket Perfetto track (docs/observability.md).
 _REQ = struct.Struct("<QqiiQ")
 REQUEST_BYTES = _REQ.size
+
+# The same record as a packed numpy dtype: a request SLAB is one
+# (n, REQUEST_BYTES) uint8 matrix built/read in a single view, so the
+# batch ring paths (`ShmRing.push_records`/`try_pop_records`) move B
+# tickets per memcpy.  Field-for-field identical to _REQ — pinned by an
+# assert here and a codec-parity test in tier-1.
+REQ_DTYPE = np.dtype([("ticket", "<u8"), ("qid", "<i8"),
+                      ("level", "<i4"), ("category", "<i4"),
+                      ("trace_root", "<u8")])
+assert REQ_DTYPE.itemsize == REQUEST_BYTES
 
 # ticket u64 | qid i64 | category i32 | level i32 | status u8 | cached u8
 # | pad u16 | u i32 | cand_cnt i32 | policy_version i32 | index_epoch i32
@@ -58,6 +69,29 @@ def encode_request(ticket_id: int, qid: int, level: ServiceLevel,
 def decode_request(payload: bytes) -> Tuple[int, int, ServiceLevel, int, int]:
     ticket_id, qid, level, category, trace_root = _REQ.unpack(payload)
     return ticket_id, qid, ServiceLevel(level), category, trace_root
+
+
+def encode_request_block(tickets, qids, levels, categories,
+                         trace_roots=None) -> np.ndarray:
+    """Pack a whole request slab into one (n, REQUEST_BYTES) uint8
+    matrix — five column stores instead of n struct packs."""
+    n = len(tickets)
+    block = np.empty(n, REQ_DTYPE)
+    block["ticket"] = np.asarray(tickets, np.uint64)
+    block["qid"] = np.asarray(qids, np.int64)
+    block["level"] = np.asarray(levels, np.int32)
+    block["category"] = np.asarray(categories, np.int32)
+    block["trace_root"] = (0 if trace_roots is None
+                           else np.asarray(trace_roots, np.uint64))
+    return block.view(np.uint8).reshape(n, REQUEST_BYTES)
+
+
+def decode_request_block(recs: np.ndarray) -> np.ndarray:
+    """Inverse of :meth:`encode_request_block`: an (r, REQUEST_BYTES)
+    uint8 matrix (e.g. from ``ShmRing.try_pop_records``) viewed as a
+    structured array — fields are columns, no per-record unpack."""
+    recs = np.ascontiguousarray(recs, np.uint8)
+    return recs.reshape(-1).view(REQ_DTYPE)
 
 
 # ------------------------------------------------------------ responses

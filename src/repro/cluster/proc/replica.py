@@ -37,7 +37,7 @@ from repro.cluster.replica import ClusterTicket, Result
 from repro.obs import NULL_TRACER, Tracer, adjust_remote_entries
 
 from .messages import (REQUEST_BYTES, decode_response, encode_request,
-                       response_bytes)
+                       encode_request_block, response_bytes)
 from .ring import RingClosed, ShmRing
 
 __all__ = ["ProcessReplica"]
@@ -257,6 +257,55 @@ class ProcessReplica:
             # ticket's first-completion-wins contract.
             pass
 
+    def enqueue_many(self, tickets) -> None:
+        """Batch ingest: register the whole group under one lock, pack
+        it as a request slab, and cross the ring in whole-batch
+        memcpys (`ShmRing.push_records`).  Same failure contract as
+        :meth:`enqueue` — a mid-push death leaves the group
+        outstanding for the respawn requeue."""
+        if not tickets:
+            return
+        tids = []
+        with self._mu:
+            if self._dead:
+                reason = "replica_dead"
+            elif self._stopping:
+                reason = "replica_shutdown"
+            else:
+                reason = None
+                for ticket in tickets:
+                    ticket.replica = self.idx
+                    tid = self._next_tid
+                    self._next_tid += 1
+                    self._outstanding[tid] = ticket
+                    tids.append(tid)
+                self.n_enqueued += len(tickets)
+        if reason is not None:
+            for ticket in tickets:
+                ticket.replica = self.idx
+                self._finish(ticket, Shed(ticket.qid, ticket.category,
+                                          ticket.est_u, reason))
+            return
+        roots = None
+        for i, ticket in enumerate(tickets):
+            if ticket.inbox_span:
+                ticket.inbox_span.end()
+                ticket.inbox_span = None
+            if ticket.span:
+                if roots is None:
+                    roots = [0] * len(tickets)
+                roots[i] = ticket.span.span_id
+                ticket.ring_span = ticket.span.child("ring",
+                                                     replica=self.idx)
+        block = encode_request_block(
+            tids, [t.qid for t in tickets],
+            [int(t.level) for t in tickets],
+            [t.category for t in tickets], roots)
+        try:
+            self._req.push_records(block, alive=self._alive)
+        except (RingClosed, ValueError, TypeError):
+            pass                      # respawn requeues the group
+
     def _finish(self, ticket: ClusterTicket, result: Result) -> None:
         if ticket.ring_span:
             # Ends at response pop (or shed): the parent-side cover for
@@ -389,18 +438,16 @@ class ProcessReplica:
             return False
         progressed = False
         try:
-            for payload in resp.pop_many(limit=self.ring_slots):  # noqa: B007
+            for payload in resp.try_pop_batch(limit=self.ring_slots):
                 progressed = True
                 tid, result = decode_response(payload)
                 with self._mu:
                     ticket = self._outstanding.pop(tid, None)
                     if (ticket is not None and ticket.cache_key is not None
                             and not isinstance(result, Shed)):
-                        self._cache_mirror[ticket.cache_key] = (
-                            result.policy_version, result.index_epoch)
-                        self._cache_mirror.move_to_end(ticket.cache_key)
-                        while len(self._cache_mirror) > self._mirror_cap:
-                            self._cache_mirror.popitem(last=False)
+                        self._mirror_record(ticket.cache_key,
+                                            result.policy_version,
+                                            result.index_epoch)
                     if not isinstance(result, Shed):
                         # Responses are the freshest version signal the
                         # parent has between control acks.
@@ -413,6 +460,15 @@ class ProcessReplica:
         except (RingClosed, ValueError, TypeError):
             pass                      # ring closed mid-swap
         return progressed
+
+    def _mirror_record(self, cache_key, policy_version: int,
+                       index_epoch: int) -> None:
+        """Note the versions ``cache_key``'s last response was produced
+        under (LRU, bounded at ``_mirror_cap``).  Caller holds _mu."""
+        self._cache_mirror[cache_key] = (policy_version, index_epoch)
+        self._cache_mirror.move_to_end(cache_key)
+        while len(self._cache_mirror) > self._mirror_cap:
+            self._cache_mirror.popitem(last=False)
 
     def _drain_conn(self) -> bool:
         progressed = False

@@ -52,7 +52,9 @@ from __future__ import annotations
 import struct
 import time
 from multiprocessing import shared_memory
-from typing import Iterator, Optional
+from typing import Iterator, List, Optional
+
+import numpy as np
 
 __all__ = ["RingClosed", "RingFull", "ShmRing"]
 
@@ -107,6 +109,11 @@ class ShmRing:
         # Private positions — the shared head/tail words are advisory.
         self._head = 0
         self._tail = 0
+        # Lazy numpy views for the batch paths (see _views): strided
+        # windows over the SAME shared buffer the scalar path uses.
+        self._np_seq = None
+        self._np_len = None
+        self._np_payload = None
 
     # ------------------------------------------------------------ lifecycle
     @classmethod
@@ -145,6 +152,10 @@ class ShmRing:
         if self._closed:
             return
         self._closed = True
+        # Drop the numpy views BEFORE the memoryview: each one holds a
+        # buffer export of the shm mapping, and SharedMemory.close()
+        # raises BufferError while any export is alive.
+        self._np_seq = self._np_len = self._np_payload = None
         self._buf = None
         self._shm.close()
         if self._owner:
@@ -297,5 +308,244 @@ class ShmRing:
                 raise RingClosed("producer gone")
             if deadline is not None and time.monotonic() > deadline:
                 return None
+            time.sleep(sleep_s)
+            sleep_s = min(sleep_s * 2, _PARK_MAX_S)
+
+    # ------------------------------------------------------- batch transfer
+    # The batch paths move B records per ring operation: ONE bulk copy
+    # into the payload region, ONE gate publish (slot ``pos``'s sequence
+    # word, stored last — the consumer pops strictly in order, so slots
+    # pos+1..pos+k-1 published before it stay invisible until the gate
+    # opens), and one park/wake per batch episode instead of per record.
+    # A batch never spans the wraparound: each call covers one
+    # contiguous slot run and the caller loops — a split batch lands as
+    # two (whole) publishes, records are never torn.
+
+    def _views(self):
+        """Strided numpy windows over the slot region (lazy; shared
+        with the scalar path byte-for-byte).  seq/len are per-slot
+        columns; payload is the (n_slots, slot_bytes) data matrix."""
+        if self._np_seq is None:
+            if self._closed:
+                raise RingClosed("ring closed")
+            n, stride = self.n_slots, self._slot_stride
+            raw = np.frombuffer(self._buf, np.uint8,
+                                count=_HDR_BYTES + n * stride)
+            slots = raw[_HDR_BYTES:].reshape(n, stride)
+            self._np_seq = slots[:, :8].view("<u8")[:, 0]
+            self._np_len = slots[:, 8:12].view("<u4")[:, 0]
+            self._np_payload = slots[:, _SLOT_HDR.size:
+                                     _SLOT_HDR.size + self.slot_bytes]
+        return self._np_seq, self._np_len, self._np_payload
+
+    def _free_run(self, seq, want: int):
+        """(pos, j0, k): producer-side length of the free contiguous
+        slot run starting at the tail, capped at ``want`` and the lap
+        boundary."""
+        pos = self._tail
+        j0 = pos & (self.n_slots - 1)
+        run = min(want, self.n_slots - j0)
+        free = seq[j0:j0 + run] == (
+            pos + np.arange(run, dtype=np.uint64))
+        k = int(run if free.all() else np.argmin(free))
+        return pos, j0, k
+
+    def _publish(self, seq, pos: int, j0: int, k: int) -> None:
+        if k > 1:
+            seq[j0 + 1:j0 + k] = pos + 1 + np.arange(1, k, dtype=np.uint64)
+        seq[j0] = pos + 1                       # the gate
+        self._tail = pos + k
+        self._store_u64(_OFF_TAIL, self._tail)
+
+    def try_push_records(self, recs) -> int:
+        """Publish a FIFO prefix of ``recs`` — an (m, rec_bytes) uint8
+        matrix of fixed-size records — in one bulk copy + one gate
+        store.  Returns how many were pushed (0 when full); never
+        writes a partial record."""
+        if self._closed:
+            raise RingClosed("ring closed")
+        recs = np.ascontiguousarray(recs, np.uint8)
+        if recs.ndim != 2:
+            raise ValueError(
+                f"records must be an (m, rec_bytes) matrix, "
+                f"got shape {recs.shape}")
+        m, rec_bytes = recs.shape
+        if rec_bytes > self.slot_bytes:
+            raise ValueError(
+                f"record of {rec_bytes} bytes exceeds slot capacity "
+                f"{self.slot_bytes}; oversized messages must be rejected "
+                "at the codec layer, not silently truncated")
+        if m == 0:
+            return 0
+        seq, lenv, payload = self._views()
+        pos, j0, k = self._free_run(seq, m)
+        if k == 0:
+            return 0
+        payload[j0:j0 + k, :rec_bytes] = recs[:k]
+        lenv[j0:j0 + k] = rec_bytes
+        self._publish(seq, pos, j0, k)
+        return k
+
+    def try_push_many(self, payloads: List[bytes]) -> int:
+        """Variable-length sibling of :meth:`try_push_records`: pushes
+        a FIFO prefix of ``payloads`` with one gate store.  EVERY
+        payload is length-validated before ANY slot is written, so an
+        oversized record inside a batch raises without corrupting the
+        sequence protocol or publishing a partial batch."""
+        if self._closed:
+            raise RingClosed("ring closed")
+        for p in payloads:
+            if len(p) > self.slot_bytes:
+                raise ValueError(
+                    f"payload of {len(p)} bytes exceeds slot capacity "
+                    f"{self.slot_bytes}; oversized messages must be "
+                    "rejected at the codec layer, not silently truncated")
+        if not payloads:
+            return 0
+        seq, lenv, payload = self._views()
+        pos, j0, k = self._free_run(seq, len(payloads))
+        if k == 0:
+            return 0
+        for i in range(k):
+            p = payloads[i]
+            payload[j0 + i, :len(p)] = np.frombuffer(p, np.uint8)
+            lenv[j0 + i] = len(p)
+        self._publish(seq, pos, j0, k)
+        return k
+
+    def _push_all(self, pusher, total: int,
+                  deadline_s: Optional[float] = None,
+                  alive: Optional[callable] = None) -> None:
+        """Drive a try_push_* callable until ``total`` records landed,
+        with the spin-then-park wait counted ONCE per batch episode."""
+        done = 0
+        spins = 0
+        sleep_s = _PARK_MIN_S
+        parked = False
+        while done < total:
+            k = pusher(done)
+            if k:
+                done += k
+                spins = 0
+                continue
+            spins += 1
+            if spins < _SPIN_ITERS:
+                continue
+            if not parked:
+                parked = True
+                self._bump_u64(_OFF_PROD_PARKS)
+            if alive is not None and not alive():
+                raise RingClosed("consumer gone")
+            if deadline_s is not None and time.monotonic() > deadline_s:
+                raise RingClosed("push deadline exceeded")
+            time.sleep(sleep_s)
+            sleep_s = min(sleep_s * 2, _PARK_MAX_S)
+
+    def push_records(self, recs,
+                     deadline_s: Optional[float] = None,
+                     alive: Optional[callable] = None) -> None:
+        """Blocking fixed-size batch push.  A batch larger than the
+        free slot run lands as several whole sub-batches (split at the
+        wraparound / occupancy boundary, records never torn)."""
+        recs = np.ascontiguousarray(recs, np.uint8)
+        self._push_all(lambda done: self.try_push_records(recs[done:]),
+                       recs.shape[0], deadline_s=deadline_s, alive=alive)
+
+    def push_many(self, payloads: List[bytes],
+                  deadline_s: Optional[float] = None,
+                  alive: Optional[callable] = None) -> None:
+        """Blocking variable-length batch push (validates every length
+        up front; see :meth:`try_push_many`)."""
+        for p in payloads:
+            if len(p) > self.slot_bytes:
+                raise ValueError(
+                    f"payload of {len(p)} bytes exceeds slot capacity "
+                    f"{self.slot_bytes}; oversized messages must be "
+                    "rejected at the codec layer, not silently truncated")
+        self._push_all(lambda done: self.try_push_many(payloads[done:]),
+                       len(payloads), deadline_s=deadline_s, alive=alive)
+
+    def _ready_run(self, seq, want: int):
+        """(pos, j0, r): consumer-side length of the published run
+        starting at the head, capped at ``want`` and the lap
+        boundary."""
+        pos = self._head
+        j0 = pos & (self.n_slots - 1)
+        run = min(want, self.n_slots - j0)
+        if run <= 0:
+            return pos, j0, 0
+        ready = seq[j0:j0 + run] == (
+            pos + 1 + np.arange(run, dtype=np.uint64))
+        r = int(run if ready.all() else np.argmin(ready))
+        return pos, j0, r
+
+    def _recycle(self, seq, pos: int, j0: int, r: int) -> None:
+        # Mirror of _publish: later slots recycle first, slot ``pos``'s
+        # store is the gate — the producer claims slots strictly in
+        # order, so no slot frees up before the whole batch is copied.
+        n = self.n_slots
+        if r > 1:
+            seq[j0 + 1:j0 + r] = pos + n + np.arange(1, r, dtype=np.uint64)
+        seq[j0] = pos + n
+        self._head = pos + r
+        self._store_u64(_OFF_HEAD, self._head)
+
+    def try_pop_records(self, limit: int, rec_bytes: int) -> np.ndarray:
+        """Pop up to ``limit`` fixed-size records in one gather; returns
+        an owned (r, rec_bytes) uint8 matrix (possibly empty)."""
+        if self._closed:
+            raise RingClosed("ring closed")
+        seq, lenv, payload = self._views()
+        pos, j0, r = self._ready_run(seq, int(limit))
+        if r == 0:
+            return np.empty((0, rec_bytes), np.uint8)
+        if not (lenv[j0:j0 + r] == rec_bytes).all():
+            raise ValueError(
+                f"fixed-size pop of {rec_bytes}-byte records found other "
+                f"lengths {sorted(set(int(x) for x in lenv[j0:j0 + r]))} — "
+                "producer/consumer codec mismatch")
+        out = payload[j0:j0 + r, :rec_bytes].copy()
+        self._recycle(seq, pos, j0, r)
+        return out
+
+    def try_pop_batch(self, limit: int = 64) -> List[bytes]:
+        """Variable-length batch pop: up to ``limit`` payloads with one
+        batched recycle (one gate store, not one per message)."""
+        if self._closed:
+            raise RingClosed("ring closed")
+        seq, lenv, payload = self._views()
+        pos, j0, r = self._ready_run(seq, int(limit))
+        if r == 0:
+            return []
+        out = [bytes(payload[j0 + i, :int(lenv[j0 + i])]) for i in range(r)]
+        self._recycle(seq, pos, j0, r)
+        return out
+
+    def pop_batch(self, limit: int = 64,
+                  timeout_s: Optional[float] = None,
+                  alive: Optional[callable] = None) -> List[bytes]:
+        """Blocking variable-length batch pop; empty list on timeout.
+        Parks once per empty episode and counts one wake per batch."""
+        deadline = (time.monotonic() + timeout_s
+                    if timeout_s is not None else None)
+        spins = 0
+        sleep_s = _PARK_MIN_S
+        parked = False
+        while True:
+            out = self.try_pop_batch(limit)
+            if out:
+                if parked:
+                    self._bump_u64(_OFF_WAKES)
+                return out
+            spins += 1
+            if spins < _SPIN_ITERS:
+                continue
+            if not parked:
+                parked = True
+                self._bump_u64(_OFF_CONS_PARKS)
+            if alive is not None and not alive():
+                raise RingClosed("producer gone")
+            if deadline is not None and time.monotonic() > deadline:
+                return []
             time.sleep(sleep_s)
             sleep_s = min(sleep_s * 2, _PARK_MAX_S)

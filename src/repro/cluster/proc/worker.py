@@ -41,7 +41,7 @@ from typing import Any, Dict, List, Optional, Tuple
 
 from repro.serving.levels import ServiceLevel
 
-from .messages import decode_request, encode_response
+from .messages import (REQUEST_BYTES, decode_request_block, encode_response)
 from .ring import RingClosed, ShmRing
 
 __all__ = ["WorkerSpec", "worker_main"]
@@ -126,6 +126,8 @@ def _serve(spec: WorkerSpec, conn) -> None:
     from repro.obs import NULL_TRACER, TraceLog, Tracer
     from repro.policies import PolicyStore
     from repro.serving import AdmissionError, CacheOnlyMiss, ServeEngine
+    from repro.serving.engine import (SLAB_ADMISSION_REJECT,
+                                      SLAB_CACHED_ONLY_MISS)
     from repro.core.versioned import StaleVersionError
 
     req = ShmRing.attach(*spec.req_ring)
@@ -201,6 +203,46 @@ def _serve(spec: WorkerSpec, conn) -> None:
         if r is not None:
             push_response(rid, r)
 
+    def submit_block(recs) -> None:
+        """Slab submit for an untraced request block: one engine pass
+        (vectorized admission + one slab span), per-record status
+        reconciliation — same shed semantics as :func:`submit_one`."""
+        try:
+            rids, statuses = engine.submit_slab(
+                recs["qid"], levels=recs["level"])
+        except StaleVersionError:
+            # Raised before any request id was assigned: the whole
+            # block retries after the next control drain.
+            for rec in recs:
+                retry.append((int(rec["ticket"]), int(rec["qid"]),
+                              ServiceLevel(int(rec["level"])),
+                              int(rec["category"]), None))
+            return
+        except Exception:                         # noqa: BLE001
+            # Per-record fallback isolates a poisoned request.
+            for rec in recs:
+                submit_one(int(rec["ticket"]), int(rec["qid"]),
+                           ServiceLevel(int(rec["level"])),
+                           int(rec["category"]))
+            return
+        done = []
+        for i, rec in enumerate(recs):
+            tid, qid, cat = (int(rec["ticket"]), int(rec["qid"]),
+                             int(rec["category"]))
+            st = int(statuses[i])
+            if st == SLAB_ADMISSION_REJECT:
+                shed(tid, qid, cat, "replica_queue_full")
+            elif st == SLAB_CACHED_ONLY_MISS:
+                shed(tid, qid, cat, "cached_only_miss")
+            else:
+                rid = int(rids[i])
+                rid2ticket[rid] = (tid, qid, cat, None)
+                r = engine.take_response(rid)     # cache hits are inline
+                if r is not None:
+                    done.append((rid, r))
+        if done:
+            push_responses(done)
+
     def push_response(rid: int, r) -> None:
         tid, _qid, _cat, span = rid2ticket.pop(rid)
         resp.push(encode_response(tid, r, keep))
@@ -208,6 +250,19 @@ def _serve(spec: WorkerSpec, conn) -> None:
             # The worker span covers decode → response-on-ring; its
             # engine children (queue/batch/execute/respond) are already
             # in the log on the same ticket track.
+            span.end(cached=r.cached, u=r.u)
+
+    def push_responses(done: List[Tuple[int, Any]]) -> None:
+        """Batch variant: B encoded responses cross the ring with one
+        sequence-word publish (`ShmRing.push_many`)."""
+        payloads, ended = [], []
+        for rid, r in done:
+            tid, _qid, _cat, span = rid2ticket.pop(rid)
+            payloads.append(encode_response(tid, r, keep))
+            if span:
+                ended.append((span, r))
+        resp.push_many(payloads)
+        for span, r in ended:
             span.end(cached=r.cached, u=r.u)
 
     def handle_control(msg) -> None:
@@ -247,16 +302,23 @@ def _serve(spec: WorkerSpec, conn) -> None:
             # Fast shutdown: abandon with explicit sheds, never serve.
             shed_outstanding("replica_shutdown")
             break
-        n_polled = 0
-        for payload in req.pop_many(limit=_DRAIN_LIMIT):
-            tid, qid, level, category, trace_root = decode_request(payload)
-            span = (tracer.span("worker", track=f"ticket #{trace_root}",
-                                qid=qid)
-                    if trace_root and tracer.enabled else None)
-            submit_one(tid, qid, level, category, span)
-            n_polled += 1
-        if n_polled:
+        raw = req.try_pop_records(_DRAIN_LIMIT, REQUEST_BYTES)
+        if raw.shape[0]:
             progressed = True
+            recs = decode_request_block(raw)
+            if (raw.shape[0] > 1 and not tracer.enabled
+                    and not recs["trace_root"].any()):
+                submit_block(recs)                # slab fast path
+            else:
+                for rec in recs:
+                    trace_root = int(rec["trace_root"])
+                    span = (tracer.span("worker",
+                                        track=f"ticket #{trace_root}",
+                                        qid=int(rec["qid"]))
+                            if trace_root and tracer.enabled else None)
+                    submit_one(int(rec["ticket"]), int(rec["qid"]),
+                               ServiceLevel(int(rec["level"])),
+                               int(rec["category"]), span)
         if retry:
             batch = list(retry)
             retry.clear()
@@ -275,11 +337,11 @@ def _serve(spec: WorkerSpec, conn) -> None:
             if failures >= max_failures:
                 shed_outstanding(f"replica_error:{type(e).__name__}")
                 failures = 0
-        for rid in list(rid2ticket):
-            r = engine.take_response(rid)
-            if r is not None:
-                push_response(rid, r)
-                progressed = True
+        done = [(rid, r) for rid in list(rid2ticket)
+                if (r := engine.take_response(rid)) is not None]
+        if done:
+            push_responses(done)
+            progressed = True
         req.set_depth_hint(engine.queue_depth + engine.inflight
                            + len(retry))
         req.stamp_heartbeat()

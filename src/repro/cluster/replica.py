@@ -26,7 +26,8 @@ from repro.core.versioned import StaleVersionError
 from repro.obs import NULL_TRACER, Tracer
 from repro.serving import (AdmissionError, CacheOnlyMiss, EngineConfig,
                            ServeEngine, ServiceLevel)
-from repro.serving.engine import ServeResponse
+from repro.serving.engine import (SLAB_ADMISSION_REJECT,
+                                  SLAB_CACHED_ONLY_MISS, ServeResponse)
 from repro.serving.telemetry import Telemetry
 
 from .admission import Shed
@@ -61,7 +62,13 @@ class ClusterTicket:
         self.ring_span = None
         self.t_submit = Telemetry.now()
         self.t_done: Optional[float] = None
-        self._event = threading.Event()
+        # The Event is created LAZILY, only when a waiter arrives before
+        # completion: on the cache-hot slab path nearly every ticket
+        # completes inline at submit, and an eager Event costs an Event
+        # + Condition + two locks + a waiter deque per ticket — pure
+        # allocation/GC pressure that the ratio benches see directly.
+        self._event: Optional[threading.Event] = None
+        self._done = False
         self._done_lock = threading.Lock()
         self._result: Optional[Result] = None
         self._inbox_work = 0          # 1 while counted as a likely miss
@@ -74,19 +81,29 @@ class ClusterTicket:
         (telemetry, tap records, ledger releases) must gate on the
         return value, or a retried ticket is double-counted."""
         with self._done_lock:
-            if self._event.is_set():
+            if self._done:
                 return False
             self.t_done = Telemetry.now()
             self._result = result
-            self._event.set()
+            self._done = True
+            if self._event is not None:
+                self._event.set()
             return True
 
     def done(self) -> bool:
-        return self._event.is_set()
+        return self._done
 
     def result(self, timeout: Optional[float] = None) -> Optional[Result]:
         """The ServeResponse or Shed; None only on timeout."""
-        if not self._event.wait(timeout):
+        if self._done:
+            return self._result
+        with self._done_lock:
+            if self._done:
+                return self._result
+            ev = self._event
+            if ev is None:
+                ev = self._event = threading.Event()
+        if not ev.wait(timeout):
             return None
         return self._result
 
@@ -173,6 +190,31 @@ class Replica:
                 self._inbox_work += 1
             self._inbox.append(ticket)
             self.n_enqueued += 1
+            self._cond.notify()
+
+    def enqueue_many(self, tickets) -> None:
+        """Batch ingest: the likely-hit probes (engine-cache reads, safe
+        under the GIL) run outside the lock, then the whole group lands
+        in the inbox under ONE condition acquisition with ONE wake."""
+        if not tickets:
+            return
+        for t in tickets:
+            t.replica = self.idx
+        likely = [t.cache_key is not None
+                  and self.engine.cache_has(t.cache_key)
+                  for t in tickets]
+        with self._cond:
+            if self._stopping:
+                for t in tickets:
+                    self._finish(t, Shed(t.qid, t.category, t.est_u,
+                                         "replica_shutdown"))
+                return
+            for t, hit in zip(tickets, likely):
+                if not hit:
+                    t._inbox_work = 1
+                    self._inbox_work += 1
+                self._inbox.append(t)
+            self.n_enqueued += len(tickets)
             self._cond.notify()
 
     def depth(self) -> int:
@@ -287,6 +329,50 @@ class Replica:
         if resp is not None:
             self._finish(self._rid2ticket.pop(rid), resp)
 
+    def _submit_batch(self, tickets) -> None:
+        """Feed a drained inbox group to the engine as ONE slab
+        (`ServeEngine.submit_slab`): one refresh/validate, bulk cache
+        probes and telemetry, per-ticket outcomes reconciled from the
+        status array.  Used on the untraced path; per-ticket spans keep
+        the scalar path so trace structure is unchanged when tracing."""
+        for t in tickets:
+            if t.inbox_span:
+                t.inbox_span.end()
+                t.inbox_span = None
+        try:
+            rids, statuses = self.engine.submit_slab(
+                [t.qid for t in tickets],
+                levels=[int(t.level) for t in tickets])
+        except StaleVersionError:
+            # Same retry contract as the scalar path: back to the inbox
+            # front, FIFO preserved, served after the next refresh.
+            with self._cond:
+                for t in reversed(tickets):
+                    t._inbox_work = 1
+                    self._inbox_work += 1
+                    self._inbox.appendleft(t)
+            return
+        except Exception:                         # noqa: BLE001
+            # Slab-level failure: fall back to per-ticket submits so a
+            # single poisoned arrival sheds alone instead of taking the
+            # whole group down with it.
+            for t in tickets:
+                self._submit_one(t)
+            return
+        for t, rid, status in zip(tickets, rids, statuses):
+            if status == SLAB_ADMISSION_REJECT:
+                self._finish(t, Shed(t.qid, t.category, t.est_u,
+                                     "replica_queue_full"))
+            elif status == SLAB_CACHED_ONLY_MISS:
+                self._finish(t, Shed(t.qid, t.category, t.est_u,
+                                     "cached_only_miss"))
+            else:
+                rid = int(rid)
+                self._rid2ticket[rid] = t
+                resp = self.engine.take_response(rid)   # inline hits
+                if resp is not None:
+                    self._finish(self._rid2ticket.pop(rid), resp)
+
     def _collect(self) -> None:
         for rid in list(self._rid2ticket):
             resp = self.engine.take_response(rid)
@@ -322,8 +408,11 @@ class Replica:
                     # a fast shutdown must not wait out rollouts.
                     self._fail_outstanding("replica_shutdown")
                 break
-            for t in tickets:
-                self._submit_one(t)
+            if len(tickets) > 1 and not self.engine.tracer.enabled:
+                self._submit_batch(tickets)
+            else:
+                for t in tickets:
+                    self._submit_one(t)
             try:
                 with self._cond:
                     inbox_empty = not self._inbox

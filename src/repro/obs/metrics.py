@@ -30,6 +30,8 @@ import bisect
 import threading
 from typing import Dict, Iterable, List, Mapping, Optional, Sequence, Tuple
 
+import numpy as np
+
 __all__ = ["Counter", "Gauge", "Histogram", "MetricsRegistry",
            "metric_key", "merge_snapshots"]
 
@@ -123,6 +125,32 @@ class Histogram:
                 self.min = v
             if self.max is None or v > self.max:
                 self.max = v
+
+    def record_many(self, values) -> None:
+        """Record a batch of observations under ONE lock acquisition.
+
+        Bucketing matches :meth:`record` exactly —
+        ``np.searchsorted(edges, v, side="left")`` is
+        ``bisect.bisect_left`` elementwise — so a slab recorded here is
+        indistinguishable from a loop of scalar records."""
+        v = np.asarray(values, np.float64).ravel()
+        if v.size == 0:
+            return
+        idx = np.searchsorted(np.asarray(self.edges), v, side="left")
+        binned = np.bincount(idx, minlength=len(self.edges) + 1)
+        vmin = float(v.min())
+        vmax = float(v.max())
+        vsum = float(v.sum())
+        n = int(v.size)
+        with self._lock:
+            for i in np.nonzero(binned)[0]:
+                self.counts[int(i)] += int(binned[i])
+            self.sum += vsum
+            self.count += n
+            if self.min is None or vmin < self.min:
+                self.min = vmin
+            if self.max is None or vmax > self.max:
+                self.max = vmax
 
     def quantile(self, q: float) -> float:
         """Bucket-resolution quantile (upper edge of the bucket holding

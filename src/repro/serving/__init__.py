@@ -5,20 +5,26 @@ pre-compiled per-(bucket, policy-structure) rollout → scatter–gather
 merge → L1 prune → respond, with per-request latency/u telemetry.
 Policies come from a versioned `repro.policies.PolicyStore` snapshot.
 """
+from repro.serving.array_cache import ArrayResultCache
 from repro.serving.batcher import (BucketConfig, MicroBatch, PendingRequest,
                                    ShapeBucketBatcher, bucket_size_for)
 from repro.serving.cache import LRUResultCache, canonical_query_key
-from repro.serving.engine import (AdmissionError, CacheOnlyMiss, EngineConfig,
+from repro.serving.engine import (SLAB_ADMISSION_REJECT,
+                                  SLAB_CACHED_ONLY_MISS, SLAB_OK,
+                                  AdmissionError, CacheOnlyMiss, EngineConfig,
                                   ServeEngine, ServeResponse)
 from repro.serving.executor import (ShardedExecutor, available_backends,
                                     register_rollout_backend)
 from repro.serving.levels import EXECUTED_LEVELS, ServiceLevel
+from repro.serving.slab import QueryKeyCache, TicketSlab
 from repro.serving.telemetry import Telemetry
 
 __all__ = [
-    "AdmissionError", "BucketConfig", "CacheOnlyMiss", "EXECUTED_LEVELS",
-    "EngineConfig", "LRUResultCache", "MicroBatch", "PendingRequest",
-    "ServeEngine", "ServeResponse", "ServiceLevel", "ShapeBucketBatcher",
-    "ShardedExecutor", "Telemetry", "available_backends", "bucket_size_for",
+    "AdmissionError", "ArrayResultCache", "BucketConfig", "CacheOnlyMiss",
+    "EXECUTED_LEVELS", "EngineConfig", "LRUResultCache", "MicroBatch",
+    "PendingRequest", "QueryKeyCache", "SLAB_ADMISSION_REJECT",
+    "SLAB_CACHED_ONLY_MISS", "SLAB_OK", "ServeEngine", "ServeResponse",
+    "ServiceLevel", "ShapeBucketBatcher", "ShardedExecutor", "Telemetry",
+    "TicketSlab", "available_backends", "bucket_size_for",
     "canonical_query_key", "register_rollout_backend",
 ]

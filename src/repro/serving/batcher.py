@@ -110,6 +110,21 @@ class ShapeBucketBatcher:
     def enqueue(self, req: PendingRequest) -> None:
         self._queues.setdefault(self._key(req), deque()).append(req)
 
+    def enqueue_many(self, reqs: List[PendingRequest]) -> None:
+        """Append a slab of admitted requests in order — same FIFO the
+        scalar loop would produce, one queue resolve per run of equal
+        (category, level)."""
+        queues = self._queues
+        last_key, q = None, None
+        for req in reqs:
+            key = (req.category, int(req.level))
+            if key != last_key:
+                q = queues.get(key)
+                if q is None:
+                    q = queues.setdefault(key, deque())
+                last_key = key
+            q.append(req)
+
     def requeue(self, reqs: List[PendingRequest]) -> None:
         """Put a drained (but unexecuted) micro-batch back at the FRONT
         of its queues, preserving FIFO order for the retry."""

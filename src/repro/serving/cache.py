@@ -103,6 +103,21 @@ class LRUResultCache:
         incompatible entry) without promoting anything."""
         self._misses.inc()
 
+    def touch(self, key: Hashable) -> None:
+        """Recency-only promotion for a caller that already ``peek``ed
+        and accepted the entry (the slab hit path): refresh LRU order
+        without re-counting a hit."""
+        if self.capacity > 0 and key in self._entries:
+            self._entries.move_to_end(key)
+
+    def add_stats(self, hits: int = 0, misses: int = 0) -> None:
+        """Bulk hit/miss accounting for slab probes (one counter lock
+        per slab instead of one per request)."""
+        if hits:
+            self._hits.inc(int(hits))
+        if misses:
+            self._misses.inc(int(misses))
+
     def put(self, key: Hashable, value: Any) -> None:
         if self.capacity <= 0:
             return

@@ -28,6 +28,7 @@ import numpy as np
 
 from repro.obs import NULL_TRACER, Tracer
 from repro.policies import Policy, PolicyStore
+from repro.serving.array_cache import ArrayResultCache
 from repro.serving.batcher import (
     BucketConfig, MicroBatch, PendingRequest, ShapeBucketBatcher,
 )
@@ -35,10 +36,20 @@ from repro.serving.cache import (LRUResultCache, canonical_query_key,
                                  versioned_key)
 from repro.serving.executor import ShardedExecutor
 from repro.serving.levels import ServiceLevel
+from repro.serving.slab import QueryKeyCache, TicketSlab
 from repro.serving.telemetry import Telemetry
 
 __all__ = ["EngineConfig", "ServeResponse", "AdmissionError",
-           "CacheOnlyMiss", "ServeEngine"]
+           "CacheOnlyMiss", "ServeEngine", "SLAB_OK",
+           "SLAB_ADMISSION_REJECT", "SLAB_CACHED_ONLY_MISS"]
+
+# Per-request statuses returned by ``submit_slab`` (it never raises for
+# an individual arrival — a slab is all-or-nothing only for *systemic*
+# failures like a stale snapshot, so callers that mapped ids to tickets
+# before submitting can always reconcile every lane).
+SLAB_OK = 0
+SLAB_ADMISSION_REJECT = 1
+SLAB_CACHED_ONLY_MISS = 2
 
 
 @dataclasses.dataclass(frozen=True)
@@ -52,6 +63,7 @@ class EngineConfig:
     max_completed: int = 65536     # unclaimed-response bound (oldest evicted)
     backend: str = "xla"           # rollout backend (see executor)
     auto_refresh: bool = True      # pull the head policy snapshot per drain
+    cache_impl: str = "array"      # "array" (hot path) | "lru" (dict oracle)
 
 
 class AdmissionError(RuntimeError):
@@ -133,9 +145,21 @@ class ServeEngine:
         self._g_epoch.set(self.index_epoch)
         self.batcher = ShapeBucketBatcher(self.bucket_cfg)
         # The cache shares the engine's registry so its hit/miss/
-        # eviction counters ride the same mergeable snapshot.
-        self.cache = LRUResultCache(cfg.cache_capacity,
-                                    registry=self.telemetry.registry)
+        # eviction counters ride the same mergeable snapshot.  "array"
+        # is the production hot path (open addressing over preallocated
+        # slabs, CLOCK eviction); "lru" keeps the dict/object oracle.
+        if cfg.cache_impl == "array":
+            self.cache = ArrayResultCache(cfg.cache_capacity, keep=cfg.keep,
+                                          registry=self.telemetry.registry)
+        elif cfg.cache_impl == "lru":
+            self.cache = LRUResultCache(cfg.cache_capacity,
+                                        registry=self.telemetry.registry)
+        else:
+            raise ValueError(f"unknown cache_impl {cfg.cache_impl!r} "
+                             "(expected 'array' or 'lru')")
+        # qid -> canonical key memo shared by submit and submit_slab
+        # (the log is append-only, so memoized keys never go stale).
+        self._key_cache = QueryKeyCache(system.log)
         self.executor = ShardedExecutor(system, n_shards=cfg.n_shards,
                                         keep=cfg.keep, backend=cfg.backend)
         self.executor.tracer = tracer
@@ -362,6 +386,151 @@ class ServeEngine:
             own_span=own_span))
         self.telemetry.observe_gauges(self.queue_depth, self._inflight)
         return rid
+
+    # ----------------------------------------------------- bulk (slabs)
+    def submit_slab(self, qids, level: ServiceLevel = ServiceLevel.FULL,
+                    levels=None, spans=None):
+        """Admit a whole arrival slab; returns ``(rids, statuses)``.
+
+        The batch-granular front door: one refresh + one staleness
+        validation per slab, categories gathered in one fancy-index,
+        canonical keys through the qid memo, cache hits completed as a
+        group (bulk counters, one telemetry slab per (level, category)
+        cell), misses enqueued with ``enqueue_many``.  Unlike
+        :meth:`submit` it never raises for an *individual* arrival —
+        per-request outcomes come back in ``statuses`` (``SLAB_OK`` /
+        ``SLAB_ADMISSION_REJECT`` / ``SLAB_CACHED_ONLY_MISS``) so a
+        caller that pre-registered tickets can reconcile every lane.
+        Systemic failures (stale snapshot/epoch) still raise before any
+        request id is assigned.
+
+        ``spans``, when given, carries one trace context per arrival
+        (cluster tickets); when absent and tracing is on, the whole
+        slab shares ONE "slab" span instead of per-ticket roots — the
+        slab-scoped batching that keeps tracing overhead off the
+        per-request path.  Bit parity with a loop of :meth:`submit`
+        calls on the same starting state is pinned in tier-1 tests
+        (the per-ticket path is the B=1 oracle).
+        """
+        if isinstance(qids, TicketSlab):
+            slab = qids
+        else:
+            slab = TicketSlab.build(self.system.log, qids, level=int(level),
+                                    levels=levels)
+        n = len(slab)
+        lv = slab.levels
+        if n and int(lv.max(initial=0)) >= int(ServiceLevel.SHED):
+            raise ValueError("SHED is not a servable level — the caller "
+                             "sheds instead of submitting")
+        if self.cfg.auto_refresh:
+            self.refresh_policies()
+            self.refresh_index()
+        self.store.validate(self._snapshot.version)
+        if self._index_store is not None:
+            self._index_store.validate(self.index_epoch)
+        slab_span = (self.tracer.span("slab", n=n) if spans is None
+                     else None)
+        t0 = Telemetry.now()
+        rid0 = self._next_id
+        self._next_id += n
+        rids = np.arange(rid0, rid0 + n, dtype=np.int64)
+        statuses = np.zeros(n, np.uint8)
+        version = self._snapshot.version
+        epoch = self.index_epoch
+        key_of = self._key_cache.key
+        cache = self.cache
+        pend0 = self.batcher.pending()
+        limit = self.cfg.admission_limit
+        cached_only = int(ServiceLevel.CACHED_ONLY)
+        hits = []                       # (i, category, entry)
+        pending: List[PendingRequest] = []
+        queued = 0
+        n_rej = 0
+        for i in range(n):
+            qid = int(slab.qids[i])
+            cat = int(slab.categories[i])
+            req_level = int(lv[i])
+            key = key_of(qid, cat)
+            entry = cache.peek((key, version, epoch))
+            if entry is not None and int(entry.level) <= req_level:
+                cache.touch((key, version, epoch))
+                hits.append((i, cat, entry))
+                continue
+            if req_level == cached_only:
+                statuses[i] = SLAB_CACHED_ONLY_MISS
+                continue
+            if pend0 + queued >= limit:
+                statuses[i] = SLAB_ADMISSION_REJECT
+                n_rej += 1
+                continue
+            queued += 1
+            span = spans[i] if spans is not None else None
+            pending.append(PendingRequest(
+                request_id=int(rids[i]), qid=qid, category=cat,
+                cache_key=key, t_submit=t0, level=req_level, span=span,
+                queue_span=span.child("queue", category=cat,
+                                      level=req_level) if span else None,
+                own_span=False))
+        t1 = Telemetry.now()
+        # Hits complete as a group: same responses a scalar loop would
+        # produce (identical doc ids / scores / u — latency is the slab
+        # probe's), telemetry recorded one (level, category) cell at a
+        # time through pre-resolved handles.
+        if hits:
+            groups: Dict[tuple, list] = {}
+            for i, cat, entry in hits:
+                self._complete(ServeResponse(
+                    request_id=int(rids[i]), qid=int(slab.qids[i]),
+                    category=cat, doc_ids=entry.doc_ids,
+                    scores=entry.scores, u=entry.u,
+                    cand_cnt=entry.cand_cnt, cached=True,
+                    latency_s=t1 - t0, policy_version=version,
+                    index_epoch=epoch, level=entry.level))
+                groups.setdefault((int(entry.level), cat),
+                                  []).append(entry.u)
+            for (lvl, cat), us in groups.items():
+                self.telemetry.record_requests(
+                    category=cat, level=lvl,
+                    latencies_s=np.full(len(us), t1 - t0), us=us,
+                    cached=True, t_done=t1)
+        cache.add_stats(hits=len(hits), misses=n - len(hits))
+        if n_rej:
+            self.telemetry.record_rejection(n_rej)
+        if pending:
+            self.batcher.enqueue_many(pending)
+        self.telemetry.observe_gauges(self.queue_depth, self._inflight)
+        if slab_span:
+            slab_span.end(hits=len(hits), queued=queued, rejected=n_rej)
+        return rids, statuses
+
+    def submit_many(self, qids,
+                    level: ServiceLevel = ServiceLevel.FULL,
+                    levels=None) -> List[int]:
+        """Raising wrapper over :meth:`submit_slab` for callers with
+        the per-ticket error contract: any rejected lane raises
+        :class:`AdmissionError`, any CACHED_ONLY miss raises
+        :class:`CacheOnlyMiss`, otherwise every request id is live."""
+        rids, statuses = self.submit_slab(qids, level=level, levels=levels)
+        if statuses.any():
+            n_rej = int((statuses == SLAB_ADMISSION_REJECT).sum())
+            if n_rej:
+                raise AdmissionError(
+                    f"{n_rej} of {len(rids)} arrivals rejected at "
+                    f"admission_limit={self.cfg.admission_limit}")
+            raise CacheOnlyMiss(
+                f"{int((statuses == SLAB_CACHED_ONLY_MISS).sum())} "
+                f"CACHED_ONLY arrivals found no cache entry")
+        return [int(r) for r in rids]
+
+    def serve_many(self, qids,
+                   level: ServiceLevel = ServiceLevel.FULL
+                   ) -> List[ServeResponse]:
+        """Synchronous slab driver: bulk-submit, flush, return
+        responses in submission order (the batched sibling of
+        :meth:`serve`)."""
+        rids = self.submit_many(qids, level=level)
+        self.flush()
+        return [self._completed.pop(r) for r in rids]
 
     # ------------------------------------------------------------- batch
     def _execute_batch(self, mb: MicroBatch) -> None:

@@ -39,6 +39,28 @@ from repro.obs import Counter, MetricsRegistry
 __all__ = ["Telemetry", "pct", "LATENCY_MS_EDGES", "U_EDGES"]
 
 
+class _RequestRecorder:
+    """Pre-resolved instrument handles for one (level, category) cell.
+
+    Hot paths fetch this bundle once (single tuple-keyed dict lookup)
+    and then touch raw instruments — no ``metric_key`` label hashing,
+    no per-histogram cache probes, per request."""
+
+    __slots__ = ("level_counter", "lat_hist", "u_hist", "qwait_hist")
+
+    def __init__(self, registry: MetricsRegistry, level_counter: Counter,
+                 level: int, category: int):
+        self.level_counter = level_counter
+        self.lat_hist = registry.histogram(
+            "serve.latency_ms", LATENCY_MS_EDGES,
+            level=level, category=category)
+        self.u_hist = registry.histogram(
+            "serve.u", U_EDGES, level=level, category=category)
+        self.qwait_hist = registry.histogram(
+            "serve.queue_wait_ms", LATENCY_MS_EDGES,
+            level=level, category=category)
+
+
 def pct(xs, q: float) -> float:
     """Quantile with the empty-input-is-zero policy every serving
     surface (engine summary, cluster stats, benches) shares."""
@@ -75,6 +97,15 @@ class Telemetry:
         self._g_inflight = self.registry.gauge("serve.inflight", agg="sum")
         self._level_counters: Dict[int, Counter] = {}
         self._hists: Dict[tuple, object] = {}
+        # Pre-resolved per-(level, category) handle bundles: one dict
+        # lookup on the hot path instead of three, and no label-dict
+        # hashing per request (satellite of the batched data plane).
+        self._recorders: Dict[tuple, "_RequestRecorder"] = {}
+        # summary() memo: every record_* flips the dirty bit; a clean
+        # summary is a cached-dict copy instead of a full window pass.
+        self._summary_dirty = True
+        self._summary_cache: Optional[Dict[str, float]] = None
+        self._summary_compile_count = -1
 
     # ------------------------------------------------------------- clocks
     @staticmethod
@@ -96,6 +127,17 @@ class Telemetry:
             h = self._hists[key] = self.registry.histogram(
                 name, edges, level=level, category=category)
         return h
+
+    def recorder(self, level: int, category: int) -> _RequestRecorder:
+        """Handle bundle for one (level, category) cell — resolve once
+        at construction / first sight, record through raw instruments
+        thereafter."""
+        key = (level, category)
+        r = self._recorders.get(key)
+        if r is None:
+            r = self._recorders[key] = _RequestRecorder(
+                self.registry, self._level_counter(level), level, category)
+        return r
 
     # --------------------------------------------- legacy attribute views
     @property
@@ -137,13 +179,13 @@ class Telemetry:
                        cached: bool, t_done: float, level: int = 0) -> None:
         category = int(category)
         level = int(level)
+        rec = self.recorder(level, category)
         self._c_requests.inc()
         if cached:
             self._c_cached.inc()
-        self._level_counter(level).inc()
-        self._hist("serve.latency_ms", LATENCY_MS_EDGES,
-                   level, category).record(latency_s * 1e3)
-        self._hist("serve.u", U_EDGES, level, category).record(u)
+        rec.level_counter.inc()
+        rec.lat_hist.record(latency_s * 1e3)
+        rec.u_hist.record(u)
         self.requests.append({
             "category": category,
             "latency_s": float(latency_s),
@@ -152,14 +194,45 @@ class Telemetry:
             "level": level,
             "t_done": float(t_done),
         })
+        self._summary_dirty = True
+
+    def record_requests(self, *, category: int, level: int,
+                        latencies_s, us, cached: bool,
+                        t_done: float) -> None:
+        """Batch form of :meth:`record_request` for one (level,
+        category) group: counters bump by ``n`` and histograms take the
+        whole slab under one lock each, but the sliding window gets the
+        same per-request rows a scalar loop would append."""
+        category = int(category)
+        level = int(level)
+        lat = np.asarray(latencies_s, np.float64).ravel()
+        uarr = np.asarray(us, np.float64).ravel()
+        n = int(lat.size)
+        if n == 0:
+            return
+        rec = self.recorder(level, category)
+        self._c_requests.inc(n)
+        if cached:
+            self._c_cached.inc(n)
+        rec.level_counter.inc(n)
+        rec.lat_hist.record_many(lat * 1e3)
+        rec.u_hist.record_many(uarr)
+        cached = bool(cached)
+        t_done = float(t_done)
+        self.requests.extend(
+            {"category": category, "latency_s": float(lat[i]),
+             "u": int(uarr[i]), "cached": cached, "level": level,
+             "t_done": t_done}
+            for i in range(n))
+        self._summary_dirty = True
 
     def record_queue_wait(self, *, category: int, level: int,
                           wait_s: float) -> None:
         """Admission-to-drain wait — the slice of latency the batcher
         owns, recorded separately so the SLO loop can tell queueing
         pressure from execution cost."""
-        self._hist("serve.queue_wait_ms", LATENCY_MS_EDGES,
-                   int(level), int(category)).record(wait_s * 1e3)
+        self.recorder(int(level), int(category)).qwait_hist.record(
+            wait_s * 1e3)
 
     def record_batch(self, *, category: int, bucket: int, n_real: int,
                      t_inputs_s: float, t_execute_s: float) -> None:
@@ -171,16 +244,34 @@ class Telemetry:
             "t_inputs_s": float(t_inputs_s),
             "t_execute_s": float(t_execute_s),
         })
+        self._summary_dirty = True
 
-    def record_rejection(self) -> None:
-        self._c_rejected.inc()
+    def record_rejection(self, n: int = 1) -> None:
+        self._c_rejected.inc(n)
+        self._summary_dirty = True
 
     def observe_gauges(self, queue_depth: int, inflight: int) -> None:
         self._g_queue_depth.set(int(queue_depth))
         self._g_inflight.set(int(inflight))
+        self._summary_dirty = True
 
     # ------------------------------------------------------------ summary
     def summary(self, compile_count: int = 0) -> Dict[str, float]:
+        """Aggregate view; computed once per dirty window.  Repeated
+        calls between records return a copy of the cached dict instead
+        of re-running the O(window) percentile pass each time."""
+        if (not self._summary_dirty and self._summary_cache is not None
+                and self._summary_compile_count == int(compile_count)):
+            out = dict(self._summary_cache)
+            out["level_counts"] = dict(self._summary_cache["level_counts"])
+            return out
+        out = self._compute_summary(compile_count)
+        self._summary_cache = out
+        self._summary_compile_count = int(compile_count)
+        self._summary_dirty = False
+        return dict(out, level_counts=dict(out["level_counts"]))
+
+    def _compute_summary(self, compile_count: int = 0) -> Dict[str, float]:
         lat = np.array([r["latency_s"] for r in self.requests], np.float64)
         us = np.array([r["u"] for r in self.requests], np.float64)
         cached = np.array([r["cached"] for r in self.requests], bool)

@@ -1,0 +1,615 @@
+"""Batched hot-path data plane: slab/per-ticket bit parity (engine,
+admission, cluster), the array-backed cache, ring batch transfer
+edges, block codecs, bounded parent-side tables, telemetry batching,
+and the bench-diff regression gate."""
+import threading
+import time
+
+import numpy as np
+import pytest
+
+from repro.data.querylog import CAT1, CAT2
+from repro.policies import PolicyStore, TabularQPolicy
+from repro.serving import (
+    AdmissionError, ArrayResultCache, CacheOnlyMiss, EngineConfig,
+    LRUResultCache, SLAB_ADMISSION_REJECT, SLAB_CACHED_ONLY_MISS,
+    ServeEngine, ServiceLevel, TicketSlab,
+)
+from repro.serving.array_cache import CacheEntry
+
+
+@pytest.fixture(scope="module")
+def trained(tiny_system):
+    policies = {cat: TabularQPolicy(tiny_system.train_policy(
+        cat, iters=10, batch=16)[0]) for cat in (CAT1, CAT2)}
+    return tiny_system, policies
+
+
+def _entry(seed: int, keep: int = 8) -> CacheEntry:
+    rng = np.random.default_rng(seed)
+    return CacheEntry(doc_ids=rng.integers(0, 1000, keep).astype(np.int32),
+                      scores=rng.random(keep).astype(np.float32),
+                      u=int(seed) * 3 + 1, cand_cnt=int(seed) + 10,
+                      level=ServiceLevel.FULL)
+
+
+# ------------------------------------------------------- array cache unit
+class TestArrayResultCache:
+    def test_get_put_peek_touch(self):
+        c = ArrayResultCache(capacity=16, keep=8)
+        e = _entry(1)
+        c.put(("k", 1, 0), e)
+        assert c.contains(("k", 1, 0))
+        got = c.peek(("k", 1, 0))            # no side effects
+        assert c.hits == 0 and c.misses == 0
+        np.testing.assert_array_equal(got.doc_ids, e.doc_ids)
+        np.testing.assert_array_equal(got.scores, e.scores)
+        assert (got.u, got.cand_cnt, got.level) == (e.u, e.cand_cnt, e.level)
+        assert isinstance(got.level, ServiceLevel)
+        got2 = c.get(("k", 1, 0))
+        assert c.hits == 1
+        np.testing.assert_array_equal(got2.doc_ids, e.doc_ids)
+        assert c.get(("absent", 1, 0)) is None
+        assert c.misses == 1
+        c.touch(("k", 1, 0))                  # ref bit only, no counters
+        assert c.hits == 1 and c.misses == 1
+        assert len(c) == 1
+
+    def test_returned_arrays_are_copies(self):
+        c = ArrayResultCache(capacity=4, keep=4)
+        c.put("a", _entry(2, keep=4))
+        got = c.get("a")
+        got.doc_ids[:] = -7
+        np.testing.assert_array_equal(
+            c.get("a").doc_ids, _entry(2, keep=4).doc_ids)
+
+    def test_update_in_place(self):
+        c = ArrayResultCache(capacity=4, keep=4)
+        c.put("a", _entry(3, keep=4))
+        c.put("a", _entry(4, keep=4))
+        assert len(c) == 1
+        assert c.peek("a").u == _entry(4).u
+
+    def test_clock_eviction_bounded(self):
+        c = ArrayResultCache(capacity=8, keep=4)
+        for i in range(50):
+            c.put(("k", i), _entry(i, keep=4))
+        assert len(c) == 8
+        assert c.evictions == 42
+        # recently-referenced entries get a second chance
+        c2 = ArrayResultCache(capacity=4, keep=4)
+        for i in range(4):
+            c2.put(("k", i), _entry(i, keep=4))
+        assert c2.get(("k", 3)) is not None   # ref bit set
+        c2.put(("k", 99), _entry(99, keep=4))
+        assert c2.contains(("k", 99))
+        assert len(c2) == 4
+
+    def test_tombstone_rebuild_keeps_serving(self):
+        c = ArrayResultCache(capacity=8, keep=4)
+        for wave in range(40):                # forces rebuilds via churn
+            for i in range(8):
+                c.put(("w", wave, i), _entry(i, keep=4))
+        live = [k for k in [("w", 39, i) for i in range(8)]
+                if c.contains(k)]
+        assert len(live) == 8                 # the newest wave survived
+        for k in live:
+            assert c.peek(k) is not None
+
+    def test_keep_growth(self):
+        c = ArrayResultCache(capacity=4, keep=2)
+        c.put("small", _entry(1, keep=2))
+        c.put("big", _entry(2, keep=16))      # wider than allocated
+        np.testing.assert_array_equal(
+            c.peek("big").doc_ids, _entry(2, keep=16).doc_ids)
+        np.testing.assert_array_equal(
+            c.peek("small").doc_ids, _entry(1, keep=2).doc_ids)
+
+    def test_clear_keeps_counters(self):
+        c = ArrayResultCache(capacity=4, keep=4)
+        c.put("a", _entry(1, keep=4))
+        c.get("a")
+        c.get("b")
+        c.clear()
+        assert len(c) == 0 and not c.contains("a")
+        assert c.hits == 1 and c.misses == 1
+        c.put("a", _entry(5, keep=4))         # still usable
+        assert c.peek("a").u == _entry(5).u
+
+    def test_stats_protocol_matches_lru(self):
+        a = ArrayResultCache(capacity=8, keep=4)
+        l = LRUResultCache(capacity=8)
+        for cache in (a, l):
+            cache.put("x", _entry(1, keep=4))
+            cache.get("x")
+            cache.get("missing")
+            cache.record_miss()
+            cache.add_stats(hits=3, misses=2)
+        assert a.stats() == l.stats()
+        assert a.hit_rate == l.hit_rate
+
+    def test_lru_vs_array_trace_parity(self):
+        """Same access trace, capacity large enough that no eviction
+        happens: hit/miss accounting and every returned entry match."""
+        rng = np.random.default_rng(0)
+        a = ArrayResultCache(capacity=256, keep=4)
+        l = LRUResultCache(capacity=256)
+        keys = [("k", int(i)) for i in range(64)]
+        for op in rng.integers(0, 3, size=800):
+            k = keys[int(rng.integers(0, len(keys)))]
+            if op == 0:
+                ea, el = a.get(k), l.get(k)
+            elif op == 1:
+                ea, el = a.peek(k), l.peek(k)
+            else:
+                e = _entry(int(rng.integers(0, 100)), keep=4)
+                a.put(k, e)
+                l.put(k, e)
+                continue
+            assert (ea is None) == (el is None)
+            if ea is not None:
+                np.testing.assert_array_equal(ea.doc_ids, el.doc_ids)
+                assert ea.u == el.u
+        assert a.stats()["hits"] == l.stats()["hits"]
+        assert a.stats()["misses"] == l.stats()["misses"]
+
+
+# ------------------------------------------------------------ ticket slab
+def test_ticket_slab_build(tiny_system):
+    log = tiny_system.log
+    slab = TicketSlab.build(log, [3, 5, 8], level=1, epoch=2)
+    assert len(slab) == 3
+    np.testing.assert_array_equal(slab.qids, [3, 5, 8])
+    np.testing.assert_array_equal(
+        slab.categories, np.asarray(log.category)[[3, 5, 8]])
+    assert (slab.levels == 1).all() and slab.epoch == 2
+    with pytest.raises(ValueError):
+        TicketSlab.build(log, [1, 2], levels=[0])      # size mismatch
+
+
+def test_query_key_cache(tiny_system):
+    from repro.serving.cache import canonical_query_key
+    from repro.serving.slab import QueryKeyCache
+
+    kc = QueryKeyCache(tiny_system.log, capacity=4)
+    for qid in (0, 1, 2, 0, 1):
+        cat = int(tiny_system.log.category[qid])
+        assert kc.key(qid) == canonical_query_key(
+            tiny_system.log.terms[qid], cat)
+    for qid in range(10):                     # overflow wholesale-clears
+        kc.key(qid)
+    assert kc.key(0) == canonical_query_key(
+        tiny_system.log.terms[0], int(tiny_system.log.category[0]))
+
+
+# ----------------------------------------------------- engine slab parity
+def test_engine_slab_vs_loop_bit_parity(trained):
+    """submit_slab == a loop of submit() on identical fresh engines:
+    every response field, both cold (miss) and hot (hit) rounds."""
+    sys_, policies = trained
+    cfg = EngineConfig(min_bucket=8, max_bucket=16, cache_capacity=64)
+    e_slab = ServeEngine(sys_, policies, cfg)
+    e_loop = ServeEngine(sys_, policies,
+                         EngineConfig(min_bucket=8, max_bucket=16,
+                                      cache_capacity=64, cache_impl="lru"))
+    qids = list(range(24)) + list(range(12))  # repeats inside one slab
+    for _round in range(2):
+        rs = e_slab.serve_many(qids)
+        rl = e_loop.serve(qids)
+        for a, b in zip(rs, rl):
+            assert a.qid == b.qid and a.cached == b.cached
+            assert a.level == b.level and a.u == b.u
+            assert a.cand_cnt == b.cand_cnt
+            assert a.policy_version == b.policy_version
+            assert a.index_epoch == b.index_epoch
+            np.testing.assert_array_equal(a.doc_ids, b.doc_ids)
+            np.testing.assert_array_equal(a.scores, b.scores)
+    assert e_slab.cache.stats()["hits"] == e_loop.cache.stats()["hits"]
+    assert e_slab.cache.stats()["misses"] == e_loop.cache.stats()["misses"]
+    s, l = e_slab.summary(), e_loop.summary()
+    for k in ("n_requests", "cache_hit_rate", "mean_u", "p99_u"):
+        assert s[k] == pytest.approx(l[k]), k
+
+
+def test_engine_slab_statuses(trained):
+    sys_, policies = trained
+    engine = ServeEngine(sys_, policies, EngineConfig(
+        min_bucket=8, max_bucket=8, cache_capacity=64, admission_limit=4))
+    rids, statuses = engine.submit_slab(list(range(10)))
+    assert (statuses[:4] == 0).all()
+    assert (statuses[4:] == SLAB_ADMISSION_REJECT).all()
+    engine.flush()
+    for r in rids[:4]:
+        assert engine.take_response(int(r)) is not None
+    for r in rids[4:]:
+        assert engine.take_response(int(r)) is None
+    # CACHED_ONLY misses report, hits serve
+    rids2, st2 = engine.submit_slab([0, 1, 8, 9],
+                                    level=ServiceLevel.CACHED_ONLY)
+    assert (st2[:2] == 0).all()               # served above, still cached
+    assert (st2[2:] == SLAB_CACHED_ONLY_MISS).all()
+    for r in rids2[:2]:
+        assert engine.take_response(int(r)).cached
+    with pytest.raises(AdmissionError):
+        engine.submit_many(list(range(10, 22)))
+    with pytest.raises(CacheOnlyMiss):
+        engine.submit_many([8, 9], level=ServiceLevel.CACHED_ONLY)
+
+
+def test_engine_cache_impl_validation(trained):
+    sys_, policies = trained
+    assert isinstance(
+        ServeEngine(sys_, policies, EngineConfig()).cache, ArrayResultCache)
+    assert isinstance(
+        ServeEngine(sys_, policies, EngineConfig(cache_impl="lru")).cache,
+        LRUResultCache)
+    with pytest.raises(ValueError):
+        ServeEngine(sys_, policies, EngineConfig(cache_impl="nope"))
+
+
+# ------------------------------------------------------- admission parity
+def test_decide_many_matches_decide(tiny_system):
+    from repro.cluster.admission import AdmissionController, UCostEstimator
+
+    est1, est2 = UCostEstimator(tiny_system), UCostEstimator(tiny_system)
+    rng = np.random.default_rng(5)
+    for q in range(96):
+        u = float(rng.integers(20, 400))
+        est1.observe(q, u)
+        est2.observe(q, u)
+    a1 = AdmissionController(est1, u_inflight_budget=900.0)
+    a2 = AdmissionController(est2, u_inflight_budget=900.0)
+    qids = list(rng.integers(0, tiny_system.log.n_queries, size=64))
+    cache_av = [bool(rng.random() < 0.3) for _ in qids]
+    shal_av = [bool(rng.random() < 0.7) for _ in qids]
+    levels, reserves, est_full = a2.decide_many(
+        qids, cache_available=cache_av, shallow_available=shal_av)
+    saw = set()
+    for i, q in enumerate(qids):
+        adm = a1.decide(int(q), cache_available=cache_av[i],
+                        shallow_available=shal_av[i])
+        assert int(levels[i]) == int(adm.level)
+        assert reserves[i] == adm.reserved_u   # bitwise float equality
+        assert est_full[i] == adm.est_u
+        saw.add(int(levels[i]))
+    assert len(saw) > 1                        # the ladder actually walked
+    assert a1.reserved_u == a2.reserved_u
+    assert a1.level_counts == a2.level_counts
+    assert (a1.admitted, a1.shed) == (a2.admitted, a2.shed)
+
+
+# ------------------------------------------------------- cluster parity
+def _serve_rounds(sys_, policies, backend, many, rounds=2, n=32,
+                  n_replicas=2):
+    from repro.cluster import ClusterConfig, ReplicaSet
+
+    store = PolicyStore()
+    store.publish(policies)
+    cluster = ReplicaSet(sys_, store, ClusterConfig(
+        n_replicas=n_replicas, backend=backend),
+        EngineConfig(min_bucket=8, max_bucket=16, cache_capacity=256))
+    out = []
+    with cluster:
+        if backend == "process":
+            cluster.warmup()
+        for _ in range(rounds):
+            qids = list(range(n))
+            out.append(cluster.serve_many(qids, timeout_s=300.0)
+                       if many else cluster.serve(qids, timeout_s=300.0))
+    return out
+
+
+def test_cluster_thread_slab_parity(trained):
+    """serve_many == serve on the thread backend: response content is
+    replica-independent, so doc ids / scores / u / cand_cnt must match
+    lane for lane (placement and cached flags may differ)."""
+    from repro.cluster.admission import Shed
+
+    sys_, policies = trained
+    many = _serve_rounds(sys_, policies, "thread", True)
+    loop = _serve_rounds(sys_, policies, "thread", False)
+    for rm, rl in zip(many, loop):
+        assert len(rm) == len(rl)
+        for a, b in zip(rm, rl):
+            assert not isinstance(a, Shed) and not isinstance(b, Shed)
+            assert a.qid == b.qid and a.u == b.u
+            assert a.cand_cnt == b.cand_cnt
+            np.testing.assert_array_equal(a.doc_ids, b.doc_ids)
+            np.testing.assert_array_equal(a.scores, b.scores)
+
+
+def test_cluster_process_slab_parity(trained):
+    """The slab front door through worker processes: same strong
+    fields as the thread oracle, zero sheds, hot round served from
+    worker caches."""
+    from repro.cluster.admission import Shed
+
+    sys_, policies = trained
+    proc = _serve_rounds(sys_, policies, "process", True, n=24)
+    loop = _serve_rounds(sys_, policies, "thread", False, n=24)
+    for rm, rl in zip(proc, loop):
+        for a, b in zip(rm, rl):
+            assert not isinstance(a, Shed)
+            assert a.qid == b.qid and a.u == b.u
+            assert a.cand_cnt == b.cand_cnt
+            np.testing.assert_array_equal(a.doc_ids, b.doc_ids)
+            np.testing.assert_array_equal(a.scores, b.scores)
+    assert all(r.cached for r in proc[1])      # second round is hot
+
+
+# ----------------------------------------------------------- ring batches
+class TestRingBatch:
+    def test_roundtrip_and_wraparound_mid_batch(self):
+        from repro.cluster.proc.ring import ShmRing
+
+        ring = ShmRing.create(8, 64)
+        recs = np.arange(5 * 32, dtype=np.uint8).reshape(5, 32)
+        assert ring.try_push_records(recs) == 5
+        np.testing.assert_array_equal(ring.try_pop_records(16, 32), recs)
+        # head=tail=5: a 5-record batch must split at the lap boundary
+        # (3 slots to the wrap), never tear a record across it.
+        k = ring.try_push_records(recs)
+        assert k == 3
+        got = ring.try_pop_records(16, 32)
+        np.testing.assert_array_equal(got, recs[:3])
+        k2 = ring.try_push_records(recs[3:])
+        assert k2 == 2
+        np.testing.assert_array_equal(ring.try_pop_records(16, 32), recs[3:])
+        ring.close()
+
+    def test_batch_larger_than_free_slots_splits_whole(self):
+        from repro.cluster.proc.ring import ShmRing
+
+        ring = ShmRing.create(8, 40)
+        big = (np.arange(40, dtype=np.uint8)[None, :]
+               + np.arange(30, dtype=np.uint8)[:, None])
+        chunks = []
+
+        def consume():
+            while sum(c.shape[0] for c in chunks) < 30:
+                got = ring.try_pop_records(4, 40)
+                if got.shape[0]:
+                    chunks.append(got)
+
+        t = threading.Thread(target=consume)
+        t.start()
+        ring.push_records(big, deadline_s=time.monotonic() + 30.0)
+        t.join(timeout=30.0)
+        assert not t.is_alive()
+        np.testing.assert_array_equal(np.concatenate(chunks), big)
+        ring.close()
+
+    def test_oversized_record_in_batch_rejected_cleanly(self):
+        from repro.cluster.proc.ring import ShmRing
+
+        ring = ShmRing.create(8, 32)
+        with pytest.raises(ValueError):
+            ring.try_push_records(np.zeros((2, 100), np.uint8))
+        with pytest.raises(ValueError):
+            ring.try_push_many([b"ok", b"x" * 100])
+        with pytest.raises(ValueError):
+            ring.push_many([b"ok", b"x" * 100])
+        # the sequence protocol survived: nothing was published
+        assert ring.occupancy() == 0
+        ring.push(b"alive")
+        assert ring.pop(timeout_s=1.0) == b"alive"
+        ring.close()
+
+    def test_variable_length_batch_pop(self):
+        from repro.cluster.proc.ring import ShmRing
+
+        ring = ShmRing.create(8, 32)
+        ring.push_many([b"a", b"bb" * 8, b"c" * 3])
+        assert ring.try_pop_batch() == [b"a", b"bb" * 8, b"c" * 3]
+        # fixed-size pop refuses mixed lengths instead of mis-slicing
+        ring.push_many([b"a" * 8, b"b" * 16])
+        with pytest.raises(ValueError):
+            ring.try_pop_records(8, 8)
+        ring.close()
+
+    def test_batched_park_wake_accounting(self):
+        from repro.cluster.proc.ring import ShmRing
+
+        ring = ShmRing.create(16, 32)
+        recs = np.zeros((8, 32), np.uint8)
+        got = []
+
+        def consume():
+            got.extend(ring.pop_batch(limit=16, timeout_s=30.0))
+
+        t = threading.Thread(target=consume)
+        t.start()
+        time.sleep(0.15)                      # force the consumer to park
+        ring.push_records(recs)
+        t.join(timeout=30.0)
+        stats = ring.park_stats()
+        assert len(got) == 8
+        # ONE park episode and ONE wake for the whole batch — not 8.
+        assert stats["consumer_parks"] == 1
+        assert stats["wakes"] == 1
+        ring.close()
+
+
+# ----------------------------------------------------------- block codec
+def test_request_block_codec_parity():
+    from repro.cluster.proc.messages import (
+        REQUEST_BYTES, decode_request, decode_request_block,
+        encode_request, encode_request_block)
+
+    tids = [7, 8, 9]
+    qids = [100, -1, 3]
+    levels = [0, 1, 2]
+    cats = [1, 2, 1]
+    roots = [0, 0xDEAD, 0]
+    block = encode_request_block(tids, qids, levels, cats, roots)
+    assert block.shape == (3, REQUEST_BYTES)
+    for i in range(3):
+        scalar = encode_request(tids[i], qids[i], ServiceLevel(levels[i]),
+                                cats[i], roots[i])
+        assert bytes(block[i]) == scalar      # byte-for-byte the struct
+        assert decode_request(bytes(block[i])) == (
+            tids[i], qids[i], ServiceLevel(levels[i]), cats[i], roots[i])
+    recs = decode_request_block(block)
+    np.testing.assert_array_equal(recs["ticket"], tids)
+    np.testing.assert_array_equal(recs["qid"], qids)
+    np.testing.assert_array_equal(recs["level"], levels)
+    np.testing.assert_array_equal(recs["category"], cats)
+    np.testing.assert_array_equal(recs["trace_root"], roots)
+
+
+# ------------------------------------------------------ bounded tables
+def test_process_replica_mirror_bounded():
+    from repro.cluster.proc.replica import ProcessReplica
+
+    r = ProcessReplica(0, spec_factory=None, keep=8,
+                       cache_mirror_capacity=16)
+    for i in range(100):
+        with r._mu:
+            r._mirror_record(("key", i), policy_version=1, index_epoch=0)
+    assert len(r._cache_mirror) == 16
+    # LRU: the newest keys survive
+    assert ("key", 99) in r._cache_mirror
+    assert ("key", 0) not in r._cache_mirror
+    with r._mu:
+        r._policy_version, r._index_epoch = 1, 0
+    assert r.cache_has(("key", 99))
+    assert not r.cache_has(("key", 0))
+
+
+def test_cluster_key_owner_bounded_and_fallback(trained):
+    from repro.cluster import ClusterConfig, ReplicaSet
+
+    sys_, policies = trained
+    store = PolicyStore()
+    store.publish(policies)
+    cluster = ReplicaSet(sys_, store, ClusterConfig(
+        n_replicas=2, backend="thread", affinity_table=8),
+        EngineConfig(min_bucket=8, max_bucket=16, cache_capacity=256))
+    with cluster:
+        cluster.serve_many(list(range(32)))
+        assert len(cluster._key_owner) <= 8
+        # Routing fallback: an owner whose cache no longer holds the
+        # key must NOT capture the request — wipe replica caches and
+        # re-serve; every ticket still completes.
+        for r in cluster.replicas:
+            r.engine.cache.clear()
+        res = cluster.serve_many(list(range(32)))
+        assert len(res) == 32
+        assert not any(getattr(x, "cached", False) for x in res)
+
+
+# ------------------------------------------------- telemetry batch paths
+def test_histogram_record_many_parity():
+    from repro.obs.metrics import MetricsRegistry
+
+    reg = MetricsRegistry()
+    h1 = reg.histogram("a", (1.0, 5.0, 25.0))
+    h2 = reg.histogram("b", (1.0, 5.0, 25.0))
+    rng = np.random.default_rng(0)
+    vals = rng.random(500) * 50.0
+    for v in vals:
+        h1.record(float(v))
+    h2.record_many(vals)
+    s1, s2 = h1.snapshot(), h2.snapshot()
+    assert s1["counts"] == s2["counts"]
+    assert (s1["min"], s1["max"]) == (s2["min"], s2["max"])
+    assert s1["count"] == s2["count"]
+    assert s1["sum"] == pytest.approx(s2["sum"])
+
+
+def test_summary_memoized(trained):
+    sys_, policies = trained
+    engine = ServeEngine(sys_, policies, EngineConfig(
+        min_bucket=8, max_bucket=8, cache_capacity=16))
+    calls = []
+    orig = engine.telemetry._compute_summary
+
+    def counting(compile_count=0):
+        calls.append(1)
+        return orig(compile_count)
+
+    engine.telemetry._compute_summary = counting
+    engine.serve(list(range(4)))
+    engine.summary()
+    n = len(calls)
+    assert n >= 1
+    engine.summary()                          # clean → cached
+    engine.summary()
+    assert len(calls) == n
+    engine.serve([50])                        # dirty → recompute
+    engine.summary()
+    assert len(calls) == n + 1
+    # a different compile_count must not serve the stale row
+    s = engine.telemetry.summary(compile_count=123)
+    assert s["compile_count"] == 123
+
+
+# ------------------------------------------------------------ bench gate
+class TestBenchCompare:
+    def _row(self, ratio=1.5, retraces=0):
+        return {
+            "hotpath_bench": {
+                "name": "hotpath_bench", "metrics": {
+                    "engine_qps_ratio_b64": ratio,
+                    "thread_qps_ratio_b64": ratio,
+                    "process_qps_ratio_b32": ratio,
+                }},
+            "serve_bench": {
+                "name": "serve_bench", "metrics": {
+                    "engine_steady_state_retraces": retraces,
+                    "speedup": 3.0,
+                    "obs": {"qps_penalty_frac": 0.01},
+                    "proc_obs": {"qps_penalty_frac": 0.02},
+                }},
+        }
+
+    def test_clean_rows_pass(self):
+        from tools.bench_compare import compare_row
+
+        rows = self._row()
+        for name, row in rows.items():
+            assert compare_row(name, row, row) == []
+
+    def test_injected_regression_fails(self):
+        from tools.bench_compare import compare_row
+
+        bad = self._row(ratio=0.6)["hotpath_bench"]
+        errs = compare_row("hotpath_bench", bad, None)
+        assert any("thread_qps_ratio_b64" in e for e in errs)
+        bad2 = self._row(retraces=4)["serve_bench"]
+        errs2 = compare_row("serve_bench", bad2, None)
+        assert any("steady_state_retraces" in e for e in errs2)
+
+    def test_missing_local_row_skips(self):
+        from tools.bench_compare import compare_row
+
+        assert compare_row("hotpath_bench", None,
+                           self._row()["hotpath_bench"]) == []
+
+    def test_schema_drift_detected(self):
+        from tools.bench_compare import compare_row
+
+        cur = self._row()["serve_bench"]
+        base = self._row()["serve_bench"]
+        base["metrics"]["extra_metric"] = 1.0
+        errs = compare_row("serve_bench", cur, base)
+        assert any("extra_metric" in e for e in errs)
+
+    def test_cli_end_to_end(self, tmp_path):
+        import json
+
+        from tools.bench_compare import main
+
+        results = tmp_path / "results"
+        baselines = results / "baselines"
+        results.mkdir()
+        baselines.mkdir()
+        rows = self._row()
+        for name, row in rows.items():
+            (results / f"{name}.json").write_text(json.dumps(row))
+            (baselines / f"{name}.json").write_text(json.dumps(row))
+        argv = ["--results", str(results), "--baselines", str(baselines)]
+        assert main(argv) == 0
+        bad = self._row(ratio=0.5)["hotpath_bench"]
+        (results / "hotpath_bench.json").write_text(json.dumps(bad))
+        assert main(argv) == 1

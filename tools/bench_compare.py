@@ -1,0 +1,166 @@
+"""Perf-regression gate over the shared ``results/*.json`` schema.
+
+``results/`` holds the latest local run of every benchmark entrypoint
+(benchmarks/_results.py); ``results/baselines/`` holds the committed
+reference rows.  This tool turns the pair into a CI gate:
+
+- **invariant rules** — coarse, machine-independent predicates on the
+  CURRENT row (the slab front door must not serve slower than the
+  per-ticket path; steady-state retraces must be zero; the obs plane
+  must stay under its 5% QPS budget).  Wall-clock absolutes are NOT
+  gated: CI runners and dev laptops differ by 10x and every row stamps
+  ``n_cpus`` for exactly that reason.
+- **schema drift** — every metric key the committed baseline row has
+  must still exist in the current row (a silently dropped metric is a
+  regression in coverage, not a win).
+
+Benchmarks with a baseline but no fresh local row are skipped (CI only
+re-runs the fast subset), so the gate never fails on coverage it did
+not ask for.
+
+Usage::
+
+    python tools/bench_compare.py                 # gate, exit 1 on fail
+    python tools/bench_compare.py --results results --baselines results/baselines
+    make bench-diff
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import json
+import sys
+from pathlib import Path
+from typing import List, Optional
+
+
+@dataclasses.dataclass(frozen=True)
+class Rule:
+    """One invariant over a dotted metric path of a result row."""
+    path: str                          # e.g. "metrics.thread_qps_ratio_b64"
+    min: Optional[float] = None
+    max: Optional[float] = None
+    required: bool = True              # missing path is itself a violation?
+
+    def check(self, row: dict) -> Optional[str]:
+        v = lookup(row, self.path)
+        if v is None:
+            if self.required:
+                return f"{self.path}: metric missing"
+            return None
+        if not isinstance(v, (int, float)) or isinstance(v, bool):
+            return f"{self.path}: not numeric ({v!r})"
+        if self.min is not None and v < self.min:
+            return f"{self.path}: {v:.4f} < min {self.min:.4f}"
+        if self.max is not None and v > self.max:
+            return f"{self.path}: {v:.4f} > max {self.max:.4f}"
+        return None
+
+
+def lookup(row: dict, dotted: str):
+    """Walk a dotted path through nested dicts; None when absent."""
+    node = row
+    for part in dotted.split("."):
+        if not isinstance(node, dict) or part not in node:
+            return None
+        node = node[part]
+    return node
+
+
+def metric_paths(node, prefix: str = "metrics") -> List[str]:
+    """Flatten a row's metrics tree into dotted leaf paths."""
+    out = []
+    for k, v in node.items():
+        p = f"{prefix}.{k}"
+        if isinstance(v, dict):
+            out.extend(metric_paths(v, p))
+        else:
+            out.append(p)
+    return out
+
+
+#: The coarse gates.  Ratios compare two numbers from the SAME run on
+#: the SAME machine, so they hold anywhere; absolutes are deliberately
+#: absent.  serve_bench's obs penalties are also hard-asserted inside
+#: the bench — repeating them here keeps the gate meaningful when the
+#: committed row predates a code change.
+RULES = {
+    "hotpath_bench": [
+        Rule("metrics.engine_qps_ratio_b64", min=1.0),
+        Rule("metrics.thread_qps_ratio_b64", min=1.0),
+        Rule("metrics.process_qps_ratio_b32", min=1.0),
+    ],
+    "serve_bench": [
+        Rule("metrics.engine_steady_state_retraces", max=0.0),
+        Rule("metrics.speedup", min=1.0),
+        Rule("metrics.obs.qps_penalty_frac", max=0.05),
+        Rule("metrics.proc_obs.qps_penalty_frac", max=0.05),
+    ],
+    "cluster_bench": [],
+    "index_bench": [],
+    "kernel_bench": [],
+}
+
+
+def compare_row(name: str, current: Optional[dict],
+                baseline: Optional[dict]) -> List[str]:
+    """All violations for one benchmark.  ``current is None`` (bench
+    not re-run locally) is a skip, not a failure."""
+    if current is None:
+        return []
+    out = []
+    for rule in RULES.get(name, []):
+        err = rule.check(current)
+        if err is not None:
+            out.append(f"{name}: {err}")
+    if baseline is not None:
+        have = set(metric_paths(current.get("metrics", {})))
+        for path in metric_paths(baseline.get("metrics", {})):
+            if path not in have:
+                out.append(f"{name}: {path} present in baseline but "
+                           "missing from the current row")
+    return out
+
+
+def load_row(path: Path) -> Optional[dict]:
+    if not path.exists():
+        return None
+    return json.loads(path.read_text())
+
+
+def run(results_dir: Path, baselines_dir: Path) -> List[str]:
+    names = set(RULES)
+    if baselines_dir.exists():
+        names |= {p.stem for p in baselines_dir.glob("*.json")}
+    violations = []
+    for name in sorted(names):
+        current = load_row(results_dir / f"{name}.json")
+        baseline = load_row(baselines_dir / f"{name}.json")
+        if current is None:
+            status = "skip (no local row)"
+        else:
+            errs = compare_row(name, current, baseline)
+            violations.extend(errs)
+            status = f"FAIL ({len(errs)})" if errs else "ok"
+        print(f"bench-diff  {name:<16} {status}")
+    return violations
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--results", default="results", type=Path)
+    ap.add_argument("--baselines", default=Path("results") / "baselines",
+                    type=Path)
+    a = ap.parse_args(argv)
+    violations = run(a.results, a.baselines)
+    if violations:
+        print("\nbench-diff violations:", file=sys.stderr)
+        for v in violations:
+            print(f"  - {v}", file=sys.stderr)
+        return 1
+    print("bench-diff: all gates passed")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())
